@@ -1,0 +1,174 @@
+"""Analytic FLOP/byte cost model per (arch x shape), used for the roofline
+compute and memory terms.
+
+Rationale (EXPERIMENTS.md §Roofline): XLA's cost_analysis() counts while-
+loop bodies ONCE, so any scan-over-layers program under-reports flops and
+bytes by ~the layer count. Rather than unrolling 94-layer models for the
+dry-run (compile-time explosion), we use exact analytic matmul counts —
+the same accounting used for MFU in PaLM/MaxText — and keep the measured
+cost_analysis values as recorded lower bounds. Collective bytes come from
+the HLO parse with the scan trip-count correction (entry + L x body).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs import get_config
+from repro.models.config import ArchConfig, ShapeConfig, shape_by_name
+from repro.models.model import window_schedule
+
+
+def _attn_flops(cfg: ArchConfig, B: int, S: int, ctx_fn) -> float:
+    """Projections + score/value matmuls. ctx_fn(window) -> avg context."""
+    d, H, Hk, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    proj = 2.0 * B * S * d * (H * Dh + 2 * Hk * Dh + H * Dh)
+    sc = 0.0
+    for w in window_schedule(cfg):
+        ctx = ctx_fn(int(w))
+        sc += 2.0 * B * S * ctx * H * Dh * 2        # qk^T and pV
+    # proj applies per layer; sc already summed over layers
+    return proj * cfg.n_layers + sc
+
+
+def _ffn_flops(cfg: ArchConfig, B: int, S: int) -> float:
+    d, ff = cfg.d_model, cfg.d_ff
+    if cfg.moe:
+        per_tok = (2.0 * d * cfg.moe.n_experts                    # router
+                   + cfg.moe.top_k * 3 * 2.0 * d * ff)            # experts
+    elif cfg.enc_dec:
+        per_tok = 2 * 2.0 * d * ff                                # GELU MLP
+    elif ff:
+        per_tok = 3 * 2.0 * d * ff                                # SwiGLU
+    else:
+        per_tok = 0.0
+    return B * S * per_tok * cfg.n_layers
+
+
+def _recurrent_flops(cfg: ArchConfig, B: int, S: int) -> float:
+    d, H = cfg.d_model, cfg.n_heads
+    if cfg.family == "ssm":
+        Dh = d // H
+        G = cfg.n_layers // (cfg.slstm_every or cfg.n_layers)
+        n_m = cfg.n_layers - G
+        # mLSTM: upproj 2d, qkv 3 d->d, down d->d, gates; chunk math
+        m_proj = 2.0 * B * S * d * (2 * d + 3 * d + d + 2 * H)
+        L = 256
+        m_scan = B * S * (4.0 * H * Dh * Dh / 1 + 4.0 * L * H * Dh)
+        s_proj = 2.0 * B * S * d * (4 * d + d)
+        s_rec = 2.0 * B * S * H * Dh * 4 * Dh
+        return n_m * (m_proj + m_scan) + G * (s_proj + s_rec)
+    if cfg.family == "hybrid":
+        N, Dh = cfg.ssm_state, cfg.head_dim
+        proj = 2.0 * B * S * d * (H * Dh + H + 2 * H * N)
+        scan = 6.0 * B * S * H * N * Dh
+        return cfg.n_layers * (proj + scan)
+    return 0.0
+
+
+def _unembed_flops(cfg: ArchConfig, B: int, S: int) -> float:
+    return 2.0 * B * S * cfg.d_model * cfg.vocab
+
+
+def step_flops(arch: str, shape_name: str) -> float:
+    """Total (all-chip) flops for one step of this cell's program."""
+    cfg = get_config(arch)
+    shape = shape_by_name(shape_name)
+    B = shape.global_batch
+
+    if shape.kind in ("train", "prefill"):
+        S = shape.seq_len
+        if cfg.n_img_tokens:
+            S = shape.seq_len            # image tokens included in S
+        if cfg.family in ("ssm",):
+            core = _recurrent_flops(cfg, B, S)
+        elif cfg.family == "hybrid":
+            ctx = lambda w: min(w, S) / 2 if w < (1 << 29) else S / 2
+            core = (_attn_flops(cfg, B, S, ctx)
+                    + _ffn_flops(cfg, B, S) + _recurrent_flops(cfg, B, S))
+        elif cfg.enc_dec:
+            Te = cfg.enc_positions
+            enc = (_attn_flops_dec(cfg, B, Te, Te, cfg.n_enc_layers,
+                                   causal=False)
+                   + _ffn_flops_n(cfg, B, Te, cfg.n_enc_layers))
+            dec = (_attn_flops_dec(cfg, B, S, S / 2, cfg.n_layers)
+                   + _cross_flops(cfg, B, S, Te)
+                   + _ffn_flops_n(cfg, B, S, cfg.n_layers))
+            core = enc + dec
+        else:
+            ctx = lambda w: min(w, S / 2) if w < (1 << 29) else S / 2
+            core = _attn_flops(cfg, B, S, ctx) + _ffn_flops(cfg, B, S)
+        fwd = core + _unembed_flops(cfg, B, S if shape.kind == "train" else 1)
+        return 3.0 * fwd if shape.kind == "train" else fwd
+
+    # decode: one token against a T-long context
+    T = shape.seq_len
+    S = 1
+    if cfg.family == "ssm":
+        core = _recurrent_flops(cfg, B, S)
+    elif cfg.family == "hybrid":
+        ctx = lambda w: min(w, T) if w < (1 << 29) else T
+        core = (_attn_flops(cfg, B, S, ctx) + _ffn_flops(cfg, B, S)
+                + _recurrent_flops(cfg, B, S))
+    elif cfg.enc_dec:
+        core = (_attn_flops_dec(cfg, B, S, T, cfg.n_layers)
+                + _cross_flops(cfg, B, S, cfg.enc_positions)
+                + _ffn_flops_n(cfg, B, S, cfg.n_layers))
+    else:
+        ctx = lambda w: min(w, T) if w < (1 << 29) else T
+        core = _attn_flops(cfg, B, S, ctx) + _ffn_flops(cfg, B, S)
+    return core + _unembed_flops(cfg, B, 1)
+
+
+def _attn_flops_dec(cfg, B, S, ctx, n_layers, causal=True):
+    d, H, Hk, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    proj = 2.0 * B * S * d * (2 * H * Dh + 2 * Hk * Dh)
+    sc = 2.0 * B * S * ctx * H * Dh * 2
+    return n_layers * (proj + sc)
+
+
+def _cross_flops(cfg, B, S, Te):
+    d, H, Hk, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    proj = 2.0 * B * (S * d * 2 * H * Dh + Te * d * 2 * Hk * Dh)
+    sc = 2.0 * B * S * Te * H * Dh * 2
+    return cfg.n_layers * (proj + sc)
+
+
+def _ffn_flops_n(cfg, B, S, n_layers):
+    return B * S * 2 * 2.0 * cfg.d_model * cfg.d_ff * n_layers
+
+
+# --- HBM traffic model ------------------------------------------------------
+
+def step_bytes_per_device(arch: str, shape_name: str, chips: int,
+                          tp: int = 16) -> float:
+    """Approximate HBM bytes touched per device per step (lower bound)."""
+    cfg = get_config(arch)
+    shape = shape_by_name(shape_name)
+    P_total = cfg.n_params()
+    dp = chips // tp
+
+    if shape.kind == "train":
+        p_dev = P_total / chips if P_total * 2 / tp > 4 * 2**30 \
+            else P_total / tp                     # fsdp vs tp-only
+        # bf16 params read fwd+bwd (+gathered copies), f32 grad w+r,
+        # f32 m,v r+w, bf16 param write
+        param_traffic = p_dev * (2 * 2 + 4 + 4 + 16 + 2)
+        B_dev = shape.global_batch / dp
+        act = (B_dev * shape.seq_len * cfg.d_model * 2
+               * cfg.n_layers * 6)                # resid r/w + block io
+        return param_traffic + act
+    # inference: params read once + KV/state traffic
+    p_dev = P_total / tp
+    param_traffic = p_dev * 2
+    if shape.kind == "prefill":
+        B_dev = shape.global_batch / dp
+        act = (B_dev * shape.seq_len * cfg.d_model * 2 * cfg.n_layers * 4)
+        return param_traffic + act
+    # decode: read the whole KV cache shard per step
+    B_dev = max(shape.global_batch / dp, 1)
+    kv = (2 * B_dev * shape.seq_len * cfg.n_kv_heads * cfg.head_dim
+          * 2 * cfg.n_layers / tp) if cfg.family not in ("ssm",) else 0.0
+    if cfg.family == "ssm":
+        H, Dh = cfg.n_heads, cfg.d_model // cfg.n_heads
+        kv = cfg.n_layers * B_dev * H * Dh * Dh * 4
+    return param_traffic + kv

@@ -1,0 +1,43 @@
+"""Fig. 11 reproduction: per-iteration trace of the alternating loops —
+violation counts decrease as iterations progress (paper: time and
+sub-iterations drop across outer iterations). Also contrasts the paper's
+C/R alternation against our fused single-loop (beyond-paper)."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import field_topology, fused_pass, derive_edits
+from repro.data import synthetic_field
+
+from .common import emit
+
+
+def run(quick: bool = True):
+    f = synthetic_field("molecular", shape=(16, 16, 12) if quick else (48, 48, 24))
+    xi = 5e-3 * float(np.ptp(f))
+    rng = np.random.default_rng(1)
+    fh = (f + rng.uniform(-xi, xi, size=f.shape)).astype(np.float32)
+    topo = field_topology(jnp.asarray(f), xi)
+
+    g = jnp.asarray(fh)
+    trace = []
+    for i in range(100):
+        g, viol = fused_pass(g, topo)
+        v = int(viol)
+        trace.append(v)
+        if v == 0:
+            break
+    emit("fig11/fused/iters", 0.0,
+         "trace=" + "|".join(str(v) for v in trace[:20]))
+
+    res_paper = derive_edits(f, fh, xi, mode="paper")
+    res_fused = derive_edits(f, fh, xi, mode="fused")
+    emit("fig11/outer_iters", 0.0,
+         f"paper={res_paper.iters};fused={res_fused.iters};"
+         f"edits_paper={res_paper.edit_ratio:.4f};"
+         f"edits_fused={res_fused.edit_ratio:.4f}")
+
+
+if __name__ == "__main__":
+    run()

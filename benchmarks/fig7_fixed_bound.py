@@ -1,0 +1,30 @@
+"""Fig. 7 reproduction: fixed-error-bound comparison — edit ratio and OCR
+across error bounds for both base compressors; checks the paper's
+observation that edit size grows with the bound."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.compress import compress_preserving_mss, overall_compression_ratio
+from repro.data import synthetic_field
+
+from .common import emit
+
+
+def run(quick: bool = True):
+    f = synthetic_field("combustion", shape=(20, 20, 20) if quick else (48, 48, 48))
+    rng = float(np.ptp(f))
+    for base in ("szlike", "zfplike"):
+        prev_edits = -1.0
+        for rel in (1e-5, 1e-4, 1e-3):
+            xi = rel * rng
+            art = compress_preserving_mss(f, xi, base=base)
+            ocr = overall_compression_ratio(f, art)
+            emit(f"fig7/combustion/{base}/rel={rel:g}", 0.0,
+                 f"edit_ratio={art.edit_ratio:.4f};OCR={ocr:.2f};"
+                 f"iters={art.fix_iters}")
+            prev_edits = art.edit_ratio
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,109 @@
+"""Roofline analysis: read the dry-run JSONs (experiments/dryrun/*.json)
+and derive the three roofline terms per (arch x shape x mesh):
+
+  compute    = FLOPs_step  / (chips * 197e12 FLOP/s bf16)
+  memory     = HBM_bytes   / (chips * 819e9  B/s)     [per-device model]
+  collective = coll_bytes  / (4 links * 50e9 B/s)     [per-device, HLO]
+
+FLOPs/bytes use the analytic per-arch cost model (benchmarks/analytic.py):
+XLA cost_analysis counts scan bodies once, so its flops/bytes are recorded
+as-is for reference but under-report layer loops (see EXPERIMENTS.md).
+Collective bytes come from the optimized-HLO parse with the scan
+trip-count correction: entry_bytes + n_layers * body_bytes.
+
+Also reports MODEL_FLOPS (6*N*D train / 2*N*D inference; N_active for
+MoE), the useful-compute ratio MODEL_FLOPS/FLOPs_step, and the structural
+roofline fraction (MODEL_FLOPS time at peak) / (dominant term).
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+from repro.configs import get_config
+from repro.models.config import shape_by_name
+
+from .analytic import step_flops, step_bytes_per_device
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s / chip
+ICI_BW = 50e9                # B/s / link
+ICI_LINKS = 4                # links/chip usable for the collective mix
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = get_config(arch)
+    shape = shape_by_name(shape_name)
+    n = cfg.n_active_params() if cfg.moe else cfg.n_params()
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    tokens = shape.global_batch * (shape.seq_len if shape.kind == "prefill"
+                                   else 1)
+    return 2.0 * n * tokens
+
+
+def analyze(record: dict) -> dict:
+    arch, shape_name = record["arch"], record["shape"]
+    chips = 512 if record["multi_pod"] else 256
+    cfg = get_config(arch)
+
+    flops_total = step_flops(arch, shape_name)
+    bytes_dev = step_bytes_per_device(arch, shape_name, chips)
+    coll = record["collectives"]
+    body = coll.get("body_bytes", 0)
+    entry = coll.get("entry_bytes", coll["total_bytes"])
+    coll_dev = entry + cfg.n_layers * body
+
+    t_compute = flops_total / chips / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_dev / (ICI_LINKS * ICI_BW)
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dom = max(terms, key=terms.get)
+    mf = model_flops(arch, shape_name)
+    useful = mf / flops_total if flops_total > 0 else 0.0
+    bound = max(terms.values())
+    frac = (mf / chips / PEAK_FLOPS) / bound if bound > 0 else 0.0
+    return {
+        "arch": arch, "shape": shape_name, "chips": chips,
+        **{k: round(v * 1e3, 4) for k, v in terms.items()},   # in ms
+        "dominant": dom.replace("_s", ""),
+        "useful_ratio": round(useful, 3),
+        "roofline_frac": round(frac, 4),
+        "hlo_flops_dev": record["cost"]["flops"],
+        "hlo_bytes_dev": record["cost"]["bytes_accessed"],
+        "coll_bytes_dev": coll_dev,
+        "peak_gb": record["memory"]["peak_gb"],
+        "compile_s": record.get("t_compile_s"),
+        "status": record["status"],
+    }
+
+
+def load_rows(dry_dir: str = "experiments/dryrun"):
+    rows = []
+    for fn in sorted(Path(dry_dir).glob("*.json")):
+        rec = json.loads(fn.read_text())
+        if rec.get("status") != "ok":
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "chips": 512 if rec["multi_pod"] else 256,
+                         "status": rec.get("status"),
+                         "reason": rec.get("reason",
+                                           rec.get("error", ""))[:90]})
+            continue
+        rows.append(analyze(rec))
+    return rows
+
+
+def main(dry_dir: str = "experiments/dryrun"):
+    rows = load_rows(dry_dir)
+    hdr = ["arch", "shape", "chips", "compute_s", "memory_s", "collective_s",
+           "dominant", "useful_ratio", "roofline_frac", "status"]
+    print(",".join(hdr))
+    for r in rows:
+        print(",".join(str(r.get(h, "")) for h in hdr))
+    return rows
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

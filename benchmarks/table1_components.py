@@ -1,0 +1,63 @@
+"""Table 1 reproduction: timings of the paper's four parallelized
+components on one field. The paper compares Serial / OpenMP / CUDA; here
+the XLA-fused jnp path plays 'optimized parallel baseline' and the Pallas
+kernels are the TPU-target implementation (timed in interpret mode on CPU,
+so their numbers are a correctness exercise — the structural win is
+recorded by the roofline analysis instead)."""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import (field_topology, mss_labels, steepest_dirs,
+                        false_critical_masks, fused_pass)
+from repro.core.labels import pointer_jump
+from repro.core.grid import dir_to_pointer
+from repro.data import synthetic_field
+from repro.kernels import extrema_masks, fix_pass
+
+from .common import emit, timeit
+
+
+def run(quick: bool = True):
+    shape = (32, 32, 32) if quick else (64, 64, 64)
+    f = synthetic_field("fingering", shape=shape)
+    xi = 0.01 * float(np.ptp(f))
+    rng = np.random.default_rng(0)
+    g = jnp.asarray((f + rng.uniform(-xi, xi, size=shape)).astype(np.float32))
+    fj = jnp.asarray(f)
+    topo = field_topology(fj, xi)
+    V = f.size
+
+    # 1. update directions (fused with extrema classification)
+    t = timeit(lambda: jax.block_until_ready(steepest_dirs(g)))
+    emit("table1/update_directions/jnp", t, f"Mvert_s={V/t:.2f}")
+
+    # 2. find false critical points
+    t = timeit(lambda: jax.block_until_ready(false_critical_masks(g, topo)))
+    emit("table1/find_false_points/jnp", t, f"Mvert_s={V/t:.2f}")
+
+    # 3. fix false critical points (one fused pass)
+    t = timeit(lambda: jax.block_until_ready(fused_pass(g, topo)))
+    emit("table1/fix_false_points/jnp", t, f"Mvert_s={V/t:.2f}")
+
+    # 4. MSS computation (pointer jumping / path compression)
+    up, dn = steepest_dirs(g)
+    nxt = dir_to_pointer(up)
+    t = timeit(lambda: jax.block_until_ready(pointer_jump(nxt)))
+    emit("table1/mss_computation/jnp", t, f"Mvert_s={V/t:.2f}")
+
+    # Pallas kernels (interpret mode on CPU; TPU path on real hardware)
+    Mf, mf = topo.M, topo.m
+    maxf = topo.is_max.astype(jnp.int32)
+    minf = topo.is_min.astype(jnp.int32)
+    if quick:
+        t = timeit(lambda: jax.block_until_ready(
+            extrema_masks(g, Mf, mf, topo.is_max, topo.is_min,
+                          use_pallas=True)), iters=2)
+        emit("table1/find+update/pallas_interpret", t, f"Mvert_s={V/t:.2f}")
+
+
+if __name__ == "__main__":
+    run()

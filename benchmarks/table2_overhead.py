@@ -1,0 +1,39 @@
+"""Table 2 reproduction: computation/storage overhead of MSS-preserving
+compression vs plain lossy (SZ-like/ZFP-like) and lossless (GZIP/ZSTD
+stand-ins) across datasets and two error bounds."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.compress import (compress_preserving_mss, gzip_like, zstd_like,
+                            overall_compression_ratio)
+from repro.data import synthetic_field
+
+from .common import emit
+
+DATASETS_QUICK = {
+    "molecular": (20, 20, 12),
+    "fingering": (24, 24, 24),
+    "climate": (64, 128),
+}
+
+
+def run(quick: bool = True):
+    for name, shape in DATASETS_QUICK.items():
+        f = synthetic_field(name, shape=shape)
+        rng = float(np.ptp(f))
+        for rel in (1e-4, 5e-4):
+            xi = rel * rng
+            for base in ("szlike", "zfplike"):
+                art = compress_preserving_mss(f, xi, base=base)
+                ocr = overall_compression_ratio(f, art)
+                emit(f"table2/{name}/{base}/rel={rel:g}",
+                     (art.t_base + art.t_fix) * 1e6,
+                     f"OCR={ocr:.2f};t_comp={art.t_base:.3f}s;"
+                     f"t_fix={art.t_fix:.3f}s;edit_ratio={art.edit_ratio:.4f}")
+        emit(f"table2/{name}/gzip", 0.0, f"CR={f.nbytes/gzip_like(f):.2f}")
+        emit(f"table2/{name}/zstd", 0.0, f"CR={f.nbytes/zstd_like(f):.2f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,35 @@
+"""End-to-end driver #3: batched serving with KV / recurrent-state caches.
+Runs greedy decoding for three architecture families (dense GQA, xLSTM
+recurrent-state, hymba hybrid ring-buffer SWA) on reduced configs.
+
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.models import init_params
+from repro.serve import greedy_generate
+
+
+def main():
+    for arch in ("smollm-135m", "xlstm-1.3b", "hymba-1.5b"):
+        cfg = get_smoke_config(arch)
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        prompt = jnp.asarray(
+            np.random.default_rng(0).integers(0, cfg.vocab, size=(2, 8)),
+            jnp.int32)
+        out = greedy_generate(cfg, params, prompt, n_new=8)
+        assert out.shape == (2, 8), out.shape
+        assert bool(jnp.all((out >= 0) & (out < cfg.vocab)))
+        # determinism: same prompt -> same continuation
+        out2 = greedy_generate(cfg, params, prompt, n_new=8)
+        assert bool(jnp.all(out == out2))
+        print(f"{cfg.name:18s} generated {out.shape[1]} tokens/req "
+              f"(batch={out.shape[0]}): {np.asarray(out[0])[:8]}")
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""repro.checkpoint — fault-tolerant checkpointing with optional
+error-bounded compressed payloads and elastic mesh resharding."""
+from .manager import CheckpointManager, save_checkpoint, restore_checkpoint
+
+__all__ = ["CheckpointManager", "save_checkpoint", "restore_checkpoint"]

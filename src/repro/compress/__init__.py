@@ -1,0 +1,18 @@
+"""repro.compress — error-bounded lossy base compressors (the paper's
+SZ3/ZFP baselines, reimplemented in JAX) plus the lossless edit codec of
+Section 6.3 and the end-to-end MSz-corrected compression pipeline."""
+from .szlike import sz_compress, sz_decompress, sz_roundtrip
+from .zfplike import zfp_compress, zfp_decompress, zfp_roundtrip
+from .codec import (encode_edits, decode_edits, lossless_bytes,
+                    gzip_like, zstd_like)
+from .pipeline import (CompressedArtifact, compress_preserving_mss,
+                       decompress_artifact, overall_compression_ratio,
+                       overall_bit_rate, psnr)
+
+__all__ = [
+    "sz_compress", "sz_decompress", "sz_roundtrip",
+    "zfp_compress", "zfp_decompress", "zfp_roundtrip",
+    "encode_edits", "decode_edits", "lossless_bytes", "gzip_like", "zstd_like",
+    "CompressedArtifact", "compress_preserving_mss", "decompress_artifact",
+    "overall_compression_ratio", "overall_bit_rate", "psnr",
+]

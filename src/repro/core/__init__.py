@@ -1,0 +1,19 @@
+"""repro.core — the paper's contribution: MSz, an edit-based parallel
+algorithm preserving Morse-Smale segmentations through error-bounded lossy
+compression (Li et al., 2024), reformulated for TPU/JAX."""
+from .grid import (OFFSETS_2D, OFFSETS_3D, offsets_for, n_neighbors,
+                   self_code, steepest_dirs, gather_dir, dir_to_pointer,
+                   shift, linear_index)
+from .labels import mss_labels, pointer_jump, segmentation_accuracy, labels_from_codes
+from .fixes import (FieldTopo, field_topology, false_critical_masks,
+                    trouble_masks, fused_pass, fused_fix, paper_fix)
+from .driver import MszResult, derive_edits, apply_edits, verify_preservation
+
+__all__ = [
+    "OFFSETS_2D", "OFFSETS_3D", "offsets_for", "n_neighbors", "self_code",
+    "steepest_dirs", "gather_dir", "dir_to_pointer", "shift", "linear_index",
+    "mss_labels", "pointer_jump", "segmentation_accuracy", "labels_from_codes",
+    "FieldTopo", "field_topology", "false_critical_masks", "trouble_masks",
+    "fused_pass", "fused_fix", "paper_fix",
+    "MszResult", "derive_edits", "apply_edits", "verify_preservation",
+]

@@ -1,0 +1,98 @@
+"""High-level MSz API: derive edits at compression time, apply at
+decompression time, verify exact MSS preservation (the paper's Fig. 3
+workflow around the C/R fix loops)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import fixes, grid
+from .labels import mss_labels
+
+
+@dataclasses.dataclass
+class MszResult:
+    g: np.ndarray             # edited decompressed field (MSS == original's)
+    edits_idx: np.ndarray     # int64 flat indices of edited vertices (sorted)
+    edits_val: np.ndarray     # edit values delta_i  (g = f_hat + delta)
+    iters: int                # fix-loop iterations to convergence
+    converged: bool
+    edit_ratio: float         # |edits| / V   (paper's 'edit ratio')
+    max_abs_err: float        # max |f - g|   (must be <= xi)
+
+
+Mode = Literal["fused", "paper"]
+
+
+def derive_edits(f, f_hat, xi: float, mode: Mode = "fused",
+                 max_iters: int = 512) -> MszResult:
+    """Compute the edit series {delta_i} such that f_hat + delta has exactly
+    the MS segmentation of f, while |f - (f_hat+delta)| <= xi (Section 4).
+
+    Precondition (checked): |f - f_hat| <= xi, same shapes.
+    """
+    f = jnp.asarray(f)
+    f_hat = jnp.asarray(f_hat, f.dtype)
+    if f.shape != f_hat.shape:
+        raise ValueError(f"shape mismatch {f.shape} vs {f_hat.shape}")
+    if f.ndim not in (2, 3):
+        raise ValueError("MSz operates on 2D/3D piecewise-linear scalar fields")
+    base_err = float(jnp.max(jnp.abs(f - f_hat)))
+    if base_err > xi * (1 + 1e-6):
+        raise ValueError(
+            f"decompressed data violates the error bound before editing: "
+            f"max|f-f_hat|={base_err:.3g} > xi={xi:.3g}")
+
+    topo = fixes.field_topology(f, xi)
+    if mode == "fused":
+        g, iters, ok = fixes.fused_fix(f_hat, topo, max_iters=max_iters)
+    elif mode == "paper":
+        g, iters, ok = fixes.paper_fix(f_hat, topo, max_iters=max_iters)
+    else:
+        raise ValueError(f"unknown mode {mode!r}")
+
+    g = np.asarray(g)
+    delta = g - np.asarray(f_hat)
+    idx = np.flatnonzero(delta != 0.0)
+    vals = delta.reshape(-1)[idx]
+    return MszResult(
+        g=g,
+        edits_idx=idx.astype(np.int64),
+        edits_val=vals,
+        iters=int(iters),
+        converged=bool(ok),
+        edit_ratio=float(idx.size) / float(delta.size),
+        max_abs_err=float(np.max(np.abs(np.asarray(f) - g))),
+    )
+
+
+def apply_edits(f_hat, edits_idx, edits_val) -> np.ndarray:
+    """Decompression-side reconstruction: g = f_hat + delta (Fig. 3 bottom)."""
+    g = np.array(f_hat, copy=True)
+    flat = g.reshape(-1)
+    flat[edits_idx] += edits_val
+    return g
+
+
+def verify_preservation(f, g, xi: float) -> dict:
+    """Check both paper constraints: global error bound + exact MSS."""
+    f = jnp.asarray(f)
+    g = jnp.asarray(g, f.dtype)
+    Mf, mf = mss_labels(f)
+    Mg, mg = mss_labels(g)
+    max_label_ok = bool(jnp.all(Mf == Mg))
+    min_label_ok = bool(jnp.all(mf == mg))
+    err = float(jnp.max(jnp.abs(f - g)))
+    right = float(jnp.mean(((Mf == Mg) & (mf == mg)).astype(jnp.float32)))
+    return dict(
+        bound_ok=err <= xi * (1 + 1e-6),
+        max_abs_err=err,
+        max_labels_ok=max_label_ok,
+        min_labels_ok=min_label_ok,
+        mss_preserved=max_label_ok and min_label_ok,
+        right_labeled_ratio=right,
+    )

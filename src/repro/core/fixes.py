@@ -1,0 +1,286 @@
+"""False-point detection and decreasing-edit fix passes.
+
+Two execution modes:
+
+* ``paper``  — faithful reproduction of the paper's workflow (Fig. 3):
+  C-loops run the four sub-loops (FPmax, FPmin, FNmax, FNmin) sequentially
+  to their individual fixpoints, then an R-pass computes the full MSS of the
+  current edited field (pointer jumping), identifies troublemakers as the
+  first label discrepancy along integral lines, and reroutes them; C- and
+  R-loops alternate until convergence (Section 5.3).
+
+* ``fused``  — our beyond-paper TPU formulation: all six fix conditions are
+  *local stencil predicates*, applied simultaneously in one dense pass per
+  iteration. The R-condition uses the local characterization
+      troublemaker(t)  <=>  M_f[dir_up_g(t)] != M_f[t]   (t non-max)
+  which avoids recomputing MSS labels inside the loop entirely (labels are
+  only needed once on f, and once at the end for verification). All edits
+  remain monotonically decreasing, so the paper's convergence argument
+  (Lemma 1) applies verbatim.
+
+Conflict resolution: the paper uses atomicCAS keeping the most significant
+edit. All edits decrease, and the edit value ``(g+f-xi)/2`` depends only on
+the *target* vertex, so concurrent edits to one vertex are identical — the
+dense formulation (each vertex pulls edit requests from its stencil) is
+conflict-free by construction and bitwise deterministic.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import grid
+from .labels import labels_from_codes, pointer_jump
+
+
+class FieldTopo(NamedTuple):
+    """Static per-field topology of the ORIGINAL data (computed once)."""
+    up_c: jnp.ndarray      # steepest ascending dir codes of f
+    dn_c: jnp.ndarray      # steepest descending dir codes of f
+    is_max: jnp.ndarray    # bool
+    is_min: jnp.ndarray    # bool
+    M: jnp.ndarray         # ascending (max) labels of f, int32, f.shape
+    m: jnp.ndarray         # descending (min) labels of f
+    lower: jnp.ndarray     # f - xi  (edit lower bound, Eq. 1)
+
+
+def field_topology(f: jnp.ndarray, xi) -> FieldTopo:
+    up_c, dn_c = grid.steepest_dirs(f)
+    M, m = labels_from_codes(up_c, dn_c)
+    sc = grid.self_code(f.ndim)
+    return FieldTopo(up_c, dn_c, up_c == sc, dn_c == sc, M, m,
+                     f - jnp.asarray(xi, f.dtype))
+
+
+def _halve_toward_lower(g, lower, mask):
+    """Eq. 2/3/4/5/6 decreasing edit, clamped so |f-g|<=xi holds exactly."""
+    new = jnp.maximum((g + lower) * jnp.asarray(0.5, g.dtype), lower)
+    return jnp.where(mask, new, g)
+
+
+def _pull(src_mask: jnp.ndarray, code: jnp.ndarray) -> jnp.ndarray:
+    """pulled[j] = OR_k ( src_mask[j - off_k] & code[j - off_k] == k ).
+
+    Dense 'pull' equivalent of the paper's atomic scatter: a vertex j is an
+    edit target iff some stencil neighbor i has ``src_mask[i]`` set and i's
+    direction code points at j.
+    """
+    offs = grid.offsets_for(src_mask.ndim)
+    out = jnp.zeros(src_mask.shape, bool)
+    for k, off in enumerate(offs):
+        noff = tuple(-o for o in off)
+        m = grid.shift(src_mask, noff, False)
+        c = grid.shift(code, noff, jnp.int32(-1))
+        out = out | (m & (c == k))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# false-point predicates
+# ---------------------------------------------------------------------------
+
+class FalseMasks(NamedTuple):
+    fpmax: jnp.ndarray
+    fpmin: jnp.ndarray
+    fnmax: jnp.ndarray
+    fnmin: jnp.ndarray
+    up_c_g: jnp.ndarray
+    dn_c_g: jnp.ndarray
+
+
+def false_critical_masks(g: jnp.ndarray, topo: FieldTopo) -> FalseMasks:
+    """Definitions 1-3: the four false critical point classes."""
+    up_c_g, dn_c_g = grid.steepest_dirs(g)
+    sc = grid.self_code(g.ndim)
+    is_max_g = up_c_g == sc
+    is_min_g = dn_c_g == sc
+    return FalseMasks(
+        fpmax=is_max_g & ~topo.is_max,
+        fpmin=is_min_g & ~topo.is_min,
+        fnmax=~is_max_g & topo.is_max,
+        fnmin=~is_min_g & topo.is_min,
+        up_c_g=up_c_g,
+        dn_c_g=dn_c_g,
+    )
+
+
+def trouble_masks(g_codes: FalseMasks, topo: FieldTopo):
+    """Local R-loop predicates (our vectorized troublemaker test).
+
+    trouble_max(t): t non-max in g and its g-ascending edge leaves t's
+    original ascending region -> demote the wrong winner dir_up_g(t).
+    trouble_min(t): symmetric on the descending side -> promote (decrease)
+    the ORIGINAL descending neighbor dir_dn_f(t). Only decreasing edits can
+    'promote' a descent target, hence the asymmetry (see DESIGN.md §2).
+    """
+    sc = grid.self_code(topo.M.ndim)
+    nonmax_g = g_codes.up_c_g != sc
+    nonmin_g = g_codes.dn_c_g != sc
+    M_next = grid.gather_dir(topo.M, g_codes.up_c_g)
+    m_next = grid.gather_dir(topo.m, g_codes.dn_c_g)
+    trouble_max = nonmax_g & (M_next != topo.M)
+    trouble_min = nonmin_g & (m_next != topo.m)
+    return trouble_max, trouble_min
+
+
+# ---------------------------------------------------------------------------
+# fused mode — one dense pass applies every fix class at once
+# ---------------------------------------------------------------------------
+
+def fused_pass(g: jnp.ndarray, topo: FieldTopo):
+    """One iteration of the fused fixed-point loop.
+
+    Returns (g_next, n_violations). n_violations == 0 iff g already
+    preserves the full MS segmentation of f (extrema + all labels).
+    """
+    fm = false_critical_masks(g, topo)
+    trouble_max, trouble_min = trouble_masks(fm, topo)
+
+    # self-edits: FPmax (Eq. 2) and FNmin (Eq. 5)
+    self_edit = fm.fpmax | fm.fnmin
+    # demote the wrong g-ascending winner: FNmax (Eq. 4) and max-label
+    # troublemakers (Eq. 6, ascending case). FNmax is NOT subsumed by
+    # trouble_max: if dir_up_g(t) happens to lead into t's own region,
+    # trouble_max(t) is False while t still must be restored as a maximum.
+    demote_src = fm.fnmax | trouble_max
+    # promote (decrease) the original descending neighbor: FPmin (our
+    # convergent variant of Eq. 3) and min-label troublemakers.
+    promote_src = fm.fpmin | trouble_min
+
+    target = (self_edit
+              | _pull(demote_src, fm.up_c_g)
+              | _pull(promote_src, topo.dn_c))
+    g_next = _halve_toward_lower(g, topo.lower, target)
+    n_viol = jnp.sum(self_edit) + jnp.sum(demote_src) + jnp.sum(promote_src)
+    return g_next, n_viol.astype(jnp.int32)
+
+
+@jax.jit
+def fused_fix(g0: jnp.ndarray, topo: FieldTopo, max_iters: int = 512):
+    """Run the fused loop to convergence. Returns (g, iters, converged)."""
+    def cond(state):
+        g, it, viol = state
+        return (viol > 0) & (it < max_iters)
+
+    def body(state):
+        g, it, _ = state
+        g2, viol2 = fused_pass(g, topo)
+        return g2, it + 1, viol2
+
+    g1, viol1 = fused_pass(g0, topo)
+    g, iters, viol = jax.lax.while_loop(cond, body, (g1, jnp.int32(1), viol1))
+    return g, iters, viol == 0
+
+
+# ---------------------------------------------------------------------------
+# paper mode — sequential sub-loops, label recomputation in R-loops
+# ---------------------------------------------------------------------------
+
+def _subloop(g, topo, which: str, max_iters):
+    """Run one false-critical-point class to its fixpoint (Section 5.1)."""
+    def masks(g):
+        fm = false_critical_masks(g, topo)
+        return fm
+
+    def target_of(fm):
+        if which == "fpmax":      # Eq. 2: decrease the vertex itself
+            return fm.fpmax
+        if which == "fnmin":      # Eq. 5: decrease the vertex itself
+            return fm.fnmin
+        if which == "fpmin":
+            # DEVIATION from Eq. 3 as printed ("decrease the maximal
+            # neighbor"): that target can pin at its lower bound while
+            # still above g_i (e.g. neighbors j: f_j >> f_i and k:
+            # f_k < f_i — the fix never touches k), deadlocking the
+            # sub-loop. We decrease the ORIGINAL steepest-descending
+            # neighbor dir_dn_f(i) instead: f_c - xi < f_i - xi <= g_i
+            # guarantees it eventually undercuts g_i. See DESIGN.md §2.
+            return _pull(fm.fpmin, topo.dn_c)
+        if which == "fnmax":      # Eq. 4: decrease i's maximal (g) neighbor
+            return _pull(fm.fnmax, fm.up_c_g)
+        raise ValueError(which)
+
+    count_of = dict(fpmax=lambda fm: fm.fpmax, fnmin=lambda fm: fm.fnmin,
+                    fpmin=lambda fm: fm.fpmin, fnmax=lambda fm: fm.fnmax)[which]
+
+    def cond(state):
+        g, it, n = state
+        return (n > 0) & (it < max_iters)
+
+    def body(state):
+        g, it, _ = state
+        fm = masks(g)
+        g2 = _halve_toward_lower(g, topo.lower, target_of(fm))
+        fm2 = masks(g2)
+        return g2, it + 1, jnp.sum(count_of(fm2)).astype(jnp.int32)
+
+    fm0 = masks(g)
+    n0 = jnp.sum(count_of(fm0)).astype(jnp.int32)
+    g, it, _ = jax.lax.while_loop(cond, body, (g, jnp.int32(0), n0))
+    return g, it
+
+
+def _c_loop(g, topo, max_iters):
+    """One C-loop: the four sub-loops in the paper's order, repeated until
+    no false critical point remains."""
+    def n_false(g):
+        fm = false_critical_masks(g, topo)
+        return (jnp.sum(fm.fpmax) + jnp.sum(fm.fpmin)
+                + jnp.sum(fm.fnmax) + jnp.sum(fm.fnmin)).astype(jnp.int32)
+
+    def cond(state):
+        g, it, n = state
+        return (n > 0) & (it < max_iters)
+
+    def body(state):
+        g, it, _ = state
+        for which in ("fpmax", "fpmin", "fnmax", "fnmin"):
+            g, _ = _subloop(g, topo, which, max_iters)
+        return g, it + 1, n_false(g)
+
+    g, it, _ = jax.lax.while_loop(cond, body, (g, jnp.int32(0), n_false(g)))
+    return g
+
+
+def _r_pass(g, topo):
+    """One R-pass (Section 5.2): recompute the MSS of g (the expensive
+    pointer-jumping step the paper parallelizes), find falsely labeled
+    regular points, locate troublemakers, reroute with one edit each."""
+    fm = false_critical_masks(g, topo)
+    Mg, mg = labels_from_codes(fm.up_c_g, fm.dn_c_g)
+    wrong_max_lab = Mg != topo.M
+    wrong_min_lab = mg != topo.m
+    t_max, t_min = trouble_masks(fm, topo)
+    # paper: troublemaker = FIRST discrepancy along a falsely-labeled
+    # vertex's integral line == locally-diverging AND itself falsely labeled.
+    t_max = t_max & wrong_max_lab
+    t_min = t_min & wrong_min_lab
+    target = _pull(t_max, fm.up_c_g) | _pull(t_min, topo.dn_c)
+    g2 = _halve_toward_lower(g, topo.lower, target)
+    n_wrong = (jnp.sum(wrong_max_lab) + jnp.sum(wrong_min_lab)).astype(jnp.int32)
+    return g2, n_wrong
+
+
+@functools.partial(jax.jit, static_argnames=("max_iters",))
+def paper_fix(g0: jnp.ndarray, topo: FieldTopo, max_iters: int = 512):
+    """Alternate C- and R-loops until no false critical/regular point
+    (Section 5.3). Returns (g, outer_iters, converged)."""
+    def cond(state):
+        g, it, n = state
+        return (n > 0) & (it < max_iters)
+
+    def body(state):
+        g, it, _ = state
+        g = _c_loop(g, topo, max_iters)
+        g, n_wrong = _r_pass(g, topo)
+        fm = false_critical_masks(g, topo)
+        n = (n_wrong + jnp.sum(fm.fpmax) + jnp.sum(fm.fpmin)
+             + jnp.sum(fm.fnmax) + jnp.sum(fm.fnmin)).astype(jnp.int32)
+        return g, it + 1, n
+
+    g, iters, n = jax.lax.while_loop(cond, body, (g0, jnp.int32(0), jnp.int32(1)))
+    return g, iters, n == 0

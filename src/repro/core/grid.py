@@ -1,0 +1,139 @@
+"""Structured-grid PL topology primitives (Freudenthal triangulation).
+
+The paper operates on triangular/tetrahedral meshes; every dataset it
+evaluates is a structured grid, for which the Freudenthal triangulation
+yields fixed neighbor stencils:
+
+  * 2D: 6-neighborhood  (4 axis + the (+1,+1)/(-1,-1) diagonal)
+  * 3D: 14-neighborhood (6 axis + 8 diagonal offsets along the main diagonal)
+
+All comparisons use Simulation-of-Simplicity (SoS) total ordering
+``(value, linear_index)`` so non-Morse (tied) inputs are handled exactly as
+in the paper (Edelsbrunner & Muecke).
+
+Everything here is expressed as dense shift-based stencils (pad + slice),
+which XLA fuses well and which map 1:1 onto the Pallas TPU kernels in
+``repro.kernels``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Freudenthal stencils. Offsets come in +/- pairs: code(2k+1) = -code(2k).
+OFFSETS_2D: Tuple[Tuple[int, ...], ...] = (
+    (0, 1), (0, -1),
+    (1, 0), (-1, 0),
+    (1, 1), (-1, -1),
+)
+OFFSETS_3D: Tuple[Tuple[int, ...], ...] = (
+    (0, 0, 1), (0, 0, -1),
+    (0, 1, 0), (0, -1, 0),
+    (1, 0, 0), (-1, 0, 0),
+    (0, 1, 1), (0, -1, -1),
+    (1, 0, 1), (-1, 0, -1),
+    (1, 1, 0), (-1, -1, 0),
+    (1, 1, 1), (-1, -1, -1),
+)
+
+
+def offsets_for(ndim: int) -> Tuple[Tuple[int, ...], ...]:
+    if ndim == 2:
+        return OFFSETS_2D
+    if ndim == 3:
+        return OFFSETS_3D
+    raise ValueError(f"MSz supports 2D/3D piecewise-linear fields, got ndim={ndim}")
+
+
+def n_neighbors(ndim: int) -> int:
+    return len(offsets_for(ndim))
+
+
+def self_code(ndim: int) -> int:
+    """Direction code meaning 'self' (the vertex is an extremum)."""
+    return n_neighbors(ndim)
+
+
+def shift(x: jnp.ndarray, off: Sequence[int], fill) -> jnp.ndarray:
+    """y[v] = x[v + off], with ``fill`` outside the domain."""
+    pads = [(max(0, -o), max(0, o)) for o in off]
+    xp = jnp.pad(x, pads, constant_values=fill)
+    sl = tuple(slice(max(0, o), max(0, o) + s) for o, s in zip(off, x.shape))
+    return xp[sl]
+
+
+def linear_index(shape: Sequence[int]) -> jnp.ndarray:
+    return jnp.arange(int(np.prod(shape)), dtype=jnp.int32).reshape(shape)
+
+
+def _lex_gt(v1, i1, v2, i2):
+    """SoS strict order: (v1, i1) > (v2, i2)."""
+    return (v1 > v2) | ((v1 == v2) & (i1 > i2))
+
+
+def _lex_lt(v1, i1, v2, i2):
+    return (v1 < v2) | ((v1 == v2) & (i1 < i2))
+
+
+@functools.partial(jax.jit, static_argnames=())
+def steepest_dirs(f: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused 'update directions' + 'classify extrema' stencil.
+
+    Returns ``(up_code, dn_code)`` int32 arrays of f's shape. ``up_code[v]``
+    is the stencil code of the steepest SoS-ascending neighbor of ``v``
+    (the first edge of v's ascending integral line), or ``self_code(ndim)``
+    when ``v`` is a maximum. Symmetrically for ``dn_code`` / minima.
+
+    This is the paper's dominant component ('updating directions', ~80% of
+    CPU time, Table 1) fused with its 'find critical points' pass.
+    """
+    offs = offsets_for(f.ndim)
+    lin = linear_index(f.shape)
+    neg_inf = jnp.asarray(-jnp.inf, f.dtype)
+    pos_inf = jnp.asarray(jnp.inf, f.dtype)
+
+    up_v, up_i = f, lin
+    up_c = jnp.full(f.shape, self_code(f.ndim), jnp.int32)
+    dn_v, dn_i = f, lin
+    dn_c = jnp.full(f.shape, self_code(f.ndim), jnp.int32)
+    for k, off in enumerate(offs):
+        nv = shift(f, off, neg_inf)
+        ni = shift(lin, off, jnp.int32(-1))
+        take = _lex_gt(nv, ni, up_v, up_i)
+        up_v = jnp.where(take, nv, up_v)
+        up_i = jnp.where(take, ni, up_i)
+        up_c = jnp.where(take, jnp.int32(k), up_c)
+
+        nv2 = shift(f, off, pos_inf)
+        ni2 = shift(lin, off, jnp.int32(np.iinfo(np.int32).max))
+        take2 = _lex_lt(nv2, ni2, dn_v, dn_i)
+        dn_v = jnp.where(take2, nv2, dn_v)
+        dn_i = jnp.where(take2, ni2, dn_i)
+        dn_c = jnp.where(take2, jnp.int32(k), dn_c)
+    return up_c, dn_c
+
+
+def gather_dir(x: jnp.ndarray, code: jnp.ndarray) -> jnp.ndarray:
+    """y[v] = x[v + offset(code[v])]; y[v] = x[v] where code==self."""
+    offs = offsets_for(x.ndim)
+    out = x
+    zero = jnp.zeros((), x.dtype)
+    for k, off in enumerate(offs):
+        # fill value irrelevant — a valid code never points off-domain.
+        out = jnp.where(code == k, shift(x, off, zero), out)
+    return out
+
+
+def dir_to_pointer(code: jnp.ndarray) -> jnp.ndarray:
+    """Direction codes -> flattened next-vertex pointers (self at extrema)."""
+    lin = linear_index(code.shape)
+    nxt = gather_dir(lin, code)
+    return nxt.reshape(-1)
+
+
+def is_extremum(code: jnp.ndarray) -> jnp.ndarray:
+    return code == self_code(code.ndim)

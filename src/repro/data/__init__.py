@@ -1,0 +1,7 @@
+"""repro.data — input pipelines: procedural scalar fields standing in for
+the paper's application datasets, and the LM token pipeline."""
+from .fields import synthetic_field, FIELD_GENERATORS
+from .tokens import TokenPipeline, synthetic_tokens
+
+__all__ = ["synthetic_field", "FIELD_GENERATORS", "TokenPipeline",
+           "synthetic_tokens"]

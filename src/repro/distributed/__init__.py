@@ -1,0 +1,10 @@
+"""repro.distributed — mesh-aware distributed-optimization utilities:
+error-bounded compressed cross-pod gradient all-reduce (the paper's
+compressor applied to distributed training), straggler-tolerant stepping,
+and collective helpers."""
+from .compression import (compressed_psum_tree, quantize_tree,
+                          dequantize_tree, make_grad_sync)
+from .straggler import StepWatchdog
+
+__all__ = ["compressed_psum_tree", "quantize_tree", "dequantize_tree",
+           "make_grad_sync", "StepWatchdog"]

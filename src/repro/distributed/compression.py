@@ -1,0 +1,90 @@
+"""Error-bounded gradient compression for the slow cross-pod links.
+
+This is the paper's compressor (linear-scaling quantization, the same
+primitive as repro.compress.szlike) applied to distributed optimization:
+gradients are quantized to int16 codes with a per-tensor absolute error
+bound xi = rel_bound * max|g|, summed across pods with an integer psum
+(exact — integer addition commutes with dequantization), and dequantized.
+Bytes on the pod interconnect drop 2x (f32 -> int16) with a hard
+per-element error bound; an int8 mode drops 4x.
+
+Used via shard_map manual over the 'pod' axis with 'data'/'model' left to
+the SPMD partitioner (jax.shard_map axis_names={'pod'}).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def _bits_dtype(bits: int):
+    return jnp.int8 if bits == 8 else jnp.int16
+
+
+def quantize_tree(grads: Any, rel_bound: float, bits: int = 16):
+    """Per-tensor linear-scaling quantization. Returns (codes, steps)."""
+    qmax = float(2 ** (bits - 1) - 1)
+
+    def q(g):
+        gf = g.astype(jnp.float32)
+        amax = jnp.max(jnp.abs(gf))
+        # step chosen so codes fit in the integer range even after the
+        # pod-axis sum (divide headroom by n_pods at the call site)
+        step = jnp.maximum(amax * rel_bound * 2.0, amax / qmax)
+        step = jnp.maximum(step, 1e-30)
+        return jnp.clip(jnp.round(gf / step), -qmax, qmax).astype(
+            _bits_dtype(bits)), step
+
+    flat, tdef = jax.tree.flatten(grads)
+    out = [q(g) for g in flat]
+    codes = jax.tree.unflatten(tdef, [c for c, _ in out])
+    steps = jax.tree.unflatten(tdef, [s for _, s in out])
+    return codes, steps
+
+
+def dequantize_tree(codes: Any, steps: Any, like: Any):
+    return jax.tree.map(
+        lambda c, s, g: (c.astype(jnp.float32) * s).astype(g.dtype),
+        codes, steps, like)
+
+
+def compressed_psum_tree(grads: Any, axis_name: str, rel_bound: float = 1e-3,
+                         bits: int = 16, n_shards: int = 2):
+    """psum over `axis_name` with error-bounded quantized payloads.
+
+    The integer codes are summed exactly; each pod's dequantization error
+    is bounded by its step, so the summed error is bounded by
+    n_shards * max_step — still a hard error bound, scaled accordingly.
+    Steps are synchronized by a (tiny) f32 psum-max first so all shards
+    use one step per tensor.
+    """
+    qmax = float(2 ** (bits - 1) - 1) / n_shards   # headroom for the sum
+    wire = _bits_dtype(bits)                       # int16 / int8 on the wire
+
+    def q(g):
+        gf = g.astype(jnp.float32)
+        amax = jnp.max(jnp.abs(gf))
+        amax = jax.lax.pmax(amax, axis_name)       # shared scale
+        step = jnp.maximum(jnp.maximum(amax * rel_bound * 2.0, amax / qmax),
+                           1e-30)
+        # per-shard codes fit qmax = range/n_shards, so the psum result
+        # fits the narrow wire dtype — the reduce itself moves 2x (int16)
+        # or 4x (int8) fewer bytes than f32.
+        codes = jnp.clip(jnp.round(gf / step), -qmax, qmax).astype(wire)
+        summed = jax.lax.psum(codes, axis_name)    # exact integer reduce
+        return (summed.astype(jnp.float32) * step).astype(g.dtype)
+
+    return jax.tree.map(q, grads)
+
+
+def make_grad_sync(pod_axis: str = "pod", rel_bound: float = 1e-3,
+                   bits: int = 16, n_pods: int = 2) -> Callable:
+    """Returns grad_sync(grads) for use inside shard_map(axis_names={pod})."""
+    def sync(grads):
+        summed = compressed_psum_tree(grads, pod_axis, rel_bound, bits,
+                                      n_shards=n_pods)
+        return jax.tree.map(lambda g: g / n_pods, summed)
+    return sync

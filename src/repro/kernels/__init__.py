@@ -1,0 +1,10 @@
+"""repro.kernels — Pallas TPU kernels for the paper's perf-critical
+components (fused extrema/direction stencil, pull-based fix pass,
+dual-quantization Lorenzo transform) plus the LM-side flash-attention
+forward. Each has a pure-jnp oracle (ref.py / models.layers); tests sweep
+shapes/dtypes against it (interpret=True on CPU)."""
+from .ops import extrema_masks, fix_pass, lorenzo_quant
+from .flash import flash_attention_pallas
+
+__all__ = ["extrema_masks", "fix_pass", "lorenzo_quant",
+           "flash_attention_pallas"]

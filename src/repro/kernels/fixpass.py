@@ -1,0 +1,98 @@
+"""Pallas TPU kernel: 'fix false critical points' — the pull-based edit
+application (paper Section 6.1, atomicCAS replaced by a gather + min
+reduction; see DESIGN.md §2).
+
+Each vertex j decreases to (g_j + lower_j)/2 iff
+  * j is its own fix target (self_edit[j]), or
+  * a stencil neighbor i has demote_src[i] and up_code_g[i] pointing at j, or
+  * a stencil neighbor i has promote_src[i] and dn_code_f[i] pointing at j.
+
+Same z-slab halo layout as the extrema kernel. Also emits the per-slab
+violation count (the paper's lock-free work-queue height becomes a
+reduction)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..core.grid import OFFSETS_3D
+from .extrema import _shift2d
+
+# code k is stored at i; i targets j = i + off_k. From j's view the source
+# sits at -off_k and must carry code k.
+
+
+def _kernel(g_c, low_c, self_c,
+            dem_m, dem_c, dem_p, pro_m, pro_c, pro_p,
+            upg_m, upg_c, upg_p, dnf_m, dnf_c, dnf_p,
+            g_out, viol_out, *, Z, Y, X):
+    z = pl.program_id(0)
+
+    def pulled(src_slabs, code_slabs):
+        out = jnp.zeros((Y, X), bool)
+        for k, (dz, dy, dx) in enumerate(OFFSETS_3D):
+            sdz = -dz
+            src = src_slabs[sdz + 1]
+            cod = code_slabs[sdz + 1]
+            m = _shift2d(src, -dy, -dx, 0) != 0
+            c = _shift2d(cod, -dy, -dx, -1)
+            if sdz == -1:
+                edge = z == 0
+                m = jnp.where(edge, False, m)
+            elif sdz == 1:
+                edge = z == Z - 1
+                m = jnp.where(edge, False, m)
+            out = out | (m & (c == k))
+        return out
+
+    dem = (dem_m[0], dem_c[0], dem_p[0])
+    pro = (pro_m[0], pro_c[0], pro_p[0])
+    upg = (upg_m[0], upg_c[0], upg_p[0])
+    dnf = (dnf_m[0], dnf_c[0], dnf_p[0])
+
+    target = ((self_c[0] != 0)
+              | pulled(dem, upg)
+              | pulled(pro, dnf))
+    g = g_c[0]
+    low = low_c[0]
+    new = jnp.maximum((g + low) * 0.5, low)
+    g_out[0] = jnp.where(target, new, g)
+    viol = (jnp.sum(self_c[0]) + jnp.sum(dem_c[0]) + jnp.sum(pro_c[0]))
+    viol_out[0, 0] = viol.astype(jnp.int32)
+
+
+def fix_pass_pallas(g, lower, self_edit, demote_src, promote_src,
+                    up_code_g, dn_code_f, *, interpret: bool = True):
+    """Apply one fused fix pass. All inputs (Z,Y,X); masks int32 0/1.
+    Returns (g_next (Z,Y,X) f32, viol (Z,) int32 per-slab counts)."""
+    Z, Y, X = g.shape
+
+    def halo():
+        return [
+            pl.BlockSpec((1, Y, X), lambda z: (jnp.maximum(z - 1, 0), 0, 0)),
+            pl.BlockSpec((1, Y, X), lambda z: (z, 0, 0)),
+            pl.BlockSpec((1, Y, X),
+                         lambda z: (jnp.minimum(z + 1, Z - 1), 0, 0)),
+        ]
+
+    center = pl.BlockSpec((1, Y, X), lambda z: (z, 0, 0))
+    out_specs = [center, pl.BlockSpec((1, 1), lambda z: (z, 0))]
+    out_shape = [jax.ShapeDtypeStruct((Z, Y, X), g.dtype),
+                 jax.ShapeDtypeStruct((Z, 1), jnp.int32)]
+    kern = functools.partial(_kernel, Z=Z, Y=Y, X=X)
+    g2, viol = pl.pallas_call(
+        kern,
+        grid=(Z,),
+        in_specs=[center, center, center] + halo() + halo() + halo() + halo(),
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(g, lower, self_edit,
+      demote_src, demote_src, demote_src,
+      promote_src, promote_src, promote_src,
+      up_code_g, up_code_g, up_code_g,
+      dn_code_f, dn_code_f, dn_code_f)
+    return g2, viol[:, 0]

@@ -1,0 +1,114 @@
+"""Pallas TPU kernel: causal flash attention forward (GQA).
+
+The LM-side perf-critical op: the framework's jnp chunked attention
+(repro.models.layers.flash_attention, the oracle) bounds memory but leaves
+tiling to XLA; this kernel owns the schedule explicitly — grid
+(batch*kv_head*group, q_blocks, kv_blocks) with the kv dimension innermost
+and sequential, online-softmax state (m, l, acc) in VMEM scratch carried
+across kv steps, MXU-aligned (q_block x Dh) tiles.
+
+Decode and window variants fall back to the jnp path (ops.py); this kernel
+targets the train/prefill shapes where attention dominates.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            qc: int, kc: int, nk: int, scale: float, causal: bool):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, -jnp.inf)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_pos = iq * qc + jax.lax.broadcasted_iota(jnp.int32, (qc, kc), 0)
+    k_pos = ik * kc + jax.lax.broadcasted_iota(jnp.int32, (qc, kc), 1)
+
+    run = True
+    if causal:
+        # whole block above the diagonal -> nothing to do
+        run = (ik * kc) <= (iq * qc + qc - 1)
+
+    @pl.when(run if causal else True)
+    def _body():
+        q = q_ref[0].astype(jnp.float32) * scale        # (qc, Dh)
+        k = k_ref[0].astype(jnp.float32)                # (kc, Dh)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if causal:
+            s = jnp.where(q_pos >= k_pos, s, -jnp.inf)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[:, None])
+        p = jnp.where(jnp.isfinite(s), p, 0.0)
+        corr = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1)
+        acc_scr[...] = (acc_scr[...] * corr[:, None]
+                        + jax.lax.dot_general(
+                            p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_scr[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _flush():
+        l = jnp.maximum(l_scr[...], 1e-37)
+        o_ref[0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                           *, causal: bool = True, q_block: int = 256,
+                           k_block: int = 256,
+                           interpret: bool = True) -> jnp.ndarray:
+    """q: (B, S, H, Dh); k/v: (B, T, Hk, Dh) with H = Hk*G. Returns
+    (B, S, H, Dh). S % q_block == 0 and T % k_block == 0 required (the
+    ops.py wrapper picks divisors)."""
+    B, S, H, Dh = q.shape
+    T, Hk = k.shape[1], k.shape[2]
+    G = H // Hk
+    qc = min(q_block, S)
+    kc = min(k_block, T)
+    nq, nk = S // qc, T // kc
+    BH = B * H
+
+    # (BH, S, Dh) layout; KV indexed by bh // G (GQA sharing)
+    qr = q.transpose(0, 2, 1, 3).reshape(BH, S, Dh)
+    kr = k.transpose(0, 2, 1, 3).reshape(B * Hk, T, Dh)
+    vr = v.transpose(0, 2, 1, 3).reshape(B * Hk, T, Dh)
+
+    kern = functools.partial(_kernel, qc=qc, kc=kc, nk=nk,
+                             scale=Dh ** -0.5, causal=causal)
+    out = _call(kern, qr, kr, vr, BH, nq, nk, qc, kc, Dh, G, q.dtype,
+                interpret)
+    return out.reshape(B, H, S, Dh).transpose(0, 2, 1, 3)
+
+
+def _call(kern, qr, kr, vr, BH, nq, nk, qc, kc, Dh, G, dtype, interpret):
+    from jax.experimental.pallas import tpu as pltpu
+    return pl.pallas_call(
+        kern,
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, qc, Dh), lambda bh, iq, ik: (bh, iq, 0)),
+            pl.BlockSpec((1, kc, Dh), lambda bh, iq, ik: (bh // G, ik, 0)),
+            pl.BlockSpec((1, kc, Dh), lambda bh, iq, ik: (bh // G, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, qc, Dh), lambda bh, iq, ik: (bh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, nq * qc, Dh), dtype),
+        scratch_shapes=[
+            pltpu.VMEM((qc,), jnp.float32),
+            pltpu.VMEM((qc,), jnp.float32),
+            pltpu.VMEM((qc, Dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)

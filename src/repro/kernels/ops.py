@@ -1,0 +1,45 @@
+"""Jit'd public wrappers around the Pallas kernels with automatic fallback
+to the pure-jnp reference path (2D fields, or non-TPU backends where
+interpret-mode would be slower than XLA's fused stencils)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .extrema import extrema_masks_pallas
+from .fixpass import fix_pass_pallas
+from .lorenzo import lorenzo_quant_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def extrema_masks(g, M_f, m_f, is_max_f, is_min_f, use_pallas: bool = False):
+    if use_pallas and g.ndim == 3:
+        return extrema_masks_pallas(g, M_f, m_f, is_max_f, is_min_f,
+                                    interpret=not _on_tpu())
+    return ref.extrema_masks_ref(g, M_f, m_f, is_max_f, is_min_f)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def fix_pass(g, lower, self_edit, demote_src, promote_src, up_code_g,
+             dn_code_f, use_pallas: bool = False):
+    if use_pallas and g.ndim == 3:
+        g2, viol = fix_pass_pallas(g, lower, self_edit, demote_src,
+                                   promote_src, up_code_g, dn_code_f,
+                                   interpret=not _on_tpu())
+        return g2, jnp.sum(viol)
+    return ref.fix_pass_ref(g, lower, self_edit, demote_src, promote_src,
+                            up_code_g, dn_code_f)
+
+
+@functools.partial(jax.jit, static_argnames=("step", "use_pallas"))
+def lorenzo_quant(f, step: float, use_pallas: bool = False):
+    if use_pallas and f.ndim == 3:
+        return lorenzo_quant_pallas(f, step, interpret=not _on_tpu())
+    return ref.lorenzo_quant_ref(f, step)

@@ -1,0 +1,313 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: .lower().compile() every (architecture x input shape)
+on the production meshes, prove memory fits, and extract the roofline terms
+(FLOPs / bytes / collective bytes) from the compiled artifact.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-135m \
+      --shape train_4k --multi-pod
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out experiments/dryrun
+
+The 512 placeholder host devices exist ONLY here (the env var above must
+precede any jax import); smoke tests and benchmarks see 1 device.
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import ARCH_IDS, get_config
+from ..models import forward as model_forward
+from ..models.config import SHAPES, ArchConfig, ShapeConfig, shape_by_name
+from ..serve import make_serve_step
+from ..train import (AdamWConfig, TrainState, TrainStepConfig,
+                     make_train_step)
+from . import specs as S
+from .mesh import make_production_mesh
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "s32": 4,
+                "u64": 8, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "c64": 8, "c128": 16}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# archs that cannot serve a 524288-token dense-attention context; the shape
+# is defined for sub-quadratic families (see DESIGN.md §4)
+FULL_ATTENTION_ARCHS = {
+    "llava_next_34b", "grok_1_314b", "qwen3_moe_235b_a22b",
+    "deepseek_coder_33b", "smollm_135m", "granite_8b", "gemma2_9b",
+    "whisper_base",
+}
+
+
+def cell_is_applicable(arch: str, shape: ShapeConfig) -> tuple[bool, str]:
+    if shape.name == "long_500k" and arch in FULL_ATTENTION_ARCHS:
+        return False, ("skipped: long_500k requires sub-quadratic decode; "
+                       f"{arch} is full-attention (DESIGN.md §4)")
+    return True, ""
+
+
+def _shape_bytes(txt: str) -> int:
+    """Total bytes of every typed shape literal in an HLO snippet."""
+    total = 0
+    for m in re.finditer(r"(f64|f32|f16|bf16|s64|s32|s16|s8|u64|u32|u16|u8|"
+                         r"pred|c64|c128)\[([0-9,]*)\]", txt):
+        dt, dims = m.groups()
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Sum operand bytes of every collective op in optimized HLO.
+
+    Tracks which computation each op lives in: ops inside non-ENTRY
+    computations (scan/while bodies) execute once per trip, but
+    cost/byte analysis sees them once — `body_bytes` lets the roofline
+    apply the known trip count (= layer count) as a correction factor.
+    Matches async (-start) variants too."""
+    stats = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
+    entry_bytes = 0
+    body_bytes = 0
+    in_entry = False
+    pat = re.compile(r"%?[\w.-]+\s*=\s*(\(?[^=]*?)\s*("
+                     + "|".join(_COLLECTIVES) + r")(?:-start)?\(")
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if stripped.startswith("ENTRY "):
+            in_entry = True
+            continue
+        if re.match(r"^%?[\w.-]+\s*\([%\w]", stripped) and stripped.endswith("{"):
+            in_entry = False
+            continue
+        m = pat.match(stripped)
+        if not m:
+            continue
+        result_txt, kind = m.groups()
+        call = stripped[m.end() - 1:]
+        operand_txt = call.split("), ")[0] if ")" in call else call
+        op_bytes = _shape_bytes(operand_txt)
+        res_bytes = _shape_bytes(result_txt)
+        b = max(op_bytes, res_bytes)
+        stats[kind]["count"] += 1
+        stats[kind]["bytes"] += b
+        if in_entry:
+            entry_bytes += b
+        else:
+            body_bytes += b
+    stats["total_bytes"] = sum(v["bytes"] for k, v in stats.items()
+                               if isinstance(v, dict))
+    stats["total_count"] = sum(v["count"] for k, v in stats.items()
+                               if isinstance(v, dict))
+    stats["entry_bytes"] = entry_bytes
+    stats["body_bytes"] = body_bytes
+    return stats
+
+
+def _needs_fsdp(cfg: ArchConfig, mesh) -> bool:
+    tp = S.mesh_shape_dict(mesh).get("model", 1)
+    per_dev_gb = cfg.n_params() * 2 / tp / 2**30
+    return per_dev_gb > 4.0
+
+
+def build_train_lowered(cfg: ArchConfig, shape: ShapeConfig, mesh,
+                        tcfg: TrainStepConfig | None = None):
+    from ..train import adamw_init
+    ms = S.mesh_shape_dict(mesh)
+    n_pods = ms.get("pod", 1)
+    grad_compress = (os.environ.get("REPRO_GRAD_COMPRESS", "0") == "1"
+                     and n_pods > 1)
+    tcfg = tcfg or TrainStepConfig(
+        remat=True, n_microbatches=1,
+        grad_compress=grad_compress,
+        grad_compress_bits=int(os.environ.get("REPRO_GC_BITS", "16")),
+        n_pods=n_pods)
+    opt_cfg = AdamWConfig()
+    step_fn = make_train_step(cfg, tcfg, opt_cfg)
+
+    fsdp = _needs_fsdp(cfg, mesh)
+    p_shard = S.param_shardings(cfg, mesh, zero1=fsdp,
+                                data_only=tcfg.grad_compress,
+                                replicate_embed=tcfg.grad_compress)
+    o_shard = S.opt_state_shardings(cfg, mesh, zero1=True)
+    batch_sds = S.batch_spec(cfg, shape, mesh)
+    b_shard = S.batch_shardings(batch_sds, cfg, mesh)
+
+    pstructs = S.param_structs(cfg)
+    ostructs = jax.eval_shape(adamw_init, pstructs)
+    state_sds = TrainState(params=pstructs, opt=ostructs)
+    state_shard = TrainState(params=p_shard, opt=o_shard)
+
+    jitted = jax.jit(step_fn,
+                     in_shardings=(state_shard, b_shard),
+                     out_shardings=(state_shard, None),
+                     donate_argnums=(0,))
+    with jax.set_mesh(mesh):
+        lowered = jitted.lower(state_sds, batch_sds)
+    return lowered, {"fsdp": fsdp}
+
+
+def build_prefill_lowered(cfg: ArchConfig, shape: ShapeConfig, mesh):
+    def prefill_step(params, batch):
+        out = model_forward(cfg, params, batch, logits_mode="last",
+                            return_cache=True)
+        kv = out.cache.get("kv") if isinstance(out.cache, dict) else None
+        return out.logits, kv
+
+    p_shard = S.param_shardings(cfg, mesh, zero1=_needs_fsdp(cfg, mesh))
+    batch_sds = S.batch_spec(cfg, shape, mesh)
+    b_shard = S.batch_shardings(batch_sds, cfg, mesh)
+    jitted = jax.jit(prefill_step, in_shardings=(p_shard, b_shard),
+                     out_shardings=None)
+    with jax.set_mesh(mesh):
+        lowered = jitted.lower(S.param_structs(cfg), batch_sds)
+    return lowered, {}
+
+
+def build_serve_lowered(cfg: ArchConfig, shape: ShapeConfig, mesh):
+    serve = make_serve_step(cfg)
+    p_shard = S.param_shardings(cfg, mesh, zero1=False)
+    c_sds = S.cache_structs(cfg, shape)
+    c_shard = S.cache_shardings(cfg, shape, mesh)
+    batch_sds = S.batch_spec(cfg, shape, mesh)
+    b_shard = S.batch_shardings(batch_sds, cfg, mesh)
+    t_sds = jax.ShapeDtypeStruct((), jnp.int32)
+    jitted = jax.jit(serve,
+                     in_shardings=(p_shard, c_shard, b_shard["tokens"], None),
+                     out_shardings=(b_shard["tokens"], None, c_shard),
+                     donate_argnums=(1,))
+    with jax.set_mesh(mesh):
+        lowered = jitted.lower(S.param_structs(cfg), c_sds,
+                               batch_sds["tokens"], t_sds)
+    return lowered, {}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             hlo_dir: Path | None = None) -> dict:
+    from ..models import layers as _layers
+    _layers.MOE_EP_MODE = os.environ.get("REPRO_MOE_EP", "0") == "1"
+    cfg = get_config(arch)
+    shape = shape_by_name(shape_name)
+    ok, why = cell_is_applicable(arch, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "status": "skipped", "reason": why}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    try:
+        if shape.kind == "train":
+            lowered, extra = build_train_lowered(cfg, shape, mesh)
+        elif shape.kind == "prefill":
+            lowered, extra = build_prefill_lowered(cfg, shape, mesh)
+        else:
+            lowered, extra = build_serve_lowered(cfg, shape, mesh)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        coll = collective_stats(hlo)
+        if hlo_dir is not None:
+            hlo_dir.mkdir(parents=True, exist_ok=True)
+            pod_tag = "pod2" if multi_pod else "pod1"
+            (hlo_dir / f"{arch}__{shape_name}__{pod_tag}.hlo.txt"
+             ).write_text(hlo[:available_hlo_budget()])
+        result = {
+            "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+            "status": "ok", "t_lower_s": round(t_lower, 1),
+            "t_compile_s": round(t_compile, 1),
+            "memory": {
+                "argument_size_gb": _gb(getattr(mem, "argument_size_in_bytes", 0)),
+                "output_size_gb": _gb(getattr(mem, "output_size_in_bytes", 0)),
+                "temp_size_gb": _gb(getattr(mem, "temp_size_in_bytes", 0)),
+                "peak_gb": _gb(getattr(mem, "peak_memory_in_bytes",
+                                       getattr(mem, "temp_size_in_bytes", 0))),
+            },
+            "cost": {
+                "flops": cost.get("flops", -1.0),
+                "bytes_accessed": cost.get("bytes accessed", -1.0),
+            },
+            "collectives": coll,
+            **extra,
+        }
+        return result
+    except Exception as e:
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "status": "error", "error": f"{type(e).__name__}: {e}",
+                "trace": traceback.format_exc()[-2000:]}
+
+
+def available_hlo_budget() -> int:
+    return 4_000_000
+
+
+def _gb(x) -> float:
+    try:
+        return round(float(x) / 2**30, 3)
+    except (TypeError, ValueError):
+        return -1.0
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    out = Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+    hlo_dir = out / "hlo" if args.save_hlo else None
+
+    cells = []
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = [s.name for s in SHAPES] if (args.all or not args.shape) \
+        else [args.shape]
+    meshes = [False, True] if (args.both_meshes or args.all) else \
+        [args.multi_pod]
+    for arch in archs:
+        for sh in shapes:
+            for mp in meshes:
+                cells.append((arch, sh, mp))
+
+    for arch, sh, mp in cells:
+        tag = f"{arch}__{sh}__{'pod2' if mp else 'pod1'}"
+        fn = out / f"{tag}.json"
+        if fn.exists() and not args.force:
+            print(f"[cached] {tag}")
+            continue
+        print(f"[run] {tag} ...", flush=True)
+        res = run_cell(arch, sh, mp, hlo_dir)
+        fn.write_text(json.dumps(res, indent=1))
+        status = res["status"]
+        extra = ""
+        if status == "ok":
+            extra = (f" compile={res['t_compile_s']}s "
+                     f"flops={res['cost']['flops']:.3g} "
+                     f"coll={res['collectives']['total_bytes']:.3g}B")
+        elif status == "error":
+            extra = " " + res["error"][:200]
+        print(f"[{status}] {tag}{extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

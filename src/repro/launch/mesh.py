@@ -1,0 +1,22 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this
+module never touches jax device state."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """16x16 = 256 chips per pod; multi_pod stacks 2 pods = 512 chips.
+    Axes: (data, model) single-pod; (pod, data, model) multi-pod. Requires
+    enough (possibly host-platform placeholder) devices — see dryrun.py."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh() -> jax.sharding.Mesh:
+    """Degenerate 1x1 mesh over the local device — used by the CPU examples
+    so the same pjit code paths run everywhere."""
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,178 @@
+"""Dry-run input specs: ShapeDtypeStruct stand-ins for every model input
+(weak-type-correct, shardable, zero allocation) plus the PartitionSpec
+trees that shard them onto the production mesh."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..models import (init_decode_cache, init_params, MeshAxes,
+                      axes_for_mesh, mesh_shape_dict, tree_param_specs)
+from ..models.sharding import MeshAxes  # noqa: F811 (explicit re-export)
+from ..models.config import ArchConfig, ShapeConfig
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _dp_degree(mesh) -> int:
+    ms = mesh_shape_dict(mesh)
+    return int(np.prod([v for k, v in ms.items() if k in ("pod", "data")]))
+
+
+def batch_spec(cfg: ArchConfig, shape: ShapeConfig, mesh) -> Dict[str, Any]:
+    """ShapeDtypeStructs for one global batch of this (arch x shape)."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        return {"tokens": SDS((B, 1), jnp.int32)}
+    batch: Dict[str, Any] = {}
+    s_text = S
+    if cfg.n_img_tokens:
+        s_text = S - cfg.n_img_tokens
+        batch["image_embeds"] = SDS((B, cfg.n_img_tokens, cfg.d_model),
+                                    jnp.bfloat16)
+    if cfg.enc_dec:
+        batch["frames"] = SDS((B, cfg.enc_positions, cfg.d_model),
+                              jnp.bfloat16)
+    batch["tokens"] = SDS((B, s_text), jnp.int32)
+    if shape.kind == "train":
+        batch["labels"] = SDS((B, s_text), jnp.int32)
+    return batch
+
+
+def _auto_spec(shape: Tuple[int, ...], ax: MeshAxes, ms: dict,
+               batch_dim: Optional[int]) -> P:
+    """Shard batch_dim over dp when divisible; then the largest remaining
+    dim divisible by tp over model."""
+    dp = int(np.prod([ms.get(a, 1) for a in ax.batch]))
+    tp = ms.get(ax.model, 1)
+    spec: list = [None] * len(shape)
+    if batch_dim is not None and shape[batch_dim] % dp == 0 and shape[batch_dim] >= dp:
+        spec[batch_dim] = ax.batch if len(ax.batch) > 1 else ax.batch[0]
+    cands = [(s, i) for i, s in enumerate(shape)
+             if i != batch_dim and s % tp == 0 and s >= tp]
+    if cands:
+        _, i = max(cands)
+        spec[i] = ax.model
+    return P(*spec)
+
+
+def batch_shardings(batch_sds, cfg: ArchConfig, mesh) -> Any:
+    ax = axes_for_mesh(mesh)
+    ms = mesh_shape_dict(mesh)
+    dp = _dp_degree(mesh)
+
+    def spec_of(sds):
+        nd = len(sds.shape)
+        s: list = [None] * nd
+        if sds.shape[0] % dp == 0 and sds.shape[0] >= dp:
+            s[0] = ax.batch if len(ax.batch) > 1 else ax.batch[0]
+        return NamedSharding(mesh, P(*s))
+    return jax.tree.map(spec_of, batch_sds)
+
+
+def param_structs(cfg: ArchConfig) -> Any:
+    """Abstract (no-allocation) parameter pytree via eval_shape."""
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def param_shardings(cfg: ArchConfig, mesh, zero1: bool = False,
+                    data_only: bool = False,
+                    replicate_embed: bool = False) -> Any:
+    """data_only: exclude the pod axis from FSDP/ZeRO specs (required when
+    the pod axis is manual, e.g. compressed cross-pod gradient sync).
+    replicate_embed: keep the embedding table unsharded — works around an
+    XLA SPMD CHECK-crash partitioning the vocab-sharded gather inside a
+    manual(pod) region (EXPERIMENTS.md §Perf-3)."""
+    ax = axes_for_mesh(mesh)
+    if data_only:
+        ax = MeshAxes(batch=("data",), model=ax.model)
+    ms = mesh_shape_dict(mesh)
+    shapes = param_structs(cfg)
+    specs = tree_param_specs(shapes, ax, ms, zero1=zero1)
+    if replicate_embed:
+        specs = dict(specs)
+        specs["embed"] = jax.sharding.PartitionSpec(
+            *([None] * len(shapes["embed"].shape)))
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
+
+
+def cache_structs(cfg: ArchConfig, shape: ShapeConfig) -> Any:
+    B, S = shape.global_batch, shape.seq_len
+    return jax.eval_shape(lambda: init_decode_cache(cfg, B, S))
+
+
+def cache_shardings(cfg: ArchConfig, shape: ShapeConfig, mesh) -> Any:
+    ax = axes_for_mesh(mesh)
+    ms = mesh_shape_dict(mesh)
+    structs = cache_structs(cfg, shape)
+
+    def spec_of_path(path, sds):
+        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        nd = len(sds.shape)
+        tp = ms.get(ax.model, 1)
+        # mLSTM matrix memory (.., B, H, D_out, D_in): shard D_out (the
+        # contraction OUTPUT of C·q) over model — sharding D_in makes the
+        # per-step einsum a sharded contraction and forces an involuntary
+        # full rematerialization of the state every token (§Perf-2).
+        dp = int(np.prod([ms.get(a, 1) for a in ax.batch]))
+        dspec = ax.batch if len(ax.batch) > 1 else ax.batch[0]
+        if "mlstm_C" in name:
+            # (G, per, B, H, D_out, D_in): B over data, D_out over model;
+            # D_in (k side) replicated — the per-step readout is then local
+            spec = [None] * nd
+            if sds.shape[nd - 4] % dp == 0 and sds.shape[nd - 4] >= dp:
+                spec[nd - 4] = dspec
+            if sds.shape[-2] % tp == 0:
+                spec[-2] = ax.model
+            return NamedSharding(mesh, P(*spec))
+        if "mlstm_n" in name or "slstm" in name:
+            # batch-sharded, feature dims replicated (k is replicated)
+            spec = [None] * nd
+            bdim = nd - 3
+            if sds.shape[bdim] % dp == 0 and sds.shape[bdim] >= dp:
+                spec[bdim] = dspec
+            return NamedSharding(mesh, P(*spec))
+        # rank>=4 KV caches: (L,B,T,Hk,Dh) or (B,T,Hk,Dh): batch then T
+        if name.endswith(("k", "v")) and nd >= 4:
+            bdim = nd - 4
+            spec = _auto_spec(sds.shape, ax, ms, bdim)
+            return NamedSharding(mesh, spec)
+        if "enc_out" in name:
+            return NamedSharding(mesh, _auto_spec(sds.shape, ax, ms, 0))
+        # recurrent states: (..., B, H, N/D, D): batch dim is nd-4 for
+        # mlstm_C (G,per,B,H,D,D) -> 2 ... find by size match
+        bdim = None
+        for i, s in enumerate(sds.shape):
+            if s == shape.global_batch:
+                bdim = i
+                break
+        return NamedSharding(mesh, _auto_spec(sds.shape, ax, ms, bdim))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(structs)
+    out = [spec_of_path(p, l) for p, l in flat]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def opt_state_structs(cfg: ArchConfig) -> Any:
+    from ..train import adamw_init
+    shapes = param_structs(cfg)
+    return jax.eval_shape(adamw_init, shapes)
+
+
+def opt_state_shardings(cfg: ArchConfig, mesh, zero1: bool = True) -> Any:
+    """ZeRO-1: optimizer moments additionally sharded over the data axes."""
+    from ..train import AdamWState
+    ax = axes_for_mesh(mesh)
+    ms = mesh_shape_dict(mesh)
+    shapes = param_structs(cfg)
+    mspecs = tree_param_specs(shapes, ax, ms, zero1=zero1)
+    to_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), mspecs)
+    return AdamWState(
+        step=NamedSharding(mesh, P()),
+        m=to_shard, v=jax.tree.map(lambda s: s, to_shard))

@@ -1,0 +1,16 @@
+"""repro.models — composable pure-JAX model zoo for the 10 assigned
+architectures (dense GQA / MoE / local-global / VLM / enc-dec audio /
+xLSTM / hybrid attention+SSM)."""
+from .config import ArchConfig, MoEConfig, ShapeConfig, SHAPES, shape_by_name
+from .model import (init_params, forward, decode_step, init_decode_cache,
+                    window_schedule, ForwardOut)
+from .sharding import (MeshAxes, axes_for_mesh, tree_param_specs,
+                       mesh_shape_dict, constrain, param_spec)
+
+__all__ = [
+    "ArchConfig", "MoEConfig", "ShapeConfig", "SHAPES", "shape_by_name",
+    "init_params", "forward", "decode_step", "init_decode_cache",
+    "window_schedule", "ForwardOut",
+    "MeshAxes", "axes_for_mesh", "tree_param_specs", "mesh_shape_dict",
+    "constrain", "param_spec",
+]

@@ -1,0 +1,120 @@
+"""Per-layer block forwards for the uniform transformer families
+(dense / MoE / gemma2-style local-global / llava backbone / whisper).
+
+Every function takes the layer's param dict and returns the residual
+stream. `window` may be a traced per-layer scalar: a huge value (2**30)
+means global attention, enabling heterogeneous local/global patterns
+inside a homogeneous lax.scan."""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+from .config import ArchConfig
+
+GLOBAL_WINDOW = 1 << 30
+
+
+class AttnOut(NamedTuple):
+    y: jnp.ndarray
+    k: jnp.ndarray
+    v: jnp.ndarray
+
+
+def _qkv(cfg: ArchConfig, p, x, positions):
+    B, S, _ = x.shape
+    H, Hk, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"]).reshape(B, S, H, Dh)
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"]).reshape(B, S, Hk, Dh)
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"]).reshape(B, S, Hk, Dh)
+    q = layers.rope(q, positions, cfg.rope_theta)
+    k = layers.rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attention_block(cfg: ArchConfig, p, x, positions, *, window=None,
+                    causal=True, q_offset=0) -> AttnOut:
+    """Pre-norm attention with optional gemma2-style post-norm."""
+    h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+    q, k, v = _qkv(cfg, p, h, positions)
+    y = layers.flash_attention(
+        q, k, v, causal=causal, window=window,
+        logit_softcap=cfg.attn_softcap, q_offset=q_offset)
+    y = jnp.einsum("bsh,hd->bsd",
+                   y.reshape(y.shape[0], y.shape[1], -1), p["wo"])
+    if "ln1_post" in p:
+        y = layers.rms_norm(y, p["ln1_post"], cfg.norm_eps)
+    return AttnOut(x + y, k, v)
+
+
+def attention_decode(cfg: ArchConfig, p, x, k_cache, v_cache, t, *,
+                     window=None):
+    """One-token attention; returns (residual, new_k_cache, new_v_cache)."""
+    B = x.shape[0]
+    H, Hk, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+    positions = jnp.full((B, 1), t, jnp.int32)
+    q, k, v = _qkv(cfg, p, h, positions)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k.astype(k_cache.dtype), t, 1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v.astype(v_cache.dtype), t, 1)
+    y = layers.decode_attention(q, k_cache, v_cache, t + 1, window=window,
+                                logit_softcap=cfg.attn_softcap)
+    y = jnp.einsum("bsh,hd->bsd", y.reshape(B, 1, -1), p["wo"])
+    if "ln1_post" in p:
+        y = layers.rms_norm(y, p["ln1_post"], cfg.norm_eps)
+    return x + y, k_cache, v_cache
+
+
+def ffn_block(cfg: ArchConfig, p, x) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Dense SwiGLU or MoE; returns (residual, aux_loss)."""
+    h = layers.rms_norm(x, p["ln2"], cfg.norm_eps)
+    if cfg.moe is not None:
+        moe_impl = layers.moe_ffn_ep if layers.MOE_EP_MODE else layers.moe_ffn
+        out = moe_impl(
+            h, {"router": p["router"], "w_gate": p["moe_w_gate"],
+                "w_up": p["moe_w_up"], "w_down": p["moe_w_down"]},
+            cfg.moe.n_experts, cfg.moe.top_k, cfg.moe.capacity_factor)
+        y, aux = out.y, out.aux_loss
+    else:
+        y = layers.swiglu(h, p["w_gate"], p["w_up"], p["w_down"])
+        aux = jnp.zeros((), jnp.float32)
+    if "ln2_post" in p:
+        y = layers.rms_norm(y, p["ln2_post"], cfg.norm_eps)
+    return x + y, aux
+
+
+# --- whisper (enc-dec) ------------------------------------------------------
+
+def gelu_mlp(p, x, eps):
+    h = layers.rms_norm(x, p["ln2"], eps)
+    u = jnp.einsum("bsd,df->bsf", h, p["w1"])
+    u = jax.nn.gelu(u.astype(jnp.float32)).astype(x.dtype)
+    return x + jnp.einsum("bsf,fd->bsd", u, p["w2"])
+
+
+def whisper_encoder_block(cfg: ArchConfig, p, x):
+    a = attention_block(cfg, p, x,
+                        positions=jnp.zeros(x.shape[:2], jnp.int32),
+                        causal=False)
+    return gelu_mlp(p, a.y, cfg.norm_eps)
+
+
+def cross_attention(cfg: ArchConfig, p, x, enc_out):
+    B, S, _ = x.shape
+    Te = enc_out.shape[1]
+    H, Hk, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    h = layers.rms_norm(x, p["ln_x"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dh->bsh", h, p["wq_x"]).reshape(B, S, H, Dh)
+    k = jnp.einsum("bsd,dh->bsh", enc_out, p["wk_x"]).reshape(B, Te, Hk, Dh)
+    v = jnp.einsum("bsd,dh->bsh", enc_out, p["wv_x"]).reshape(B, Te, Hk, Dh)
+    y = layers.flash_attention(q, k, v, causal=False)
+    return x + jnp.einsum("bsh,hd->bsd", y.reshape(B, S, -1), p["wo_x"])
+
+
+def whisper_decoder_block(cfg: ArchConfig, p, x, enc_out, positions):
+    a = attention_block(cfg, p, x, positions, causal=True)
+    h = cross_attention(cfg, p, a.y, enc_out)
+    return gelu_mlp(p, h, cfg.norm_eps), a.k, a.v

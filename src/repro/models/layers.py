@@ -1,0 +1,627 @@
+"""Model building blocks (pure JAX, param dicts in, arrays out).
+
+Conventions:
+  * activations bf16 (cfg.dtype), reductions/softmax/norms in f32,
+  * params are plain dicts of jnp arrays,
+  * attention is flash-style chunked (never materializes S x T logits),
+  * MoE uses sort-based token dispatch with static capacity (no E x C
+    one-hot dispatch tensors),
+  * recurrent blocks (mLSTM, Mamba SSM) use chunkwise-parallel scans for
+    train/prefill and O(1) state updates for decode.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + w.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def softcap(x: jnp.ndarray, cap: Optional[float]) -> jnp.ndarray:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (B, S, H, D); positions: (B, S) int32."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq  # (B,S,half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x: jnp.ndarray, w_gate, w_up, w_down) -> jnp.ndarray:
+    g = jnp.einsum("bsd,df->bsf", x, w_gate)
+    u = jnp.einsum("bsd,df->bsf", x, w_up)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("bsf,fd->bsd", h, w_down)
+
+
+# ---------------------------------------------------------------------------
+# flash-style chunked attention (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _pick_chunk(n: int, target: int) -> int:
+    """Largest divisor of n that is <= target (n assumed power-of-two-ish)."""
+    c = min(n, target)
+    while n % c:
+        c -= 1
+    return max(c, 1)
+
+
+# Route plain-causal/full attention through the Pallas flash kernel
+# (repro.kernels.flash) instead of the jnp chunked path. Off by default:
+# on CPU the kernel runs in interpret mode (slower than XLA); enable on
+# TPU via env REPRO_PALLAS_ATTN=1 (read by the launchers).
+PALLAS_ATTENTION = False
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True,
+                    window: Optional[int] = None,
+                    logit_softcap: Optional[float] = None,
+                    q_offset: int = 0,
+                    q_chunk: int = 512, k_chunk: int = 1024) -> jnp.ndarray:
+    """Online-softmax attention with GQA, O(S * k_chunk) memory.
+
+    q: (B, S, H, D); k/v: (B, T, Hk, D). Returns (B, S, H, D).
+    ``window``: only attend to keys with q_pos - k_pos < window (local attn).
+    This jnp formulation is the oracle for the Pallas flash kernel
+    (repro.kernels.flash); XLA fuses it acceptably for the dry-run baseline.
+    """
+    if (PALLAS_ATTENTION and window is None and logit_softcap is None
+            and q_offset == 0 and q.shape[1] == k.shape[1]
+            and q.shape[1] % 128 == 0):
+        from ..kernels.flash import flash_attention_pallas
+        return flash_attention_pallas(
+            q, k, v, causal=causal, q_block=_pick_chunk(q.shape[1], 256),
+            k_block=_pick_chunk(k.shape[1], 256),
+            interpret=jax.default_backend() != "tpu")
+    B, S, H, D = q.shape
+    T, Hk = k.shape[1], k.shape[2]
+    G = H // Hk
+    qc = _pick_chunk(S, q_chunk)
+    kc = _pick_chunk(T, k_chunk)
+    nq, nk = S // qc, T // kc
+    scale = jnp.asarray(D ** -0.5, jnp.float32)
+
+    qr = q.reshape(B, nq, qc, Hk, G, D)
+    kr = k.reshape(B, nk, kc, Hk, D)
+    vr = v.reshape(B, nk, kc, Hk, D)
+
+    def q_block(iq, qb):
+        # qb: (B, qc, Hk, G, D)
+        q_pos = q_offset + iq * qc + jnp.arange(qc)
+
+        def kv_step(carry, ik):
+            m, l, acc = carry
+            kb = jax.lax.dynamic_index_in_dim(kr, ik, 1, keepdims=False)
+            vb = jax.lax.dynamic_index_in_dim(vr, ik, 1, keepdims=False)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qb, kb,
+                           preferred_element_type=jnp.float32) * scale
+            s = softcap(s, logit_softcap)
+            k_pos = ik * kc + jnp.arange(kc)
+            mask = jnp.ones((qc, kc), bool)
+            if causal:
+                mask &= q_pos[:, None] >= k_pos[None, :]
+            if window is not None:
+                mask &= (q_pos[:, None] - k_pos[None, :]) < window
+            s = jnp.where(mask[None, None, None], s, -jnp.inf)
+            m2 = jnp.maximum(m, jnp.max(s, axis=-1))
+            # guard fully-masked rows (m2 = -inf)
+            m_safe = jnp.where(jnp.isfinite(m2), m2, 0.0)
+            p = jnp.exp(s - m_safe[..., None])
+            p = jnp.where(mask[None, None, None], p, 0.0)
+            corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+            l2 = l * corr + jnp.sum(p, -1)
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(v.dtype), vb,
+                            preferred_element_type=jnp.float32)
+            acc2 = acc * corr[..., None] + pv
+            return (m2, l2, acc2), None
+
+        m0 = jnp.full((B, Hk, G, qc), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, Hk, G, qc), jnp.float32)
+        a0 = jnp.zeros((B, Hk, G, qc, D), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk))
+        out = acc / jnp.maximum(l[..., None], 1e-37)
+        # (B,Hk,G,qc,D) -> (B,qc,Hk,G,D)
+        return out.transpose(0, 3, 1, 2, 4)
+
+    blocks = jax.lax.map(lambda args: q_block(*args),
+                         (jnp.arange(nq), qr.transpose(1, 0, 2, 3, 4, 5)))
+    # blocks: (nq, B, qc, Hk, G, D)
+    out = blocks.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, H, D)
+    return out.astype(q.dtype)
+
+
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                     t: jnp.ndarray, *, window: Optional[int] = None,
+                     logit_softcap: Optional[float] = None) -> jnp.ndarray:
+    """Single-token attention against a (B, T, Hk, D) KV cache.
+
+    q: (B, 1, H, D); t: current position (number of valid cache entries).
+    Unchunked: the (B, H, T) logits are small and shard cleanly when the
+    cache's T dim is sharded over the model axis.
+    """
+    B, _, H, D = q.shape
+    T, Hk = k_cache.shape[1], k_cache.shape[2]
+    G = H // Hk
+    qr = q.reshape(B, Hk, G, D)
+    s = jnp.einsum("bhgd,bthd->bhgt", qr, k_cache,
+                   preferred_element_type=jnp.float32) * (D ** -0.5)
+    s = softcap(s, logit_softcap)
+    pos = jnp.arange(T)
+    mask = pos[None, None, None, :] < t
+    if window is not None:
+        mask &= pos[None, None, None, :] >= (t - window)
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgt,bthd->bhgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (sort-based dispatch, static capacity)
+# ---------------------------------------------------------------------------
+
+class MoEOut(NamedTuple):
+    y: jnp.ndarray
+    aux_loss: jnp.ndarray
+
+
+def _constrain_moe(x, *, expert_dim: int = None, token_dim: int = None):
+    """Pin MoE intermediate shardings (experts over model, tokens over the
+    data axes) so the partitioner never falls back to replicating the
+    dispatch buffers — unconstrained, that fallback costs an all-gather of
+    the full (E*cap, d) buffer per layer (see EXPERIMENTS.md §Perf-1)."""
+    from .sharding import ambient_axes, constrain, _dims_ok
+    from jax.sharding import PartitionSpec as P
+    ax = ambient_axes()
+    if ax is None:
+        return x
+    spec = [None] * x.ndim
+    if expert_dim is not None and _dims_ok(x, expert_dim, ax.model):
+        spec[expert_dim] = ax.model
+    if token_dim is not None and _dims_ok(x, token_dim, ax.batch):
+        spec[token_dim] = ax.batch if len(ax.batch) > 1 else ax.batch[0]
+    return constrain(x, P(*spec))
+
+
+def moe_ffn(x: jnp.ndarray, p: Params, n_experts: int, top_k: int,
+            capacity_factor: float = 1.25) -> MoEOut:
+    """Top-k MoE with sort-based dispatch.
+
+    x: (B, S, d). p: router (d, E), w_gate/w_up (E, d, ff), w_down (E, ff, d).
+    Tokens beyond an expert's static capacity are dropped (standard
+    GShard-style dropping); aux_loss is the load-balancing loss.
+    """
+    B, S, d = x.shape
+    N = B * S
+    E, K = n_experts, top_k
+    xf = x.reshape(N, d)
+    # NOTE: no sharding constraints here — annotating this data-dependent
+    # scatter was measured to INCREASE collective traffic (§Perf-1 iter 1,
+    # refuted); at scale use moe_ffn_ep, this path serves small token
+    # counts and single-host runs.
+    logits = jnp.einsum("nd,de->ne", xf, p["router"],
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, K)          # (N, K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, -1, keepdims=True), 1e-9)
+
+    # load-balance loss (Switch): E * sum_e f_e * P_e
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(expert_ids, E, dtype=jnp.float32), axis=1),
+        axis=0)
+    aux = jnp.asarray(E, jnp.float32) * jnp.sum(me * ce)
+
+    cap = int(np.ceil(N * K / E * capacity_factor / 8)) * 8
+
+    flat_e = expert_ids.reshape(-1)                          # (N*K,)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    group_start = jnp.searchsorted(sorted_e, jnp.arange(E))
+    pos_in_grp = jnp.arange(N * K) - group_start[sorted_e]
+    keep = pos_in_grp < cap
+    slot = jnp.where(keep, sorted_e * cap + pos_in_grp, E * cap)  # drop row
+    tok = order // K
+
+    buf = jnp.zeros((E * cap + 1, d), x.dtype).at[slot].set(xf[tok])
+    h_in = buf[:E * cap].reshape(E, cap, d)
+    g = jnp.einsum("ecd,edf->ecf", h_in, p["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", h_in, p["w_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    out_e = jnp.einsum("ecf,efd->ecd", h, p["w_down"]).reshape(E * cap, d)
+    out_e = jnp.concatenate([out_e, jnp.zeros((1, d), x.dtype)], 0)
+
+    gathered = out_e[slot]                                    # (N*K, d)
+    w = (gate_vals.reshape(-1)[order] * keep).astype(jnp.float32)
+    y = jnp.zeros((N, d), jnp.float32).at[tok].add(
+        gathered.astype(jnp.float32) * w[:, None])
+    return MoEOut(y.reshape(B, S, d).astype(x.dtype), aux)
+
+
+# --- expert-parallel MoE: shard_map + explicit all_to_all -------------------
+# Enabled via repro.models.layers.MOE_EP_MODE (env REPRO_MOE_EP=1 in the
+# launchers). The dense sort-based dispatch above is partitioner-hostile:
+# its data-dependent global scatter forces XLA SPMD to replicate the
+# (E*cap, d) buffers (measured: 85 GB all-gather per layer on qwen3 —
+# EXPERIMENTS.md §Perf-1). Here the token movement is exactly two
+# all_to_all ops over the model axis, the theoretical minimum for EP.
+
+MOE_EP_MODE = False
+
+
+def _moe_ep_body(xf, router, w_gate, w_up, w_down, *, E, K, m, tp, cap_send,
+                 cap_loc, data_axes):
+    """Per-(data,model)-shard body. xf: (N_loc, d) local tokens.
+    w_*: (E_virt_loc, d, ff/m) local virtual-expert weights. `m` = ff
+    slices per real expert (virtual experts let E < tp shard over model:
+    each slice computes a partial down-projection; the weighted
+    scatter-add combine sums the partials). Two a2a: tokens out, results
+    back."""
+    N_loc, d = xf.shape
+    E_virt = E * m
+    E_loc = E_virt // tp
+    K_eff = K * m
+    logits = jnp.einsum("nd,de->ne", xf, router,
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, K)            # (N_loc, K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, -1, keepdims=True), 1e-9)
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jnp.sum(jax.nn.one_hot(expert_ids, E, dtype=jnp.float32),
+                          axis=1), axis=0)
+    aux = jnp.asarray(E, jnp.float32) * jnp.sum(me * ce)
+
+    # virtualize: assignment (token, expert e) -> m copies (e*m + j)
+    virt = (expert_ids[..., None] * m
+            + jnp.arange(m, dtype=expert_ids.dtype))           # (N,K,m)
+    flat_e = virt.reshape(-1)                                  # (N*K*m,)
+    gate_rep = jnp.broadcast_to(gate_vals[..., None],
+                                virt.shape).reshape(-1)
+    dest = flat_e // E_loc                                     # model shard
+    order = jnp.argsort(dest, stable=True)
+    sorted_dest = dest[order]
+    start = jnp.searchsorted(sorted_dest, jnp.arange(tp))
+    pos = jnp.arange(N_loc * K_eff) - start[sorted_dest]
+    keep = pos < cap_send
+    slot = jnp.where(keep, sorted_dest * cap_send + pos, tp * cap_send)
+    tok = order // K_eff
+
+    send = jnp.zeros((tp * cap_send + 1, d), xf.dtype).at[slot].set(xf[tok])
+    send_eid = jnp.full((tp * cap_send + 1,), -1, jnp.int32).at[slot].set(
+        (flat_e % E_loc)[order].astype(jnp.int32))
+    send = send[:-1].reshape(tp, cap_send, d)
+    send_eid = send_eid[:-1].reshape(tp, cap_send)
+
+    recv = jax.lax.all_to_all(send, "model", split_axis=0, concat_axis=0,
+                              tiled=False)
+    recv_eid = jax.lax.all_to_all(send_eid, "model", 0, 0, tiled=False)
+    rx = recv.reshape(tp * cap_send, d)                        # local tokens
+    re = recv_eid.reshape(tp * cap_send)
+
+    # group received tokens by local expert (second, local dispatch);
+    # sort/search on the pad-corrected KEY (pads -> E_loc, sorted last) —
+    # searching the raw ids would binary-search a non-ascending array
+    key2 = jnp.where(re < 0, E_loc, re)
+    order2 = jnp.argsort(key2, stable=True)
+    sorted_key2 = key2[order2]
+    sorted_e2 = re[order2]
+    start2 = jnp.searchsorted(sorted_key2, jnp.arange(E_loc))
+    pos2 = jnp.arange(tp * cap_send) - start2[jnp.clip(sorted_e2, 0, E_loc - 1)]
+    keep2 = (pos2 < cap_loc) & (sorted_e2 >= 0)
+    slot2 = jnp.where(keep2, sorted_e2 * cap_loc + pos2, E_loc * cap_loc)
+
+    buf = jnp.zeros((E_loc * cap_loc + 1, d), xf.dtype).at[slot2].set(
+        rx[order2])
+    h_in = buf[:-1].reshape(E_loc, cap_loc, d)
+    g = jnp.einsum("ecd,edf->ecf", h_in, w_gate)
+    u = jnp.einsum("ecd,edf->ecf", h_in, w_up)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(xf.dtype) * u
+    out_e = jnp.einsum("ecf,efd->ecd", h, w_down).reshape(-1, d)
+    out_e = jnp.concatenate([out_e, jnp.zeros((1, d), xf.dtype)], 0)
+
+    # un-group, a2a back, combine
+    back = jnp.zeros((tp * cap_send, d), xf.dtype).at[order2].set(
+        out_e[slot2] * keep2[:, None])
+    back = jax.lax.all_to_all(back.reshape(tp, cap_send, d), "model",
+                              0, 0, tiled=False)
+    flat_back = back.reshape(tp * cap_send, d)
+
+    gathered = jnp.concatenate([flat_back,
+                                jnp.zeros((1, d), xf.dtype)], 0)[slot]
+    w = (gate_rep[order] * keep).astype(jnp.float32)
+    y = jnp.zeros((N_loc, d), jnp.float32).at[tok].add(
+        gathered.astype(jnp.float32) * w[:, None])
+    aux = jax.lax.pmean(aux, "model")
+    for a in data_axes:
+        aux = jax.lax.pmean(aux, a)
+    return y.astype(xf.dtype), aux
+
+
+def moe_ffn_ep(x: jnp.ndarray, p: Params, n_experts: int, top_k: int,
+               capacity_factor: float = 1.25) -> MoEOut:
+    """Expert-parallel MoE: manual over (data, model), experts sharded over
+    model, token movement = exactly two all_to_all. E < tp is handled by
+    ff-sliced virtual experts (m = tp/gcd(E,tp) slices per expert).
+    Falls back to the dense moe_ffn without an ambient mesh."""
+    import math
+    from jax.sharding import PartitionSpec as P
+    from .sharding import ambient_axes
+    ax = ambient_axes()
+    if ax is None:
+        return moe_ffn(x, p, n_experts, top_k, capacity_factor)
+    am = jax.sharding.get_abstract_mesh()
+    sizes = dict(zip(am.axis_names, am.axis_sizes))
+    tp = sizes.get("model", 1)
+    dp = int(np.prod([sizes.get(a, 1) for a in ax.batch]))
+
+    B, S, d = x.shape
+    E, K = n_experts, top_k
+    ff = p["w_gate"].shape[-1]
+    m = tp // math.gcd(E, tp)
+    if ff % m or (E * m) % tp or (B * S) % dp:
+        return moe_ffn(x, p, n_experts, top_k, capacity_factor)
+    if B * S <= 4096:
+        # decode-shaped calls: too few tokens to amortize the a2a (and the
+        # virtual-expert weight reshape would reshard weights every step);
+        # the dense dispatch is cheap at this size (§Perf-1/3)
+        return moe_ffn(x, p, n_experts, top_k, capacity_factor)
+
+    def virt3(w):                       # (E, d, ff) -> (E*m, d, ff/m)
+        Ew, dw, fw = w.shape
+        return (w.reshape(Ew, dw, m, fw // m).transpose(0, 2, 1, 3)
+                .reshape(Ew * m, dw, fw // m))
+
+    def virt_down(w):                   # (E, ff, d) -> (E*m, ff/m, d)
+        Ew, fw, dw = w.shape
+        return (w.reshape(Ew, m, fw // m, dw).reshape(Ew * m, fw // m, dw))
+
+    wg, wu, wd = virt3(p["w_gate"]), virt3(p["w_up"]), virt_down(p["w_down"])
+
+    N = B * S
+    N_loc = N // dp
+    K_eff = K * m
+    cap_send = max(int(np.ceil(N_loc * K_eff / tp * capacity_factor / 8)) * 8,
+                   8)
+    # a shard receives <= tp*cap_send rows spread over its E_loc experts
+    E_loc = E * m // tp
+    cap_loc = max(int(np.ceil(tp * cap_send / E_loc
+                              * capacity_factor / 8)) * 8, 8)
+
+    manual = set(ax.batch) | {"model"}
+    dspec = ax.batch if len(ax.batch) > 1 else ax.batch[0]
+
+    def body(xf, router, wg_, wu_, wd_):
+        return _moe_ep_body(xf, router, wg_, wu_, wd_, E=E, K=K, m=m, tp=tp,
+                            cap_send=cap_send, cap_loc=cap_loc,
+                            data_axes=ax.batch)
+
+    y, aux = jax.shard_map(
+        body,
+        in_specs=(P(dspec, None), P(None, None),
+                  P("model", None, None), P("model", None, None),
+                  P("model", None, None)),
+        out_specs=(P(dspec, None), P()),
+        axis_names=manual, check_vma=False,
+    )(x.reshape(N, d), p["router"], wg, wu, wd)
+    return MoEOut(y.reshape(B, S, d), aux)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM) — chunkwise-parallel form + O(1) decode step
+# ---------------------------------------------------------------------------
+
+def mlstm_scan(q, k, v, log_f, log_i, chunk: int = 256):
+    """Chunkwise-parallel mLSTM (matrix memory; Beck et al. 2024).
+
+    q/k/v: (B, S, H, D); log_f/log_i: (B, S, H) (log forget in (-inf,0],
+    log input bounded by softcap upstream). Returns (B, S, H, D).
+    C_t = f_t C_{t-1} + i_t v_t k_t^T ;  n_t = f_t n_{t-1} + i_t k_t
+    h_t = C_t q_t / max(|n_t . q_t|, 1)
+    """
+    B, S, H, D = q.shape
+    L = _pick_chunk(S, chunk)
+    nC = S // L
+    scale = D ** -0.5
+
+    qr = q.reshape(B, nC, L, H, D).astype(jnp.float32) * scale
+    kr = k.reshape(B, nC, L, H, D).astype(jnp.float32)
+    vr = v.reshape(B, nC, L, H, D).astype(jnp.float32)
+    lf = log_f.reshape(B, nC, L, H).astype(jnp.float32)
+    li = log_i.reshape(B, nC, L, H).astype(jnp.float32)
+
+    LF = jnp.cumsum(lf, axis=2)                # decay chunk-start -> t
+    tot = LF[:, :, -1, :]                      # (B,nC,H) full-chunk decay
+
+    # intra-chunk weights: w[t,s] = exp(LF_t - LF_s + li_s), s <= t
+    wmat = LF[:, :, :, None, :] - LF[:, :, None, :, :] + li[:, :, None, :, :]
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    wmat = jnp.where(tri[None, None, :, :, None], jnp.exp(wmat), 0.0)
+
+    def chunk_step(carry, inp):
+        C, n = carry                            # (B,H,D,D), (B,H,D)
+        qc_, kc_, vc_, LFc, lic, wc, totc = inp
+        dec = jnp.exp(LFc)                      # (B,L,H)
+        h_inter = jnp.einsum("blh,bhde,blhe->blhd", dec, C, qc_)
+        n_inter = jnp.einsum("blh,bhd->blhd", dec, n)
+        qk = jnp.einsum("blhd,bmhd->blmh", qc_, kc_)
+        A = qk * wc                             # (B,L,M,H) decayed weights
+        h_intra = jnp.einsum("blmh,bmhd->blhd", A, vc_)
+        # normalizer: n_t . q_t = inter + sum_s w[t,s] (k_s . q_t)
+        denom_intra = jnp.sum(A, axis=2)        # (B,L,H)
+        denom = jnp.abs(jnp.einsum("blhd,blhd->blh", n_inter, qc_)
+                        + denom_intra)
+        h = (h_inter + h_intra) / jnp.maximum(denom, 1.0)[..., None]
+        # state update to end of chunk
+        wk = jnp.exp(totc[:, None, :] - LFc + lic)   # (B,L,H)
+        C2 = jnp.einsum("bh,bhde->bhde", jnp.exp(totc), C) + \
+             jnp.einsum("blh,blhd,blhe->bhde", wk, vc_, kc_)
+        n2 = jnp.einsum("bh,bhd->bhd", jnp.exp(totc), n) + \
+             jnp.einsum("blh,blhd->bhd", wk, kc_)
+        return (C2, n2), h
+
+    C0 = jnp.zeros((B, H, D, D), jnp.float32)
+    n0 = jnp.zeros((B, H, D), jnp.float32)
+    inputs = (qr.transpose(1, 0, 2, 3, 4), kr.transpose(1, 0, 2, 3, 4),
+              vr.transpose(1, 0, 2, 3, 4), LF.transpose(1, 0, 2, 3),
+              li.transpose(1, 0, 2, 3), wmat.transpose(1, 0, 2, 3, 4),
+              tot.transpose(1, 0, 2))
+    (_, _), hs = jax.lax.scan(chunk_step, (C0, n0), inputs)
+    # hs: (nC, B, L, H, D)
+    return hs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, D).astype(q.dtype)
+
+
+def mlstm_step(state, q, k, v, log_f, log_i):
+    """O(1) mLSTM decode step. state: (C (B,H,D,D) f32 or bf16, n (B,H,D)
+    f32); q/k/v: (B,1,H,D); log_f/log_i: (B,1,H). The C update is computed
+    in f32 and stored back in C's dtype (bf16 storage halves the dominant
+    decode memory traffic)."""
+    C, n = state
+    D = q.shape[-1]
+    qf = q[:, 0].astype(jnp.float32) * (D ** -0.5)
+    kf = k[:, 0].astype(jnp.float32)
+    vf = v[:, 0].astype(jnp.float32)
+    f = jnp.exp(log_f[:, 0].astype(jnp.float32))[..., None, None]
+    i = jnp.exp(log_i[:, 0].astype(jnp.float32))[..., None, None]
+    C2 = f * C.astype(jnp.float32) + i * jnp.einsum("bhd,bhe->bhde", vf, kf)
+    n2 = f[..., 0] * n + i[..., 0] * kf
+    num = jnp.einsum("bhde,bhe->bhd", C2, qf)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n2, qf)), 1.0)
+    h = (num / den[..., None])[:, None].astype(q.dtype)
+    return (C2.astype(C.dtype), n2), h
+
+
+# ---------------------------------------------------------------------------
+# sLSTM — stabilized scalar-memory recurrence (sequential scan)
+# ---------------------------------------------------------------------------
+
+def slstm_scan(zi, zf, zz, zo):
+    """zi/zf/zz/zo: (B, S, H, D) pre-activations. Stabilized sLSTM:
+    m_t = max(log_sig(zf) + m, zi); c,n in exp(. - m) domain."""
+    B, S, H, D = zz.shape
+
+    def step(carry, inp):
+        c, n, m = carry
+        zi_t, zf_t, zz_t, zo_t = inp
+        lf = jax.nn.log_sigmoid(zf_t.astype(jnp.float32))
+        li = zi_t.astype(jnp.float32)
+        m2 = jnp.maximum(lf + m, li)
+        c2 = jnp.exp(lf + m - m2) * c + jnp.exp(li - m2) * jnp.tanh(
+            zz_t.astype(jnp.float32))
+        n2 = jnp.exp(lf + m - m2) * n + jnp.exp(li - m2)
+        h = jax.nn.sigmoid(zo_t.astype(jnp.float32)) * c2 / jnp.maximum(n2, 1.0)
+        return (c2, n2, m2), h
+
+    init = (jnp.zeros((B, H, D), jnp.float32),
+            jnp.zeros((B, H, D), jnp.float32),
+            jnp.full((B, H, D), -1e30, jnp.float32))
+    xs = tuple(a.transpose(1, 0, 2, 3) for a in (zi, zf, zz, zo))
+    (_, _, _), hs = jax.lax.scan(step, init, xs)
+    return hs.transpose(1, 0, 2, 3).astype(zz.dtype)
+
+
+def slstm_step(state, zi, zf, zz, zo):
+    c, n, m = state
+    lf = jax.nn.log_sigmoid(zf[:, 0].astype(jnp.float32))
+    li = zi[:, 0].astype(jnp.float32)
+    m2 = jnp.maximum(lf + m, li)
+    c2 = jnp.exp(lf + m - m2) * c + jnp.exp(li - m2) * jnp.tanh(
+        zz[:, 0].astype(jnp.float32))
+    n2 = jnp.exp(lf + m - m2) * n + jnp.exp(li - m2)
+    h = jax.nn.sigmoid(zo[:, 0].astype(jnp.float32)) * c2 / jnp.maximum(n2, 1.0)
+    return (c2, n2, m2), h[:, None].astype(zz.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-style selective SSM (hymba's parallel-SSM heads)
+# ---------------------------------------------------------------------------
+
+def ssm_scan(x, delta, Bmat, Cmat, A_log, chunk: int = 256):
+    """Chunkwise diagonal selective SSM.
+
+    x: (B, S, H, D); delta: (B, S, H); Bmat/Cmat: (B, S, H, N);
+    A_log: (H, N) learned (A = -exp(A_log)).
+    state h: (B, H, N, D):  h_t = exp(delta_t A) h_{t-1} + delta_t B_t x_t^T
+    y_t = C_t . h_t
+    """
+    B, S, H, D = x.shape
+    N = Bmat.shape[-1]
+    L = _pick_chunk(S, chunk)
+    nC = S // L
+    A = -jnp.exp(A_log.astype(jnp.float32))                   # (H,N)
+    dt = jax.nn.softplus(delta.astype(jnp.float32))           # (B,S,H)
+    lg = dt[..., None] * A[None, None]                        # (B,S,H,N) log-decay
+    xB = dt[..., None] * Bmat.astype(jnp.float32)             # input weight
+
+    lgr = lg.reshape(B, nC, L, H, N)
+    xr = x.reshape(B, nC, L, H, D).astype(jnp.float32)
+    br = xB.reshape(B, nC, L, H, N)
+    cr = Cmat.reshape(B, nC, L, H, N).astype(jnp.float32)
+    LG = jnp.cumsum(lgr, axis=2)
+    tot = LG[:, :, -1]
+
+    # intra-chunk transfer w[t,s] = exp(LG_t - LG_s), s <= t  (B,L,M,H,N)
+    tri = jnp.tril(jnp.ones((L, L), bool))
+
+    def chunk_step(carry, inp):
+        h = carry                                              # (B,H,N,D)
+        xc, bc, cc, LGc, totc = inp
+        dec = jnp.exp(LGc)                                     # (B,L,H,N)
+        y_inter = jnp.einsum("blhn,bhnd->blhd", cc * dec, h)
+        wm = LGc[:, :, None] - LGc[:, None, :]                 # (B,L,M,H,N)
+        wm = jnp.where(tri[None, :, :, None, None], jnp.exp(wm), 0.0)
+        # y_intra[t] = sum_s C_t . (w[t,s] B_s) x_s
+        cb = jnp.einsum("blhn,blmhn,bmhn->blmh", cc, wm, bc)   # (B,L,M,H)
+        y_intra = jnp.einsum("blmh,bmhd->blhd", cb, xc)
+        y = y_inter + y_intra
+        wk = jnp.exp(totc[:, None] - LGc)                      # (B,L,H,N)
+        h2 = jnp.exp(totc)[..., None] * h + jnp.einsum(
+            "blhn,blhd->bhnd", wk * bc, xc)
+        return h2, y
+
+    h0 = jnp.zeros((B, H, N, D), jnp.float32)
+    inputs = (xr.transpose(1, 0, 2, 3, 4), br.transpose(1, 0, 2, 3, 4),
+              cr.transpose(1, 0, 2, 3, 4), LG.transpose(1, 0, 2, 3, 4),
+              tot.transpose(1, 0, 2, 3))
+    _, ys = jax.lax.scan(chunk_step, h0, inputs)
+    return ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H, D).astype(x.dtype)
+
+
+def ssm_step(h, x, delta, Bmat, Cmat, A_log):
+    """O(1) SSM decode step. h: (B,H,N,D); x/delta/Bmat/Cmat single-step."""
+    A = -jnp.exp(A_log.astype(jnp.float32))
+    dt = jax.nn.softplus(delta[:, 0].astype(jnp.float32))      # (B,H)
+    dec = jnp.exp(dt[..., None] * A[None])                     # (B,H,N)
+    xb = (dt[..., None] * Bmat[:, 0].astype(jnp.float32))      # (B,H,N)
+    h2 = dec[..., None] * h + jnp.einsum("bhn,bhd->bhnd", xb,
+                                         x[:, 0].astype(jnp.float32))
+    y = jnp.einsum("bhn,bhnd->bhd", Cmat[:, 0].astype(jnp.float32), h2)
+    return h2, y[:, None].astype(x.dtype)

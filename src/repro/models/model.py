@@ -1,0 +1,410 @@
+"""Model assembly: parameter init (eval_shape-safe), stacked-layer
+forwards (lax.scan for deep uniform stacks), prefill-with-cache, and
+single-token decode for every assigned architecture family."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import blocks, layers, recurrent
+from .blocks import GLOBAL_WINDOW
+from .config import ArchConfig
+from .sharding import constrain_batch, constrain_model_dim
+
+Params = Dict[str, Any]
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _norm_init(key, shape, dtype, scale):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def _layer_param_shapes(cfg: ArchConfig) -> Dict[str, Tuple[int, ...]]:
+    d, H, Hk, Dh, ff = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                        cfg.head_dim, cfg.d_ff)
+    p: Dict[str, Tuple[int, ...]] = {"ln1": (d,), "ln2": (d,)}
+    p.update(wq=(d, H * Dh), wk=(d, Hk * Dh), wv=(d, Hk * Dh),
+             wo=(H * Dh, d))
+    if cfg.local_global_period:           # gemma2 post-norms
+        p.update(ln1_post=(d,), ln2_post=(d,))
+    if cfg.moe is not None:
+        E = cfg.moe.n_experts
+        p.update(router=(d, E), moe_w_gate=(E, d, ff), moe_w_up=(E, d, ff),
+                 moe_w_down=(E, ff, d))
+    elif cfg.enc_dec:
+        p.update(w1=(d, ff), w2=(ff, d))   # whisper GELU MLP
+    else:
+        p.update(w_gate=(d, ff), w_up=(d, ff), w_down=(ff, d))
+    if cfg.family == "hybrid":
+        N = cfg.ssm_state
+        p.update(ssm_in=(d, H * Dh), ssm_dt=(d, H), ssm_B=(d, H * N),
+                 ssm_C=(d, H * N), A_log=(H, N),
+                 attn_norm=(H * Dh,), ssm_norm=(H * Dh,))
+    if cfg.enc_dec:                       # decoder cross-attention
+        p.update(ln_x=(d,), wq_x=(d, H * Dh), wk_x=(d, Hk * Dh),
+                 wv_x=(d, Hk * Dh), wo_x=(H * Dh, d))
+    return p
+
+
+def _mlstm_param_shapes(cfg: ArchConfig) -> Dict[str, Tuple[int, ...]]:
+    # Dh-major TP layout: q/k replicated, v and the down-projection shard
+    # on Dh so the matrix memory stays local per device (§Perf-2).
+    d, H = cfg.d_model, cfg.n_heads
+    Dh = d // H
+    return dict(ln1=(d,), wq3=(d, Dh, H), wk3=(d, Dh, H), wv3=(d, Dh, H),
+                w_z3=(d, Dh, H), w_if=(d, 2 * H), w_down3=(Dh, H, d))
+
+
+def _slstm_param_shapes(cfg: ArchConfig) -> Dict[str, Tuple[int, ...]]:
+    # four separate gate projections: a fused (d, 4d) weight would shard
+    # its output across gate boundaries and reshard on every split
+    d = cfg.d_model
+    return dict(ln1=(d,), w_zi=(d, d), w_zf=(d, d), w_zz=(d, d),
+                w_zo=(d, d), w_down=(d, d))
+
+
+def _init_group(key, shapes: Dict[str, Tuple[int, ...]], stack: Tuple[int, ...],
+                dtype, d_model: int):
+    out = {}
+    keys = jax.random.split(key, len(shapes))
+    for (name, shp), k in zip(sorted(shapes.items()), keys):
+        full = stack + shp
+        if len(shp) == 1 or name == "A_log":
+            if name == "A_log":
+                out[name] = jnp.broadcast_to(
+                    jnp.log(jnp.arange(1, shp[-1] + 1, dtype=jnp.float32)),
+                    full).astype(jnp.float32)
+            else:
+                out[name] = jnp.zeros(full, dtype)
+        else:
+            scale = (shp[0]) ** -0.5
+            out[name] = _norm_init(k, full, dtype, scale)
+    return out
+
+
+def init_params(cfg: ArchConfig, key: jax.Array) -> Params:
+    """Build the full parameter pytree. Pure-jax: usable under
+    jax.eval_shape for the allocation-free dry-run."""
+    dt = _dtype(cfg)
+    keys = jax.random.split(key, 8)
+    params: Params = {
+        "embed": _norm_init(keys[0], (cfg.vocab, cfg.d_model), dt, 0.02),
+        "final_norm": jnp.zeros((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = _norm_init(
+            keys[1], (cfg.d_model, cfg.vocab), dt, cfg.d_model ** -0.5)
+
+    if cfg.family == "ssm":               # xLSTM: groups of (m..m, s)
+        G, per = _xlstm_groups(cfg)
+        params["mlstm"] = _init_group(keys[2], _mlstm_param_shapes(cfg),
+                                      (G, per - 1), dt, cfg.d_model)
+        params["slstm"] = _init_group(keys[3], _slstm_param_shapes(cfg),
+                                      (G,), dt, cfg.d_model)
+    elif cfg.enc_dec:
+        enc_shapes = {k: v for k, v in _layer_param_shapes(cfg).items()
+                      if not k.endswith("_x")}
+        params["enc_blocks"] = _init_group(keys[2], enc_shapes,
+                                           (cfg.n_enc_layers,), dt, cfg.d_model)
+        params["blocks"] = _init_group(keys[3], _layer_param_shapes(cfg),
+                                       (cfg.n_layers,), dt, cfg.d_model)
+        params["enc_norm"] = jnp.zeros((cfg.d_model,), dt)
+        params["enc_pos"] = _norm_init(keys[4], (cfg.enc_positions,
+                                                 cfg.d_model), dt, 0.02)
+    else:
+        params["blocks"] = _init_group(keys[2], _layer_param_shapes(cfg),
+                                       (cfg.n_layers,), dt, cfg.d_model)
+    return params
+
+
+def _xlstm_groups(cfg: ArchConfig) -> Tuple[int, int]:
+    per = cfg.slstm_every if cfg.slstm_every else cfg.n_layers
+    if cfg.n_layers % per:
+        raise ValueError("n_layers must divide by slstm_every")
+    return cfg.n_layers // per, per
+
+
+def window_schedule(cfg: ArchConfig) -> np.ndarray:
+    """Per-layer attention window (GLOBAL_WINDOW = full attention)."""
+    L = cfg.n_layers
+    w = np.full((L,), GLOBAL_WINDOW, np.int32)
+    if cfg.local_global_period and cfg.sliding_window:
+        for i in range(L):                 # gemma2: local on even layers
+            if i % cfg.local_global_period == 0:
+                w[i] = cfg.sliding_window
+    elif cfg.family == "hybrid" and cfg.sliding_window:
+        w[:] = cfg.sliding_window          # hymba: SWA everywhere except
+        for i in (0, L // 2, L - 1):       # first / middle / last global
+            w[i] = GLOBAL_WINDOW
+    return w
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+class ForwardOut(NamedTuple):
+    logits: jnp.ndarray
+    aux_loss: jnp.ndarray
+    cache: Optional[Any]          # per-layer (k, v) or recurrent states
+
+
+def _embed_inputs(cfg: ArchConfig, params, batch):
+    dt = _dtype(cfg)
+    tok = batch["tokens"]
+    x = jnp.take(params["embed"], tok, axis=0).astype(dt)
+    if cfg.name.startswith("gemma"):
+        x = x * jnp.asarray(cfg.d_model ** 0.5, dt)
+    if cfg.n_img_tokens and "image_embeds" in batch:
+        img = batch["image_embeds"].astype(dt)
+        x = jnp.concatenate([img, x], axis=1)
+    return x
+
+
+def forward(cfg: ArchConfig, params: Params, batch: Dict[str, jnp.ndarray],
+            *, return_cache: bool = False, q_offset: int = 0,
+            logits_mode: str = "all") -> ForwardOut:
+    """Full-sequence forward. batch: tokens (B,S); llava adds image_embeds
+    (B,Ni,d); whisper adds frames (B,Te,d).
+
+    logits_mode: 'all' (train), 'last' (prefill: unembed only the final
+    position — avoids the (B,S,V) buffer), 'hidden' (return the final
+    hidden states in .logits; the caller computes chunked CE without ever
+    materializing full logits — see repro.train.step)."""
+    x = _embed_inputs(cfg, params, batch)
+    x = constrain_batch(x)
+    B, S, _ = x.shape
+    positions = q_offset + jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32),
+                                            (B, S))
+    aux_total = jnp.zeros((), jnp.float32)
+    cache = None
+
+    if cfg.family == "ssm":
+        x, cache = _xlstm_stack(cfg, params, x, return_cache)
+    elif cfg.enc_dec:
+        enc = batch["frames"].astype(x.dtype)
+        enc = enc + params["enc_pos"][None, :enc.shape[1]].astype(x.dtype)
+
+        def enc_step(h, lp):
+            return constrain_batch(
+                blocks.whisper_encoder_block(cfg, lp, h)), None
+        enc, _ = jax.lax.scan(enc_step, enc, params["enc_blocks"])
+        enc = layers.rms_norm(enc, params["enc_norm"], cfg.norm_eps)
+
+        def dec_step(h, lp):
+            h2, k, v = blocks.whisper_decoder_block(cfg, lp, constrain_batch(h),
+                                                    enc, positions)
+            return constrain_batch(h2), (k, v) if return_cache else None
+        x, kv = jax.lax.scan(dec_step, x, params["blocks"])
+        cache = {"kv": kv, "enc_out": enc} if return_cache else None
+    elif cfg.family == "hybrid":
+        x, cache = _hymba_stack(cfg, params, x, positions, return_cache,
+                                q_offset)
+    else:
+        wsched = jnp.asarray(window_schedule(cfg))
+
+        def step(h, inp):
+            lp, w = inp
+            h = constrain_batch(h)
+            a = blocks.attention_block(cfg, lp, h, positions, window=w,
+                                       q_offset=q_offset)
+            h2, aux = blocks.ffn_block(cfg, lp, a.y)
+            return constrain_batch(h2), ((a.k, a.v) if return_cache else None,
+                                         aux)
+
+        def step_wrap(carry, inp):
+            h, aux_acc = carry
+            h2, (kv, aux) = step(h, inp)
+            return (h2, aux_acc + aux), kv
+        (x, aux_total), kv = jax.lax.scan(
+            step_wrap, (x, aux_total), (params["blocks"], wsched))
+        cache = {"kv": kv} if return_cache else None
+
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if logits_mode == "hidden":
+        return ForwardOut(x, aux_total, cache)
+    if logits_mode == "last":
+        x = x[:, -1:]
+    unemb = params.get("unembed")
+    if unemb is None:
+        unemb = params["embed"].T
+    logits = jnp.einsum("bsd,dv->bsv", x, unemb,
+                        preferred_element_type=jnp.float32)
+    logits = constrain_batch(logits, extra_model_dim=2)
+    logits = layers.softcap(logits, cfg.final_softcap)
+    return ForwardOut(logits, aux_total, cache)
+
+
+def _xlstm_stack(cfg, params, x, return_cache):
+    G, per = _xlstm_groups(cfg)
+
+    def group_step(h, gp):
+        def m_step(hh, lp):
+            hh2 = recurrent.mlstm_block(cfg, lp, constrain_batch(hh))
+            return constrain_batch(hh2), None
+        h, _ = jax.lax.scan(m_step, h, gp["m"])
+        h = recurrent.slstm_block(cfg, gp["s"], h)
+        return constrain_batch(h), None
+
+    h, _ = jax.lax.scan(group_step, x,
+                        {"m": params["mlstm"], "s": params["slstm"]})
+    # prefill cache for SSM families is produced by `prefill` (needs final
+    # recurrent states, which the train scan does not thread out).
+    return h, None
+
+
+def _hymba_stack(cfg, params, x, positions, return_cache, q_offset):
+    wsched = jnp.asarray(window_schedule(cfg))
+
+    def step(h, inp):
+        lp, w = inp
+        h2, k, v = recurrent.hymba_block(cfg, lp, constrain_batch(h),
+                                         positions, window=w,
+                                         q_offset=q_offset)
+        return constrain_batch(h2), (k, v) if return_cache else None
+
+    x, kv = jax.lax.scan(step, x, (params["blocks"], wsched))
+    return x, ({"kv": kv} if return_cache else None)
+
+
+# ---------------------------------------------------------------------------
+# decode (single token, KV/state caches)
+# ---------------------------------------------------------------------------
+
+def init_decode_cache(cfg: ArchConfig, batch: int, max_len: int) -> Any:
+    """Allocate the decode cache pytree (called under eval_shape for the
+    dry-run; real serving allocates it once)."""
+    dt = _dtype(cfg)
+    Hk, Dh = cfg.n_kv_heads, cfg.head_dim
+    if cfg.family == "ssm":
+        G, per = _xlstm_groups(cfg)
+        H, D = cfg.n_heads, cfg.d_model // cfg.n_heads
+        return {
+            # C in bf16: halves the dominant decode memory term; the
+            # normalizer n and the sLSTM scalar states stay f32
+            # (EXPERIMENTS.md §Perf-2, iteration 5)
+            "mlstm_C": jnp.zeros((G, per - 1, batch, H, D, D), jnp.bfloat16),
+            "mlstm_n": jnp.zeros((G, per - 1, batch, H, D), jnp.float32),
+            "slstm_c": jnp.zeros((G, batch, H, D), jnp.float32),
+            "slstm_n": jnp.zeros((G, batch, H, D), jnp.float32),
+            "slstm_m": jnp.full((G, batch, H, D), -1e30, jnp.float32),
+        }
+    if cfg.family == "hybrid":
+        ws = window_schedule(cfg)
+        caches = []
+        H, N = cfg.n_heads, cfg.ssm_state
+        for w in ws:
+            T = int(min(int(w), max_len))
+            caches.append({
+                "k": jnp.zeros((batch, T, Hk, Dh), dt),
+                "v": jnp.zeros((batch, T, Hk, Dh), dt),
+                "ssm": jnp.zeros((batch, H, N, Dh), jnp.float32),
+            })
+        return {"layers": caches}
+    if cfg.enc_dec:
+        return {
+            "k": jnp.zeros((cfg.n_layers, batch, max_len, Hk, Dh), dt),
+            "v": jnp.zeros((cfg.n_layers, batch, max_len, Hk, Dh), dt),
+            "enc_out": jnp.zeros((batch, cfg.enc_positions, cfg.d_model), dt),
+        }
+    return {
+        "k": jnp.zeros((cfg.n_layers, batch, max_len, Hk, Dh), dt),
+        "v": jnp.zeros((cfg.n_layers, batch, max_len, Hk, Dh), dt),
+    }
+
+
+def decode_step(cfg: ArchConfig, params: Params, cache: Any,
+                tokens: jnp.ndarray, t) -> Tuple[jnp.ndarray, Any]:
+    """One decode step: tokens (B,1) -> logits (B,1,V), updated cache.
+    `t` is the current sequence position (traced scalar)."""
+    dt = _dtype(cfg)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+    if cfg.name.startswith("gemma"):
+        x = x * jnp.asarray(cfg.d_model ** 0.5, dt)
+
+    if cfg.family == "ssm":
+        x, cache = _xlstm_decode(cfg, params, cache, x)
+    elif cfg.family == "hybrid":
+        ws = window_schedule(cfg)
+        new_layers = []
+        for li, lc in enumerate(cache["layers"]):
+            x, k2, v2, s2 = recurrent.hymba_block_step(
+                cfg, jax.tree.map(lambda a: a[li], params["blocks"]),
+                x, lc["k"], lc["v"], lc["ssm"], t,
+                window=int(ws[li]))
+            new_layers.append({"k": k2, "v": v2, "ssm": s2})
+        cache = {"layers": new_layers}
+    elif cfg.enc_dec:
+        def step(carry, inp):
+            h, = carry
+            lp, kc, vc = inp
+            h2, kc2, vc2 = blocks.attention_decode(cfg, lp, h, kc, vc, t)
+            h2 = blocks.cross_attention(cfg, lp, h2, cache["enc_out"])
+            h2 = blocks.gelu_mlp(lp, h2, cfg.norm_eps)
+            return (h2,), (kc2, vc2)
+        (x,), (k2, v2) = jax.lax.scan(
+            step, (x,), (params["blocks"], cache["k"], cache["v"]))
+        cache = {"k": k2, "v": v2, "enc_out": cache["enc_out"]}
+    else:
+        wsched = jnp.asarray(window_schedule(cfg))
+
+        def step(carry, inp):
+            h, = carry
+            lp, kc, vc, w = inp
+            h2, kc2, vc2 = blocks.attention_decode(cfg, lp, h, kc, vc, t,
+                                                   window=w)
+            h2, _ = blocks.ffn_block(cfg, lp, h2)
+            return (h2,), (kc2, vc2)
+        (x,), (k2, v2) = jax.lax.scan(
+            step, (x,), (params["blocks"], cache["k"], cache["v"], wsched))
+        cache = {"k": k2, "v": v2}
+
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    unemb = params.get("unembed")
+    if unemb is None:
+        unemb = params["embed"].T
+    logits = jnp.einsum("bsd,dv->bsv", x, unemb,
+                        preferred_element_type=jnp.float32)
+    return layers.softcap(logits, cfg.final_softcap), cache
+
+
+def _xlstm_decode(cfg, params, cache, x):
+    G, per = _xlstm_groups(cfg)
+
+    def group_step(carry, inp):
+        h, = carry
+        gp, C, n, sc, sn, sm = inp
+
+        def m_step(carry2, inp2):
+            hh, = carry2
+            lp, Ci, ni = inp2
+            hh2, (C2, n2) = recurrent.mlstm_block_step(cfg, lp, hh, (Ci, ni))
+            # keep the stacked scan output in the cache's (B/dp,H,Dv/tp,Dk)
+            # layout — otherwise the step ends with a full state gather
+            C2 = constrain_batch(C2, extra_model_dim=2)
+            n2 = constrain_batch(n2)
+            return (hh2,), (C2, n2)
+        (h,), (C2, n2) = jax.lax.scan(m_step, (h,), (gp["m"], C, n))
+        h, (sc2, sn2, sm2) = recurrent.slstm_block_step(
+            cfg, gp["s"], h, (sc, sn, sm))
+        return (h,), (C2, n2, sc2, sn2, sm2)
+
+    (x,), (C2, n2, sc2, sn2, sm2) = jax.lax.scan(
+        group_step, (x,),
+        ({"m": params["mlstm"], "s": params["slstm"]},
+         cache["mlstm_C"], cache["mlstm_n"], cache["slstm_c"],
+         cache["slstm_n"], cache["slstm_m"]))
+    cache = {"mlstm_C": C2, "mlstm_n": n2, "slstm_c": sc2,
+             "slstm_n": sn2, "slstm_m": sm2}
+    return x, cache

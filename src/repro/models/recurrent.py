@@ -1,0 +1,158 @@
+"""Recurrent / hybrid block forwards: xLSTM (mLSTM + sLSTM) and Hymba's
+parallel attention+SSM layer."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+from .config import ArchConfig
+
+_GATE_CAP = 15.0  # softcap on log input gate pre-activations (stability)
+
+
+# --- xLSTM: mLSTM block -----------------------------------------------------
+# TP layout (EXPERIMENTS.md §Perf-2): weights are stored Dh-major —
+# wq/wk/wv (d, Dh, H), w_down3 (Dh, H, d) — so every activation and the
+# matrix memory C shard on the Dh dimension alone (model axis). The state
+# update (v outer k), readout (C.q) and normalizer are then fully local
+# per device; the only per-layer collective is the psum of the (B, d)
+# down-projection. The naive (d, H*Dh) layout forces XLA into an
+# H x Dh mixed sharding and an involuntary full state rematerialization
+# every decode step.
+
+
+def _mlstm_qkvzg(cfg: ArchConfig, p, h):
+    q = jnp.einsum("bsd,dvh->bshv", h, p["wq3"])      # (B,S,H,Dh)
+    k = jnp.einsum("bsd,dvh->bshv", h, p["wk3"])
+    v = jnp.einsum("bsd,dvh->bshv", h, p["wv3"])
+    z = jnp.einsum("bsd,dvh->bshv", h, p["w_z3"])     # gate, same layout
+    gates = jnp.einsum("bsd,dg->bsg", h, p["w_if"])   # (B,S,2H)
+    H_ = cfg.n_heads
+    log_i = layers.softcap(gates[..., :H_].astype(jnp.float32), _GATE_CAP)
+    log_f = jax.nn.log_sigmoid(gates[..., H_:].astype(jnp.float32))
+    return q, k, v, z, log_i, log_f
+
+
+def mlstm_block(cfg: ArchConfig, p, x):
+    """Pre-norm mLSTM block (Beck et al. 2024; simplified: no causal conv4,
+    gates/projections taken directly from the normed stream)."""
+    h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+    q, k, v, z, log_i, log_f = _mlstm_qkvzg(cfg, p, h)
+    y = layers.mlstm_scan(q, k, v, log_f, log_i)      # (B,S,H,Dh)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    return x + jnp.einsum("bshv,vhd->bsd", y, p["w_down3"])
+
+
+def mlstm_block_step(cfg: ArchConfig, p, x, state):
+    """O(1) decode step; state = (C, n)."""
+    h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+    q, k, v, z, log_i, log_f = _mlstm_qkvzg(cfg, p, h)
+    state, y = layers.mlstm_step(state, q, k, v, log_f, log_i)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    return x + jnp.einsum("bshv,vhd->bsd", y, p["w_down3"]), state
+
+
+# --- xLSTM: sLSTM block -----------------------------------------------------
+
+def _slstm_preact(cfg, p, h):
+    B, S, d = h.shape
+    H, Dh = cfg.n_heads, cfg.d_model // cfg.n_heads
+    rs = lambda a: a.reshape(B, S, H, Dh)
+    zi = rs(jnp.einsum("bsd,de->bse", h, p["w_zi"]))
+    zf = rs(jnp.einsum("bsd,de->bse", h, p["w_zf"]))
+    zz = rs(jnp.einsum("bsd,de->bse", h, p["w_zz"]))
+    zo = rs(jnp.einsum("bsd,de->bse", h, p["w_zo"]))
+    return zi, zf, zz, zo
+
+
+def slstm_block(cfg: ArchConfig, p, x):
+    h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+    zi, zf, zz, zo = _slstm_preact(cfg, p, h)
+    y = layers.slstm_scan(zi, zf, zz, zo)
+    B, S, _ = x.shape
+    return x + jnp.einsum("bsd,de->bse", y.reshape(B, S, -1), p["w_down"])
+
+
+def slstm_block_step(cfg: ArchConfig, p, x, state):
+    h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+    zi, zf, zz, zo = _slstm_preact(cfg, p, h)
+    state, y = layers.slstm_step(state, zi, zf, zz, zo)
+    B = x.shape[0]
+    return x + jnp.einsum("bsd,de->bse", y.reshape(B, 1, -1), p["w_down"]), state
+
+
+# --- Hymba: parallel attention + SSM heads ----------------------------------
+
+def hymba_block(cfg: ArchConfig, p, x, positions, *, window, q_offset=0):
+    """Attention and Mamba-style SSM run in parallel on the same input;
+    their per-branch-normalized outputs are averaged before the shared
+    output projection (Hymba, arXiv:2411.13676; meta-tokens omitted —
+    see DESIGN.md)."""
+    B, S, d = x.shape
+    H, Hk, Dh, N = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.ssm_state
+    h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+    # attention branch
+    q = jnp.einsum("bsd,dh->bsh", h, p["wq"]).reshape(B, S, H, Dh)
+    k = jnp.einsum("bsd,dh->bsh", h, p["wk"]).reshape(B, S, Hk, Dh)
+    v = jnp.einsum("bsd,dh->bsh", h, p["wv"]).reshape(B, S, Hk, Dh)
+    q = layers.rope(q, positions, cfg.rope_theta)
+    k_r = layers.rope(k, positions, cfg.rope_theta)
+    ya = layers.flash_attention(q, k_r, v, causal=True, window=window,
+                                q_offset=q_offset)
+    ya = ya.reshape(B, S, H * Dh)
+    # ssm branch
+    xs = jnp.einsum("bsd,dh->bsh", h, p["ssm_in"]).reshape(B, S, H, Dh)
+    dt = jnp.einsum("bsd,dh->bsh", h, p["ssm_dt"])             # (B,S,H)
+    Bm = jnp.einsum("bsd,dh->bsh", h, p["ssm_B"]).reshape(B, S, H, N)
+    Cm = jnp.einsum("bsd,dh->bsh", h, p["ssm_C"]).reshape(B, S, H, N)
+    ys = layers.ssm_scan(xs, dt, Bm, Cm, p["A_log"]).reshape(B, S, H * Dh)
+    # fuse: average of per-branch RMS-normalized outputs
+    fused = 0.5 * (layers.rms_norm(ya, p["attn_norm"], cfg.norm_eps)
+                   + layers.rms_norm(ys, p["ssm_norm"], cfg.norm_eps))
+    y = jnp.einsum("bsh,hd->bsd", fused, p["wo"])
+    x = x + y
+    # dense FFN
+    h2 = layers.rms_norm(x, p["ln2"], cfg.norm_eps)
+    y2 = layers.swiglu(h2, p["w_gate"], p["w_up"], p["w_down"])
+    return x + y2, k_r, v
+
+
+def hymba_block_step(cfg: ArchConfig, p, x, k_cache, v_cache, ssm_state, t,
+                     *, window):
+    """Decode step: ring-buffered window cache handled by caller via cache
+    size; here we write at position t % cache_len."""
+    B, _, d = x.shape
+    H, Hk, Dh, N = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.ssm_state
+    T_cache = k_cache.shape[1]
+    h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+    positions = jnp.full((B, 1), t, jnp.int32)
+    q = jnp.einsum("bsd,dh->bsh", h, p["wq"]).reshape(B, 1, H, Dh)
+    k = jnp.einsum("bsd,dh->bsh", h, p["wk"]).reshape(B, 1, Hk, Dh)
+    v = jnp.einsum("bsd,dh->bsh", h, p["wv"]).reshape(B, 1, Hk, Dh)
+    q = layers.rope(q, positions, cfg.rope_theta)
+    k = layers.rope(k, positions, cfg.rope_theta)
+    slot = t % T_cache  # ring buffer; global layers size T_cache >= max t
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        k_cache, k.astype(k_cache.dtype), slot, 1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        v_cache, v.astype(v_cache.dtype), slot, 1)
+    # ring buffer: all T_cache entries are valid once t >= T_cache
+    n_valid = jnp.minimum(t + 1, T_cache)
+    ya = layers.decode_attention(q, k_cache, v_cache, n_valid,
+                                 window=None)  # window == cache size
+    ya = ya.reshape(B, 1, H * Dh)
+    xs = jnp.einsum("bsd,dh->bsh", h, p["ssm_in"]).reshape(B, 1, H, Dh)
+    dt = jnp.einsum("bsd,dh->bsh", h, p["ssm_dt"])
+    Bm = jnp.einsum("bsd,dh->bsh", h, p["ssm_B"]).reshape(B, 1, H, N)
+    Cm = jnp.einsum("bsd,dh->bsh", h, p["ssm_C"]).reshape(B, 1, H, N)
+    ssm_state, ys = layers.ssm_step(ssm_state, xs, dt, Bm, Cm, p["A_log"])
+    ys = ys.reshape(B, 1, H * Dh)
+    fused = 0.5 * (layers.rms_norm(ya, p["attn_norm"], cfg.norm_eps)
+                   + layers.rms_norm(ys, p["ssm_norm"], cfg.norm_eps))
+    x = x + jnp.einsum("bsh,hd->bsd", fused, p["wo"])
+    h2 = layers.rms_norm(x, p["ln2"], cfg.norm_eps)
+    x = x + layers.swiglu(h2, p["w_gate"], p["w_up"], p["w_down"])
+    return x, k_cache, v_cache, ssm_state

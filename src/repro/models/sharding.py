@@ -1,0 +1,197 @@
+"""Mesh-axis conventions and parameter sharding rules.
+
+Mesh axes: single-pod (data, model); multi-pod (pod, data, model). `pod`
+joins `data` as a pure data-parallel axis (with compressed gradient
+all-reduce across pods, see repro.distributed). TP shards attention heads,
+FFN hidden, MoE experts, and vocab over `model`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshAxes:
+    batch: Tuple[str, ...] = ("data",)    # ("pod","data") on multi-pod
+    model: str = "model"
+
+    @property
+    def dp(self):
+        return self.batch if len(self.batch) > 1 else self.batch[0]
+
+
+def axes_for_mesh(mesh: jax.sharding.Mesh) -> MeshAxes:
+    names = mesh.axis_names
+    if "pod" in names:
+        return MeshAxes(batch=("pod", "data"), model="model")
+    return MeshAxes(batch=("data",), model="model")
+
+
+def constrain(x, spec: P):
+    """with_sharding_constraint that is a no-op outside a mesh context."""
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError):
+        return x
+
+
+def ambient_axes() -> Optional[MeshAxes]:
+    """MeshAxes derived from the ambient (jax.set_mesh) mesh, or None.
+    Axes that are Manual in the current context (inside a shard_map, e.g.
+    the pod axis during compressed gradient sync) are excluded — sharding
+    constraints may only reference Auto/Explicit axes."""
+    try:
+        am = jax.sharding.get_abstract_mesh()
+    except AttributeError:
+        return None
+    names = tuple(getattr(am, "axis_names", ()) or ())
+    if not names:
+        return None
+    manual = set()
+    try:
+        manual = set(am.manual_axes)
+    except Exception:
+        pass
+    batch = tuple(n for n in ("pod", "data") if n in names and n not in manual)
+    if not batch or "model" not in names or "model" in manual:
+        return None
+    return MeshAxes(batch=batch, model="model")
+
+
+def _dims_ok(x, dim: int, parts_axes, am=None) -> bool:
+    try:
+        am = am or jax.sharding.get_abstract_mesh()
+        parts = 1
+        shape = dict(zip(am.axis_names, am.axis_sizes))
+        for a in (parts_axes if isinstance(parts_axes, tuple) else (parts_axes,)):
+            parts *= shape.get(a, 1)
+        return x.shape[dim] % parts == 0 and x.shape[dim] >= parts
+    except Exception:
+        return False
+
+
+def constrain_model_dim(x, dim: int):
+    """Pin one dim of an activation/state to the model axis (ambient mesh;
+    no-op without one). Used inside scan bodies whose stacked outputs
+    would otherwise lose their sharding and force a full gather at the
+    step boundary (xLSTM decode state, EXPERIMENTS.md §Perf-2)."""
+    ax = ambient_axes()
+    if ax is None:
+        return x
+    if not _dims_ok(x, dim, ax.model):
+        return x
+    spec = [None] * x.ndim
+    spec[dim] = ax.model
+    return constrain(x, P(*spec))
+
+
+def constrain_batch(x, extra_model_dim: Optional[int] = None):
+    """Constrain dim 0 of an activation to the data axes (and optionally
+    one more dim to the model axis) under the ambient mesh; no-op without
+    a mesh. Keeps the SPMD partitioner from replicating the big
+    intermediates when sharding propagation gives up (e.g. scan carries)."""
+    ax = ambient_axes()
+    if ax is None:
+        return x
+    spec = [None] * x.ndim
+    if _dims_ok(x, 0, ax.batch):
+        spec[0] = ax.batch if len(ax.batch) > 1 else ax.batch[0]
+    if extra_model_dim is not None and _dims_ok(x, extra_model_dim, ax.model):
+        spec[extra_model_dim] = ax.model
+    return constrain(x, P(*spec))
+
+
+def _div(n: int, parts: int) -> bool:
+    return parts > 0 and n % parts == 0
+
+
+def param_spec(path: str, shape: Tuple[int, ...], ax: MeshAxes,
+               mesh_shape: dict, zero1: bool = False) -> P:
+    """Sharding rule for one parameter, by name suffix.
+
+    Conventions (leading stack dims from lax.scan get None):
+      embed (V, d)            -> (model, None)
+      unembed (d, V)          -> (None, model)
+      attn wq/wk/wv (d, H*Dh) -> (None, model)   heads sharded
+      attn wo (H*Dh, d)       -> (model, None)
+      ffn w_gate/w_up (d, ff) -> (None, model)
+      ffn w_down (ff, d)      -> (model, None)
+      moe (E, d, ff)          -> (model, None, None) if E%tp==0 (EP)
+                                 else (None, None, model) (TP inside expert)
+      norms / small vectors   -> replicated
+    `zero1` additionally shards the first remaining None dim over the data
+    axes for optimizer-state pytrees (ZeRO-1).
+    """
+    tp = mesh_shape.get("model", 1)
+    dp = int(np.prod([mesh_shape.get(a, 1) for a in ax.batch]))
+    nd = len(shape)
+    # leading scan-stack dims (layers/groups) are never sharded
+    lead = 0
+    base: list = [None] * nd
+    name = path.split("/")[-1]
+
+    def last_two(i):  # index helpers relative to trailing dims
+        return nd - 2 + i
+
+    if name in ("embed",):
+        if _div(shape[lead], tp):
+            base[lead] = ax.model
+    elif name in ("unembed",):
+        if _div(shape[-1], tp):
+            base[-1] = ax.model
+    elif name == "w_down3":              # mLSTM (Dh, H, d): shard Dh
+        if _div(shape[-3], tp):
+            base[-3] = ax.model
+    elif name in ("wv3", "w_z3"):        # mLSTM (d, Dh, H): shard Dh
+        if _div(shape[-2], tp):
+            base[-2] = ax.model
+    elif name in ("wq3", "wk3"):         # mLSTM q/k replicated (small) so
+        pass                             # the C.q readout is local
+    elif name in ("wq", "wk", "wv", "w_gate", "w_up", "ssm_in", "w_z",
+                  "w_zi", "w_zf", "w_zz", "w_zo", "wq_x", "wk_x", "wv_x",
+                  "w1"):
+        if _div(shape[-1], tp):
+            base[-1] = ax.model
+    elif name in ("wo", "w_down", "ssm_out", "w_downproj", "wo_x", "w2"):
+        if _div(shape[-2], tp):
+            base[-2] = ax.model
+    elif name == "router":
+        pass  # small, replicated
+    elif name in ("moe_w_gate", "moe_w_up"):          # (.., E, d, ff)
+        if _div(shape[-3], tp):
+            base[-3] = ax.model                        # expert parallel
+        elif _div(shape[-1], tp):
+            base[-1] = ax.model
+    elif name == "moe_w_down":                         # (.., E, ff, d)
+        if _div(shape[-3], tp):
+            base[-3] = ax.model
+        elif _div(shape[-2], tp):
+            base[-2] = ax.model
+
+    if zero1:
+        # shard one remaining large dim over the data axes (ZeRO-1)
+        for i, s in enumerate(base):
+            if s is None and i < nd and shape[i] >= dp and _div(shape[i], dp):
+                base[i] = ax.batch if len(ax.batch) > 1 else ax.batch[0]
+                break
+    return P(*base)
+
+
+def tree_param_specs(params_shape, ax: MeshAxes, mesh_shape: dict,
+                     zero1: bool = False):
+    """Build a PartitionSpec pytree matching a params (shape) pytree."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
+    specs = []
+    for path, leaf in flat:
+        name = "/".join(getattr(k, "key", str(k)) for k in path)
+        specs.append(param_spec(name, leaf.shape, ax, mesh_shape, zero1))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def mesh_shape_dict(mesh: jax.sharding.Mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))

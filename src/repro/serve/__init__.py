@@ -1,0 +1,4 @@
+"""repro.serve — prefill/decode serving steps with KV & recurrent caches."""
+from .step import make_serve_step, make_prefill, greedy_generate
+
+__all__ = ["make_serve_step", "make_prefill", "greedy_generate"]

@@ -1,0 +1,70 @@
+"""Serving: prefill (populate caches from a prompt) and serve_step (one
+batched decode step). serve_step is what the decode_* / long_* dry-run
+shapes lower."""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models import decode_step, forward, init_decode_cache
+from ..models.config import ArchConfig
+
+
+def make_serve_step(cfg: ArchConfig) -> Callable:
+    """serve_step(params, cache, tokens (B,1), t) -> (next_tokens, logits,
+    cache). Greedy argmax sampling (temperature handled by caller)."""
+    def serve_step(params, cache, tokens, t):
+        logits, cache = decode_step(cfg, params, cache, tokens, t)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        return nxt, logits, cache
+    return serve_step
+
+
+def make_prefill(cfg: ArchConfig, max_len: int) -> Callable:
+    """prefill(params, batch) -> (cache, last_logits). Populates KV caches
+    (attention families) by running the full forward with return_cache and
+    scattering per-layer K/V into the preallocated cache buffers."""
+    def prefill(params, batch):
+        out = forward(cfg, params, batch, return_cache=True)
+        B = batch["tokens"].shape[0]
+        cache = init_decode_cache(cfg, B, max_len)
+        if cfg.family == "ssm":
+            # recurrent prefill: replay through decode steps is O(S); for
+            # the serving example we instead run forward then re-derive
+            # states by a single scan pass (cache stays zeros here, states
+            # are produced by decode-from-scratch in greedy_generate).
+            return cache, out.logits[:, -1:]
+        kv = out.cache.get("kv") if isinstance(out.cache, dict) else None
+        if kv is not None and "k" in cache:
+            k, v = kv                      # (L, B, S, Hk, Dh)
+            S = k.shape[2]
+            cache["k"] = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), 0, 2)
+            cache["v"] = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), 0, 2)
+        if cfg.enc_dec and isinstance(out.cache, dict):
+            cache["enc_out"] = out.cache["enc_out"]
+        return cache, out.logits[:, -1:]
+    return prefill
+
+
+def greedy_generate(cfg: ArchConfig, params, prompt: jnp.ndarray,
+                    n_new: int, max_len: Optional[int] = None) -> jnp.ndarray:
+    """Reference end-to-end generation loop (token-by-token from position 0
+    — exercises only the decode path, so it works for every family)."""
+    B, S0 = prompt.shape
+    max_len = max_len or (S0 + n_new)
+    cache = init_decode_cache(cfg, B, max_len)
+    step = jax.jit(make_serve_step(cfg))
+    toks = prompt
+    cur = prompt[:, :1]
+    out = []
+    for t in range(S0 + n_new - 1):
+        cur = toks[:, t:t + 1] if t < S0 else cur
+        nxt, _, cache = step(params, cache, cur, jnp.int32(t))
+        if t >= S0 - 1:
+            out.append(nxt)
+            cur = nxt
+    return jnp.concatenate(out, axis=1) if out else prompt[:, :0]

@@ -1,0 +1,133 @@
+"""Per-architecture smoke tests: reduced config of the same family, one
+forward + one train step + one decode step on CPU; output shapes + no
+NaNs. (Full configs are exercised allocation-free by the dry-run.)"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.models import (init_params, forward, decode_step,
+                          init_decode_cache, window_schedule)
+from repro.train import (AdamWConfig, TrainState, TrainStepConfig, adamw_init,
+                         make_train_step)
+
+
+def _batch_for(cfg, B=2, S=16):
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)),
+                                   jnp.int32)}
+    if cfg.n_img_tokens:
+        batch["image_embeds"] = jnp.asarray(
+            rng.normal(size=(B, cfg.n_img_tokens, cfg.d_model)), jnp.bfloat16)
+    if cfg.enc_dec:
+        batch["frames"] = jnp.asarray(
+            rng.normal(size=(B, cfg.enc_positions, cfg.d_model)), jnp.bfloat16)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward(arch):
+    cfg = get_smoke_config(arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 16
+    batch = _batch_for(cfg, B, S)
+    out = forward(cfg, params, batch)
+    S_out = S + (cfg.n_img_tokens or 0)
+    assert out.logits.shape == (B, S_out, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(out.logits.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_train_step(arch):
+    cfg = get_smoke_config(arch)
+    params = init_params(cfg, jax.random.PRNGKey(1))
+    state = TrainState(params=params, opt=adamw_init(params))
+    step = jax.jit(make_train_step(
+        cfg, TrainStepConfig(remat=False), AdamWConfig(lr_peak=1e-3,
+                                                       warmup_steps=1,
+                                                       decay_steps=5)))
+    batch = _batch_for(cfg)
+    batch["labels"] = batch["tokens"]
+    state2, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    # params actually changed
+    a = jax.tree.leaves(state.params)[0]
+    b = jax.tree.leaves(state2.params)[0]
+    assert not np.array_equal(np.asarray(a, np.float32),
+                              np.asarray(b, np.float32))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_decode_step(arch):
+    cfg = get_smoke_config(arch)
+    params = init_params(cfg, jax.random.PRNGKey(2))
+    B = 2
+    cache = init_decode_cache(cfg, B, max_len=32)
+    toks = jnp.zeros((B, 1), jnp.int32)
+    logits, cache = decode_step(cfg, params, cache, toks, jnp.int32(0))
+    logits2, cache = decode_step(cfg, params, cache, toks, jnp.int32(1))
+    assert logits.shape == (B, 1, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+    assert bool(jnp.all(jnp.isfinite(logits2.astype(jnp.float32))))
+
+
+def test_full_configs_match_assignment():
+    """The full configs must carry the exact assigned hyperparameters."""
+    expect = {
+        "llava_next_34b": dict(n_layers=60, d_model=7168, n_heads=56,
+                               n_kv_heads=8, d_ff=20480, vocab=64000),
+        "grok_1_314b": dict(n_layers=64, d_model=6144, n_heads=48,
+                            n_kv_heads=8, d_ff=32768, vocab=131072),
+        "qwen3_moe_235b_a22b": dict(n_layers=94, d_model=4096, n_heads=64,
+                                    n_kv_heads=4, d_ff=1536, vocab=151936),
+        "deepseek_coder_33b": dict(n_layers=62, d_model=7168, n_heads=56,
+                                   n_kv_heads=8, d_ff=19200, vocab=32256),
+        "smollm_135m": dict(n_layers=30, d_model=576, n_heads=9,
+                            n_kv_heads=3, d_ff=1536, vocab=49152),
+        "granite_8b": dict(n_layers=36, d_model=4096, n_heads=32,
+                           n_kv_heads=8, d_ff=14336, vocab=49152),
+        "gemma2_9b": dict(n_layers=42, d_model=3584, n_heads=16,
+                          n_kv_heads=8, d_ff=14336, vocab=256000),
+        "whisper_base": dict(n_layers=6, d_model=512, n_heads=8,
+                             n_kv_heads=8, d_ff=2048, vocab=51865),
+        "xlstm_1_3b": dict(n_layers=48, d_model=2048, n_heads=4,
+                           n_kv_heads=4, d_ff=0, vocab=50304),
+        "hymba_1_5b": dict(n_layers=32, d_model=1600, n_heads=25,
+                           n_kv_heads=5, d_ff=5504, vocab=32001),
+    }
+    for arch, spec in expect.items():
+        cfg = get_config(arch)
+        for k, v in spec.items():
+            assert getattr(cfg, k) == v, (arch, k, getattr(cfg, k), v)
+    # moe settings
+    assert get_config("grok_1_314b").moe.n_experts == 8
+    assert get_config("grok_1_314b").moe.top_k == 2
+    assert get_config("qwen3_moe_235b_a22b").moe.n_experts == 128
+    assert get_config("qwen3_moe_235b_a22b").moe.top_k == 8
+    assert get_config("hymba_1_5b").ssm_state == 16
+
+
+def test_param_counts_in_expected_range():
+    """Analytic parameter counts should land near the named sizes."""
+    cases = {"llava_next_34b": (30e9, 40e9), "grok_1_314b": (280e9, 340e9),
+             "qwen3_moe_235b_a22b": (200e9, 260e9),
+             "deepseek_coder_33b": (28e9, 38e9),
+             "smollm_135m": (0.1e9, 0.2e9), "granite_8b": (6e9, 10e9),
+             "gemma2_9b": (7e9, 12e9), "xlstm_1_3b": (0.9e9, 1.8e9),
+             "hymba_1_5b": (1.0e9, 2.2e9)}
+    for arch, (lo, hi) in cases.items():
+        n = get_config(arch).n_params()
+        assert lo <= n <= hi, (arch, n)
+
+
+def test_gemma2_window_schedule():
+    ws = window_schedule(get_config("gemma2_9b"))
+    assert ws[0] == 4096 and ws[1] > 1e6 and ws[2] == 4096
+
+
+def test_hymba_window_schedule():
+    cfg = get_config("hymba_1_5b")
+    ws = window_schedule(cfg)
+    assert ws[0] > 1e6 and ws[16] > 1e6 and ws[31] > 1e6
+    assert ws[1] == 1024

@@ -1,0 +1,101 @@
+"""Tests for the error-bounded base compressors, the edit codec, and the
+end-to-end MSS-preserving pipeline."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.compress import (sz_roundtrip, zfp_roundtrip, encode_edits,
+                            decode_edits, compress_preserving_mss,
+                            decompress_artifact, overall_compression_ratio,
+                            overall_bit_rate, psnr)
+from repro.compress.szlike import sz_transform, sz_inverse
+from repro.core import verify_preservation
+from repro.data import synthetic_field
+import jax.numpy as jnp
+
+
+@pytest.mark.parametrize("xi", [1e-1, 1e-2, 1e-3])
+@pytest.mark.parametrize("shape", [(33, 47), (17, 19, 23)])
+def test_sz_error_bound(xi, shape):
+    rng = np.random.default_rng(0)
+    f = rng.normal(size=shape).astype(np.float32)
+    fh, nbytes = sz_roundtrip(f, xi)
+    assert fh.shape == f.shape and fh.dtype == f.dtype
+    assert np.max(np.abs(f - fh)) <= xi * (1 + 1e-9)
+    assert nbytes < f.nbytes  # should actually compress gaussian noise @1e-1
+    # determinism
+    fh2, _ = sz_roundtrip(f, xi)
+    np.testing.assert_array_equal(fh, fh2)
+
+
+def test_sz_jax_path_matches_host():
+    """The jit'd TPU-target transform must agree with the exact host codec
+    within its documented int32 range."""
+    rng = np.random.default_rng(1)
+    f = rng.normal(size=(16, 24)).astype(np.float32)
+    xi = 1e-2
+    step = 2.0 * xi
+    r = np.asarray(sz_transform(jnp.asarray(f), jnp.float32(step)))
+    back = np.asarray(sz_inverse(jnp.asarray(r), jnp.float32(step)))
+    assert np.max(np.abs(f - back)) <= xi * (1 + 1e-5)
+
+
+@pytest.mark.parametrize("xi", [1e-1, 1e-2, 1e-3])
+@pytest.mark.parametrize("shape", [(32, 48), (16, 20, 24), (33, 47)])
+def test_zfp_error_bound(xi, shape):
+    rng = np.random.default_rng(0)
+    f = rng.normal(size=shape).astype(np.float32)
+    fh, nbytes = zfp_roundtrip(f, xi)
+    assert fh.shape == f.shape
+    assert np.max(np.abs(f - fh)) <= xi * (1 + 1e-9)
+
+
+def test_zfp_constant_field():
+    f = np.full((8, 8), 3.25, np.float32)
+    fh, _ = zfp_roundtrip(f, 1e-3)
+    assert np.max(np.abs(f - fh)) <= 1e-3
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(0, 500))
+def test_edit_codec_roundtrip(seed, n):
+    rng = np.random.default_rng(seed)
+    idx = np.sort(rng.choice(10_000, size=n, replace=False)).astype(np.int64)
+    val = rng.normal(size=n).astype(np.float32)
+    blob = encode_edits(idx, val)
+    idx2, val2 = decode_edits(blob)
+    np.testing.assert_array_equal(idx, idx2)
+    np.testing.assert_array_equal(val, val2)
+
+
+def test_edit_codec_bf16_mode():
+    idx = np.array([3, 77, 1024], np.int64)
+    val = np.array([-0.5, -0.125, -3.0], np.float32)  # bf16-exact values
+    blob = encode_edits(idx, val, "bf16")
+    idx2, val2 = decode_edits(blob)
+    np.testing.assert_array_equal(idx, idx2)
+    np.testing.assert_array_equal(val, val2)
+
+
+@pytest.mark.parametrize("base", ["szlike", "zfplike"])
+def test_pipeline_preserves_mss(base):
+    f = synthetic_field("molecular", shape=(20, 20, 12), seed=3)
+    xi = 0.02 * float(np.ptp(f))
+    art = compress_preserving_mss(f, xi, base=base)
+    g = decompress_artifact(art)
+    v = verify_preservation(f, g, xi)
+    assert v["mss_preserved"], v
+    assert v["bound_ok"], v
+    ocr = overall_compression_ratio(f, art)
+    obr = overall_bit_rate(f, art)
+    assert ocr > 1.0          # must beat raw storage
+    assert 0 < obr < 32.0
+    assert psnr(f, g) > 20.0
+
+
+def test_pipeline_metrics_fields():
+    f = synthetic_field("climate", shape=(48, 96), seed=1)
+    xi = 1e-2 * float(np.ptp(f))
+    art = compress_preserving_mss(f, xi, base="szlike")
+    assert art.t_base >= 0 and art.t_fix >= 0
+    assert 0 <= art.edit_ratio < 0.5

@@ -1,0 +1,139 @@
+"""Unit + property tests for the core MSz algorithm (paper Sections 4-6)."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (steepest_dirs, mss_labels, derive_edits, apply_edits,
+                        verify_preservation, segmentation_accuracy,
+                        field_topology, false_critical_masks)
+from repro.core import ref as R
+
+
+def _rand_field(rng, shape, dtype=np.float32):
+    return rng.normal(size=shape).astype(dtype)
+
+
+@pytest.mark.parametrize("shape", [(5, 7), (8, 8), (4, 5, 6), (6, 6, 6)])
+def test_steepest_dirs_match_oracle(shape):
+    rng = np.random.default_rng(42)
+    f = _rand_field(rng, shape)
+    up, dn = steepest_dirs(jnp.asarray(f))
+    upr, dnr = R.steepest_dirs_ref(f)
+    np.testing.assert_array_equal(np.asarray(up), upr)
+    np.testing.assert_array_equal(np.asarray(dn), dnr)
+
+
+@pytest.mark.parametrize("shape", [(6, 6), (4, 5, 6)])
+def test_mss_labels_match_oracle(shape):
+    rng = np.random.default_rng(7)
+    f = _rand_field(rng, shape)
+    M, m = mss_labels(jnp.asarray(f))
+    Mr, mr = R.mss_labels_ref(f)
+    np.testing.assert_array_equal(np.asarray(M), Mr)
+    np.testing.assert_array_equal(np.asarray(m), mr)
+
+
+def test_sos_handles_ties():
+    # constant field is maximally non-Morse; SoS must still give a total order
+    f = np.zeros((5, 5), np.float32)
+    M, m = mss_labels(jnp.asarray(f))
+    Mr, mr = R.mss_labels_ref(f)
+    np.testing.assert_array_equal(np.asarray(M), Mr)
+    np.testing.assert_array_equal(np.asarray(m), mr)
+    # with SoS by index, the unique max is the largest index, min the smallest
+    assert np.all(np.asarray(M) == f.size - 1)
+    assert np.all(np.asarray(m) == 0)
+
+
+@pytest.mark.parametrize("mode", ["fused", "paper"])
+@pytest.mark.parametrize("shape", [(9, 11), (6, 7, 8)])
+def test_fix_preserves_mss_and_bound(mode, shape):
+    rng = np.random.default_rng(3)
+    f = _rand_field(rng, shape)
+    xi = 0.25
+    fh = (f + rng.uniform(-xi, xi, size=shape) * 0.999).astype(np.float32)
+    res = derive_edits(f, fh, xi, mode=mode)
+    assert res.converged
+    v = verify_preservation(f, res.g, xi)
+    assert v["mss_preserved"], v
+    assert v["bound_ok"], v
+    assert v["right_labeled_ratio"] == 1.0
+    # all edits are decreasing (Eq. 1)
+    assert np.all(res.edits_val <= 0.0)
+    # decompression-side application reproduces g exactly
+    g2 = apply_edits(fh, res.edits_idx, res.edits_val)
+    np.testing.assert_array_equal(g2, res.g)
+
+
+def test_identity_input_needs_no_edits():
+    rng = np.random.default_rng(0)
+    f = _rand_field(rng, (8, 9))
+    res = derive_edits(f, f.copy(), xi=0.1, mode="fused")
+    assert res.edits_idx.size == 0
+    assert res.iters <= 1
+
+
+def test_bound_violation_rejected():
+    rng = np.random.default_rng(0)
+    f = _rand_field(rng, (6, 6))
+    fh = f + 1.0
+    with pytest.raises(ValueError, match="error bound"):
+        derive_edits(f, fh, xi=0.1)
+
+
+def test_segmentation_accuracy_metric():
+    rng = np.random.default_rng(1)
+    f = _rand_field(rng, (16, 16))
+    assert float(segmentation_accuracy(jnp.asarray(f), jnp.asarray(f))) == 1.0
+    noisy = f + rng.uniform(-0.5, 0.5, f.shape).astype(np.float32)
+    acc = float(segmentation_accuracy(jnp.asarray(f), jnp.asarray(noisy)))
+    assert 0.0 <= acc <= 1.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), xi=st.floats(0.05, 0.8))
+def test_property_2d_fused(seed, xi):
+    """Invariants: error bound holds, MSS exactly preserved, edits <= 0.
+
+    Fixed shape: every distinct shape re-jits the while_loop; drawing shapes
+    from hypothesis makes the suite compile-bound on CPU."""
+    h, w = 9, 11
+    rng = np.random.default_rng(seed)
+    f = _rand_field(rng, (h, w))
+    fh = (f + rng.uniform(-xi, xi, size=(h, w)) * 0.99).astype(np.float32)
+    res = derive_edits(f, fh, xi, mode="fused")
+    assert res.converged
+    v = verify_preservation(f, res.g, xi)
+    assert v["mss_preserved"]
+    assert v["bound_ok"]
+    assert np.all(res.edits_val <= 0)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), xi=st.floats(0.05, 0.5))
+def test_property_3d_fused(seed, xi):
+    rng = np.random.default_rng(seed)
+    f = _rand_field(rng, (5, 6, 7))
+    fh = (f + rng.uniform(-xi, xi, size=(5, 6, 7)) * 0.99).astype(np.float32)
+    res = derive_edits(f, fh, xi, mode="fused")
+    assert res.converged
+    v = verify_preservation(f, res.g, xi)
+    assert v["mss_preserved"] and v["bound_ok"]
+
+
+def test_false_critical_masks_classes():
+    """Hand-built false-critical cases on a monotone ramp."""
+    f = np.arange(25, dtype=np.float32).reshape(5, 5)  # true max at (4,4)
+    xi = 30.0
+    g = f.copy()
+    g[2, 2] = 37.0    # above every neighbor -> FPmax (|37-12| <= xi)
+    g[4, 4] = 18.5    # below neighbor (3,4)=19 -> the true max is lost: FNmax
+    topo = field_topology(jnp.asarray(f), xi)
+    fm = false_critical_masks(jnp.asarray(g), topo)
+    assert bool(fm.fpmax[2, 2])
+    assert bool(fm.fnmax[4, 4])
+    # and the fix restores both within bound
+    res = derive_edits(f, g, xi, mode="fused")
+    v = verify_preservation(f, res.g, xi)
+    assert v["mss_preserved"] and v["bound_ok"]

@@ -1,0 +1,90 @@
+"""Serving-path and data-pipeline tests."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.data import TokenPipeline, synthetic_tokens, synthetic_field, FIELD_GENERATORS
+from repro.models import init_params, forward, init_decode_cache
+from repro.serve import greedy_generate, make_serve_step
+
+
+def test_decode_matches_forward_dense():
+    """Token-by-token decode must reproduce the full-forward logits
+    (same params, same tokens) for the dense family."""
+    cfg = get_smoke_config("smollm-135m")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    B, S = 2, 8
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    full = forward(cfg, params, {"tokens": toks}).logits  # (B,S,V)
+
+    cache = init_decode_cache(cfg, B, max_len=S)
+    step = make_serve_step(cfg)
+    got = []
+    for t in range(S):
+        _, logits, cache = step(params, cache, toks[:, t:t + 1], jnp.int32(t))
+        got.append(logits[:, 0])
+    got = jnp.stack(got, axis=1)
+    # bf16 params: chunked (flash) vs unchunked (decode) softmax accumulate
+    # in different orders; position 0 matches to 1e-7, later drift ~4e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(full, np.float32),
+                               rtol=5e-2, atol=1e-1)
+
+
+@pytest.mark.parametrize("arch", ["gemma2-9b", "xlstm-1.3b", "hymba-1.5b"])
+def test_decode_matches_forward_other_families(arch):
+    cfg = get_smoke_config(arch)
+    params = init_params(cfg, jax.random.PRNGKey(1))
+    rng = np.random.default_rng(1)
+    B, S = 2, 8
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    full = forward(cfg, params, {"tokens": toks}).logits
+
+    cache = init_decode_cache(cfg, B, max_len=S)
+    step = make_serve_step(cfg)
+    got = []
+    for t in range(S):
+        _, logits, cache = step(params, cache, toks[:, t:t + 1], jnp.int32(t))
+        got.append(logits[:, 0])
+    got = jnp.stack(got, axis=1)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(full, np.float32),
+                               rtol=5e-2, atol=5e-2)
+
+
+def test_greedy_generate_deterministic():
+    cfg = get_smoke_config("smollm-135m")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    prompt = jnp.asarray([[1, 2, 3, 4]], jnp.int32)
+    a = greedy_generate(cfg, params, prompt, n_new=6)
+    b = greedy_generate(cfg, params, prompt, n_new=6)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert a.shape == (1, 6)
+
+
+def test_token_pipeline_sharding():
+    pipe = TokenPipeline(vocab_size=100, batch=8, seq_len=16)
+    full = pipe.get_batch(0)
+    shards = [TokenPipeline(vocab_size=100, batch=8, seq_len=16,
+                            dp_rank=r, dp_size=4).get_batch(0)
+              for r in range(4)]
+    recon = np.concatenate([s["tokens"] for s in shards], axis=0)
+    np.testing.assert_array_equal(recon, full["tokens"])
+
+
+def test_token_pipeline_labels_shifted():
+    b = synthetic_tokens(50, 2, 32, step=0)
+    # labels are next-token targets of tokens
+    assert b["tokens"].shape == b["labels"].shape == (2, 32)
+
+
+def test_field_generators_deterministic():
+    for name in FIELD_GENERATORS:
+        a = synthetic_field(name)
+        b = synthetic_field(name)
+        np.testing.assert_array_equal(a, b)
+        assert a.dtype == np.float32
+        assert np.all(np.isfinite(a))
