@@ -32,7 +32,10 @@ def run(quick: bool = True):
          "trace=" + "|".join(str(v) for v in trace[:20]))
 
     res_paper = derive_edits(f, fh, xi, mode="paper")
-    res_fused = derive_edits(f, fh, xi, mode="fused")
+    res_fused = derive_edits(f, fh, xi, mode="fused", backend="reference")
+    res_pallas = derive_edits(f, fh, xi, mode="fused", backend="pallas")
+    assert res_pallas.iters == res_fused.iters          # backend parity
+    assert np.array_equal(res_pallas.g, res_fused.g)
     emit("fig11/outer_iters", 0.0,
          f"paper={res_paper.iters};fused={res_fused.iters};"
          f"edits_paper={res_paper.edit_ratio:.4f};"

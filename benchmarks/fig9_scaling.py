@@ -19,6 +19,9 @@ def run(quick: bool = True):
     sizes = [(16, 16, 16), (24, 24, 24), (32, 32, 32)]
     if not quick:
         sizes += [(48, 48, 48), (64, 64, 64)]
+    # off-TPU the pallas backend runs in interpret mode (correctness
+    # path); sweep it only in full runs to keep --quick fast on CPU
+    backends = ("reference",) if quick else ("reference", "pallas")
     rng = np.random.default_rng(0)
     for shape in sizes:
         f = synthetic_field("fingering", shape=shape)
@@ -26,14 +29,15 @@ def run(quick: bool = True):
         g = jnp.asarray((f + rng.uniform(-xi, xi, size=shape))
                         .astype(np.float32))
         topo = field_topology(jnp.asarray(f), xi)
-
-        def go():
-            out, it, ok = fused_fix(g, topo)
-            jax.block_until_ready(out)
-
-        t = timeit(go, warmup=1, iters=3)
         V = int(np.prod(shape))
-        emit(f"fig9/fused_fix/V={V}", t, f"Mvert_s={V/t:.3f}")
+
+        for backend in backends:
+            def go():
+                out, it, ok = fused_fix(g, topo, backend=backend)
+                jax.block_until_ready(out)
+
+            t = timeit(go, warmup=1, iters=3)
+            emit(f"fig9/fused_fix/{backend}/V={V}", t, f"Mvert_s={V/t:.3f}")
 
 
 if __name__ == "__main__":

@@ -21,6 +21,9 @@ from repro.data import synthetic_field
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--backend", default="auto",
+                    help="stencil backend for the fix loops "
+                         "(auto | reference | pallas | pallas_tiled)")
     args = ap.parse_args()
     datasets = {
         "molecular": (24, 24, 12),
@@ -44,7 +47,8 @@ def main():
                 fh, _ = rt(f, xi)
                 raw_acc = float(segmentation_accuracy(jnp.asarray(f),
                                                       jnp.asarray(fh)))
-                art = compress_preserving_mss(f, xi, base=base)
+                art = compress_preserving_mss(f, xi, base=base,
+                                              backend=args.backend)
                 g = decompress_artifact(art)
                 rep = verify_preservation(f, g, xi)
                 ok = rep["mss_preserved"] and rep["bound_ok"]

@@ -6,13 +6,14 @@ from .zfplike import zfp_compress, zfp_decompress, zfp_roundtrip
 from .codec import (encode_edits, decode_edits, lossless_bytes,
                     gzip_like, zstd_like)
 from .pipeline import (CompressedArtifact, compress_preserving_mss,
-                       decompress_artifact, overall_compression_ratio,
-                       overall_bit_rate, psnr)
+                       compress_preserving_mss_batch, decompress_artifact,
+                       overall_compression_ratio, overall_bit_rate, psnr)
 
 __all__ = [
     "sz_compress", "sz_decompress", "sz_roundtrip",
     "zfp_compress", "zfp_decompress", "zfp_roundtrip",
     "encode_edits", "decode_edits", "lossless_bytes", "gzip_like", "zstd_like",
-    "CompressedArtifact", "compress_preserving_mss", "decompress_artifact",
+    "CompressedArtifact", "compress_preserving_mss",
+    "compress_preserving_mss_batch", "decompress_artifact",
     "overall_compression_ratio", "overall_bit_rate", "psnr",
 ]

@@ -5,15 +5,23 @@ from .grid import (OFFSETS_2D, OFFSETS_3D, offsets_for, n_neighbors,
                    self_code, steepest_dirs, gather_dir, dir_to_pointer,
                    shift, linear_index)
 from .labels import mss_labels, pointer_jump, segmentation_accuracy, labels_from_codes
+from .backend import (StencilMasks, ReferenceBackend, PallasBackend,
+                      register_backend, available_backends, get_backend,
+                      resolve_backend)
 from .fixes import (FieldTopo, field_topology, false_critical_masks,
-                    trouble_masks, fused_pass, fused_fix, paper_fix)
-from .driver import MszResult, derive_edits, apply_edits, verify_preservation
+                    trouble_masks, fused_pass, fused_fix, fused_fix_batch,
+                    paper_fix)
+from .driver import (MszResult, derive_edits, derive_edits_batch, apply_edits,
+                     verify_preservation)
 
 __all__ = [
     "OFFSETS_2D", "OFFSETS_3D", "offsets_for", "n_neighbors", "self_code",
     "steepest_dirs", "gather_dir", "dir_to_pointer", "shift", "linear_index",
     "mss_labels", "pointer_jump", "segmentation_accuracy", "labels_from_codes",
+    "StencilMasks", "ReferenceBackend", "PallasBackend",
+    "register_backend", "available_backends", "get_backend", "resolve_backend",
     "FieldTopo", "field_topology", "false_critical_masks", "trouble_masks",
-    "fused_pass", "fused_fix", "paper_fix",
-    "MszResult", "derive_edits", "apply_edits", "verify_preservation",
+    "fused_pass", "fused_fix", "fused_fix_batch", "paper_fix",
+    "MszResult", "derive_edits", "derive_edits_batch", "apply_edits",
+    "verify_preservation",
 ]

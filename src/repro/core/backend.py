@@ -1,0 +1,324 @@
+"""Unified stencil-backend dispatch for the MSz fix loop.
+
+One protocol, many execution strategies (see DESIGN.md §3): every
+backend exposes the two stencil stages of the fused fix iteration,
+
+  * ``extrema_masks(g, topo)``  — 'update directions' + 'find false
+    critical points' fused (the paper's two dominant components, Table 1)
+  * ``fix_pass(g, topo, masks)`` — the pull-based conflict-free edit
+    application (DESIGN.md §2)
+
+plus ``fused_step`` composing them into one (g_next, n_violations)
+iteration. Registered implementations:
+
+  * ``reference`` — pure-jnp dense stencils (XLA-fused; the former
+    ``fixes.fused_pass`` body lives here)
+  * ``pallas``    — the slab-decomposed Pallas TPU kernels
+    (``kernels.extrema`` / ``kernels.fixpass``), interpret mode off-TPU,
+    with pMSz-style Z-tiling for fields above a VMEM slab budget
+
+Backends must be bitwise-interchangeable: same g trajectory, same
+violation counts, same iteration count (tests/test_backend.py enforces
+this). ``resolve_backend("auto", ...)`` picks ``pallas`` whenever the
+input is supported and falls back to ``reference`` otherwise.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, NamedTuple, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from . import grid
+
+
+# ---------------------------------------------------------------------------
+# shared stencil predicates (pure jnp — also reused by the paper-mode loops
+# in fixes.py)
+# ---------------------------------------------------------------------------
+
+class FalseMasks(NamedTuple):
+    fpmax: jnp.ndarray
+    fpmin: jnp.ndarray
+    fnmax: jnp.ndarray
+    fnmin: jnp.ndarray
+    up_c_g: jnp.ndarray
+    dn_c_g: jnp.ndarray
+
+
+def false_critical_masks(g: jnp.ndarray, topo) -> FalseMasks:
+    """Definitions 1-3: the four false critical point classes."""
+    up_c_g, dn_c_g = grid.steepest_dirs(g)
+    sc = grid.self_code(g.ndim)
+    is_max_g = up_c_g == sc
+    is_min_g = dn_c_g == sc
+    return FalseMasks(
+        fpmax=is_max_g & ~topo.is_max,
+        fpmin=is_min_g & ~topo.is_min,
+        fnmax=~is_max_g & topo.is_max,
+        fnmin=~is_min_g & topo.is_min,
+        up_c_g=up_c_g,
+        dn_c_g=dn_c_g,
+    )
+
+
+def trouble_masks(g_codes: FalseMasks, topo):
+    """Local R-loop predicates (our vectorized troublemaker test).
+
+    trouble_max(t): t non-max in g and its g-ascending edge leaves t's
+    original ascending region -> demote the wrong winner dir_up_g(t).
+    trouble_min(t): symmetric on the descending side -> promote (decrease)
+    the ORIGINAL descending neighbor dir_dn_f(t). Only decreasing edits can
+    'promote' a descent target, hence the asymmetry (see DESIGN.md §2).
+    """
+    sc = grid.self_code(topo.M.ndim)
+    nonmax_g = g_codes.up_c_g != sc
+    nonmin_g = g_codes.dn_c_g != sc
+    M_next = grid.gather_dir(topo.M, g_codes.up_c_g)
+    m_next = grid.gather_dir(topo.m, g_codes.dn_c_g)
+    trouble_max = nonmax_g & (M_next != topo.M)
+    trouble_min = nonmin_g & (m_next != topo.m)
+    return trouble_max, trouble_min
+
+
+def _halve_toward_lower(g, lower, mask):
+    """Eq. 2/3/4/5/6 decreasing edit, clamped so |f-g|<=xi holds exactly."""
+    new = jnp.maximum((g + lower) * jnp.asarray(0.5, g.dtype), lower)
+    return jnp.where(mask, new, g)
+
+
+def _pull(src_mask: jnp.ndarray, code: jnp.ndarray) -> jnp.ndarray:
+    """pulled[j] = OR_k ( src_mask[j - off_k] & code[j - off_k] == k ).
+
+    Dense 'pull' equivalent of the paper's atomic scatter: a vertex j is an
+    edit target iff some stencil neighbor i has ``src_mask[i]`` set and i's
+    direction code points at j.
+    """
+    offs = grid.offsets_for(src_mask.ndim)
+    out = jnp.zeros(src_mask.shape, bool)
+    for k, off in enumerate(offs):
+        noff = tuple(-o for o in off)
+        m = grid.shift(src_mask, noff, False)
+        c = grid.shift(code, noff, jnp.int32(-1))
+        out = out | (m & (c == k))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# the backend protocol
+# ---------------------------------------------------------------------------
+
+class StencilMasks(NamedTuple):
+    """Outputs of one extrema/false-point classification pass.
+
+    ``dn_c_f`` is the ORIGINAL field's descending codes (copied out of
+    the topo so ``fix_pass`` needs only (g, topo, masks)); the fix-source
+    masks follow the fused formulation of fixes.py: self_edit = FPmax |
+    FNmin, demote_src = FNmax | trouble_max, promote_src = FPmin |
+    trouble_min.
+    """
+    up_c_g: jnp.ndarray
+    dn_c_g: jnp.ndarray
+    self_edit: jnp.ndarray
+    demote_src: jnp.ndarray
+    promote_src: jnp.ndarray
+    dn_c_f: jnp.ndarray
+
+    @property
+    def n_violations(self) -> jnp.ndarray:
+        """Total fix sources — 0 iff the fused loop has converged."""
+        return (jnp.sum(self.self_edit) + jnp.sum(self.demote_src)
+                + jnp.sum(self.promote_src)).astype(jnp.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class ReferenceBackend:
+    """Dense pure-jnp stencils (the seed implementation, XLA-fused)."""
+    name: str = "reference"
+
+    def supports(self, shape: Tuple[int, ...], dtype) -> bool:
+        return len(shape) in (2, 3)
+
+    def extrema_masks(self, g: jnp.ndarray, topo) -> StencilMasks:
+        fm = false_critical_masks(g, topo)
+        t_max, t_min = trouble_masks(fm, topo)
+        return StencilMasks(
+            up_c_g=fm.up_c_g,
+            dn_c_g=fm.dn_c_g,
+            self_edit=fm.fpmax | fm.fnmin,
+            demote_src=fm.fnmax | t_max,
+            promote_src=fm.fpmin | t_min,
+            dn_c_f=topo.dn_c,
+        )
+
+    def fix_pass(self, g: jnp.ndarray, topo, masks: StencilMasks):
+        target = ((masks.self_edit != 0)
+                  | _pull(masks.demote_src != 0, masks.up_c_g)
+                  | _pull(masks.promote_src != 0, masks.dn_c_f))
+        return _halve_toward_lower(g, topo.lower, target), masks.n_violations
+
+    def fused_step(self, g: jnp.ndarray, topo):
+        """One fused fix iteration: (g_next, n_violations)."""
+        masks = self.extrema_masks(g, topo)
+        return self.fix_pass(g, topo, masks)
+
+
+@dataclasses.dataclass(frozen=True)
+class PallasBackend:
+    """Slab-decomposed Pallas kernels (kernels.extrema / kernels.fixpass).
+
+    ``z_tile``: slabs per tile for pMSz-style Z-tiling (None = tile only
+    when the field exceeds ``vmem_slab_budget`` slabs per pallas_call).
+    Tiled and untiled runs are bitwise identical: each iteration re-slices
+    every tile with a fresh 2-slab input halo (halo re-exchange), the
+    kernels evaluate boundaries in global coordinates, and only interior
+    slabs are kept.
+
+    ``interpret``: None = auto (interpret off-TPU, compiled on TPU).
+    """
+    name: str = "pallas"
+    z_tile: Optional[int] = None
+    vmem_slab_budget: int = 256
+    interpret: Optional[bool] = None
+
+    def supports(self, shape: Tuple[int, ...], dtype) -> bool:
+        return (len(shape) in (2, 3) and min(shape) >= 1
+                and jnp.issubdtype(jnp.dtype(dtype), jnp.floating))
+
+    def _interpret(self) -> bool:
+        if self.interpret is not None:
+            return self.interpret
+        from ..kernels.extrema import default_interpret
+        return default_interpret()
+
+    # -- untiled protocol methods -------------------------------------
+    def extrema_masks(self, g: jnp.ndarray, topo, *,
+                      slab_lo: int = 0,
+                      n_slabs_total: Optional[int] = None) -> StencilMasks:
+        from ..kernels.extrema import extrema_masks_pallas
+        up_c, dn_c, selfe, dem, pro = extrema_masks_pallas(
+            g, topo.M, topo.m,
+            topo.is_max.astype(jnp.int32), topo.is_min.astype(jnp.int32),
+            interpret=self._interpret(), slab_lo=slab_lo,
+            n_slabs_total=n_slabs_total)
+        return StencilMasks(up_c, dn_c, selfe, dem, pro, topo.dn_c)
+
+    def fix_pass(self, g: jnp.ndarray, topo, masks: StencilMasks):
+        from ..kernels.fixpass import fix_pass_pallas
+        g2, viol = fix_pass_pallas(
+            g, topo.lower, masks.self_edit, masks.demote_src,
+            masks.promote_src, masks.up_c_g, masks.dn_c_f,
+            interpret=self._interpret())
+        return g2, jnp.sum(viol).astype(jnp.int32)
+
+    # -- fused iteration, tiled when needed ---------------------------
+    def _pick_tile(self, n_slabs: int) -> int:
+        if self.z_tile is not None:
+            return max(int(self.z_tile), 1)
+        return n_slabs if n_slabs <= self.vmem_slab_budget \
+            else self.vmem_slab_budget
+
+    def fused_step(self, g: jnp.ndarray, topo):
+        tile = self._pick_tile(g.shape[0])
+        if tile >= g.shape[0]:
+            masks = self.extrema_masks(g, topo)
+            return self.fix_pass(g, topo, masks)
+        return self._tiled_step(g, topo, tile)
+
+    def _tiled_step(self, g: jnp.ndarray, topo, tile: int):
+        """pMSz-style block-decomposed iteration over the slab axis.
+
+        Each tile [z0, z1) reads g with a 2-slab halo (the extrema masks
+        of the 1-slab fix halo need g one slab further out), runs both
+        kernels in global coordinates, and keeps only [z0, z1) of the
+        result. Tiles all read the pre-iteration g, so the update stays
+        the dense simultaneous one — bitwise equal to untiled.
+        """
+        from ..kernels.fixpass import fix_pass_pallas
+        n = g.shape[0]
+        interp = self._interpret()
+        outs = []
+        viol = jnp.int32(0)
+        for z0 in range(0, n, tile):
+            z1 = min(z0 + tile, n)
+            a, b = max(z0 - 2, 0), min(z1 + 2, n)
+            ext = slice(a, b)
+            masks = self.extrema_masks(
+                g[ext],
+                type(topo)(topo.up_c[ext], topo.dn_c[ext],
+                           topo.is_max[ext], topo.is_min[ext],
+                           topo.M[ext], topo.m[ext], topo.lower[ext]),
+                slab_lo=a, n_slabs_total=n)
+            c, d = max(z0 - 1, 0), min(z1 + 1, n)
+            ss = slice(c - a, d - a)
+            g2, _ = fix_pass_pallas(
+                g[c:d], topo.lower[c:d],
+                masks.self_edit[ss], masks.demote_src[ss],
+                masks.promote_src[ss], masks.up_c_g[ss], topo.dn_c[c:d],
+                interpret=interp, slab_lo=c, n_slabs_total=n)
+            outs.append(g2[z0 - c:z0 - c + (z1 - z0)])
+            tp = slice(z0 - a, z1 - a)  # tile proper: each slab counted once
+            viol = viol + (jnp.sum(masks.self_edit[tp])
+                           + jnp.sum(masks.demote_src[tp])
+                           + jnp.sum(masks.promote_src[tp])).astype(jnp.int32)
+        return jnp.concatenate(outs, axis=0), viol
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+BackendLike = Union[str, ReferenceBackend, PallasBackend]
+
+_REGISTRY: Dict[str, object] = {}
+
+
+def register_backend(backend, name: Optional[str] = None) -> None:
+    """Register a backend instance under ``name`` (default: backend.name)."""
+    _REGISTRY[name or backend.name] = backend
+
+
+def available_backends() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def get_backend(spec: BackendLike):
+    """Resolve a backend name or pass an instance through."""
+    if isinstance(spec, str):
+        if spec == "auto":
+            raise ValueError(
+                "'auto' needs field shape/dtype — use resolve_backend()")
+        try:
+            return _REGISTRY[spec]
+        except KeyError:
+            raise ValueError(
+                f"unknown stencil backend {spec!r}; "
+                f"available: {available_backends()}") from None
+    if not hasattr(spec, "fused_step"):
+        raise TypeError(f"not a stencil backend: {spec!r}")
+    return spec
+
+
+def resolve_backend(spec: BackendLike, shape: Tuple[int, ...], dtype):
+    """Like get_backend, but 'auto' picks pallas when the input is
+    supported and falls back to reference otherwise; an explicitly named
+    backend raises on unsupported inputs instead of silently falling
+    back."""
+    if isinstance(spec, str) and spec == "auto":
+        be = _REGISTRY["pallas"]
+        if be.supports(shape, dtype):
+            return be
+        return _REGISTRY["reference"]
+    be = get_backend(spec)
+    if not be.supports(shape, dtype):
+        raise ValueError(
+            f"backend {be.name!r} does not support fields of shape {shape} "
+            f"dtype {dtype}; use backend='auto' for automatic fallback")
+    return be
+
+
+register_backend(ReferenceBackend())
+register_backend(PallasBackend())
+# small fixed tile: exercises the halo-exchange path on modest fields
+register_backend(PallasBackend(name="pallas_tiled", z_tile=8))

@@ -18,11 +18,18 @@ Two execution modes:
   remain monotonically decreasing, so the paper's convergence argument
   (Lemma 1) applies verbatim.
 
+The fused iteration itself is executed by a pluggable *stencil backend*
+(``repro.core.backend``): ``reference`` (dense jnp, XLA-fused) or
+``pallas`` (slab-decomposed TPU kernels, with Z-tiling for large fields).
+Backends are bitwise-interchangeable; ``"auto"`` prefers pallas. The
+stencil predicates themselves (false_critical_masks, trouble_masks, the
+pull-based edit rule) live in backend.py and are re-exported here.
+
 Conflict resolution: the paper uses atomicCAS keeping the most significant
 edit. All edits decrease, and the edit value ``(g+f-xi)/2`` depends only on
 the *target* vertex, so concurrent edits to one vertex are identical — the
 dense formulation (each vertex pulls edit requests from its stencil) is
-conflict-free by construction and bitwise deterministic.
+conflict-free by construction and bitwise deterministic (DESIGN.md §2).
 """
 from __future__ import annotations
 
@@ -34,6 +41,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import grid
+from .backend import (BackendLike, FalseMasks, StencilMasks,  # noqa: F401
+                      _halve_toward_lower, _pull, false_critical_masks,
+                      get_backend, resolve_backend, trouble_masks)
 from .labels import labels_from_codes, pointer_jump
 
 
@@ -56,124 +66,82 @@ def field_topology(f: jnp.ndarray, xi) -> FieldTopo:
                      f - jnp.asarray(xi, f.dtype))
 
 
-def _halve_toward_lower(g, lower, mask):
-    """Eq. 2/3/4/5/6 decreasing edit, clamped so |f-g|<=xi holds exactly."""
-    new = jnp.maximum((g + lower) * jnp.asarray(0.5, g.dtype), lower)
-    return jnp.where(mask, new, g)
-
-
-def _pull(src_mask: jnp.ndarray, code: jnp.ndarray) -> jnp.ndarray:
-    """pulled[j] = OR_k ( src_mask[j - off_k] & code[j - off_k] == k ).
-
-    Dense 'pull' equivalent of the paper's atomic scatter: a vertex j is an
-    edit target iff some stencil neighbor i has ``src_mask[i]`` set and i's
-    direction code points at j.
-    """
-    offs = grid.offsets_for(src_mask.ndim)
-    out = jnp.zeros(src_mask.shape, bool)
-    for k, off in enumerate(offs):
-        noff = tuple(-o for o in off)
-        m = grid.shift(src_mask, noff, False)
-        c = grid.shift(code, noff, jnp.int32(-1))
-        out = out | (m & (c == k))
-    return out
-
-
 # ---------------------------------------------------------------------------
-# false-point predicates
+# fused mode — one dense pass applies every fix class at once, dispatched
+# to a stencil backend
 # ---------------------------------------------------------------------------
 
-class FalseMasks(NamedTuple):
-    fpmax: jnp.ndarray
-    fpmin: jnp.ndarray
-    fnmax: jnp.ndarray
-    fnmin: jnp.ndarray
-    up_c_g: jnp.ndarray
-    dn_c_g: jnp.ndarray
-
-
-def false_critical_masks(g: jnp.ndarray, topo: FieldTopo) -> FalseMasks:
-    """Definitions 1-3: the four false critical point classes."""
-    up_c_g, dn_c_g = grid.steepest_dirs(g)
-    sc = grid.self_code(g.ndim)
-    is_max_g = up_c_g == sc
-    is_min_g = dn_c_g == sc
-    return FalseMasks(
-        fpmax=is_max_g & ~topo.is_max,
-        fpmin=is_min_g & ~topo.is_min,
-        fnmax=~is_max_g & topo.is_max,
-        fnmin=~is_min_g & topo.is_min,
-        up_c_g=up_c_g,
-        dn_c_g=dn_c_g,
-    )
-
-
-def trouble_masks(g_codes: FalseMasks, topo: FieldTopo):
-    """Local R-loop predicates (our vectorized troublemaker test).
-
-    trouble_max(t): t non-max in g and its g-ascending edge leaves t's
-    original ascending region -> demote the wrong winner dir_up_g(t).
-    trouble_min(t): symmetric on the descending side -> promote (decrease)
-    the ORIGINAL descending neighbor dir_dn_f(t). Only decreasing edits can
-    'promote' a descent target, hence the asymmetry (see DESIGN.md §2).
-    """
-    sc = grid.self_code(topo.M.ndim)
-    nonmax_g = g_codes.up_c_g != sc
-    nonmin_g = g_codes.dn_c_g != sc
-    M_next = grid.gather_dir(topo.M, g_codes.up_c_g)
-    m_next = grid.gather_dir(topo.m, g_codes.dn_c_g)
-    trouble_max = nonmax_g & (M_next != topo.M)
-    trouble_min = nonmin_g & (m_next != topo.m)
-    return trouble_max, trouble_min
-
-
-# ---------------------------------------------------------------------------
-# fused mode — one dense pass applies every fix class at once
-# ---------------------------------------------------------------------------
-
-def fused_pass(g: jnp.ndarray, topo: FieldTopo):
+def fused_pass(g: jnp.ndarray, topo: FieldTopo,
+               backend: BackendLike = "reference"):
     """One iteration of the fused fixed-point loop.
 
     Returns (g_next, n_violations). n_violations == 0 iff g already
     preserves the full MS segmentation of f (extrema + all labels).
     """
-    fm = false_critical_masks(g, topo)
-    trouble_max, trouble_min = trouble_masks(fm, topo)
-
-    # self-edits: FPmax (Eq. 2) and FNmin (Eq. 5)
-    self_edit = fm.fpmax | fm.fnmin
-    # demote the wrong g-ascending winner: FNmax (Eq. 4) and max-label
-    # troublemakers (Eq. 6, ascending case). FNmax is NOT subsumed by
-    # trouble_max: if dir_up_g(t) happens to lead into t's own region,
-    # trouble_max(t) is False while t still must be restored as a maximum.
-    demote_src = fm.fnmax | trouble_max
-    # promote (decrease) the original descending neighbor: FPmin (our
-    # convergent variant of Eq. 3) and min-label troublemakers.
-    promote_src = fm.fpmin | trouble_min
-
-    target = (self_edit
-              | _pull(demote_src, fm.up_c_g)
-              | _pull(promote_src, topo.dn_c))
-    g_next = _halve_toward_lower(g, topo.lower, target)
-    n_viol = jnp.sum(self_edit) + jnp.sum(demote_src) + jnp.sum(promote_src)
-    return g_next, n_viol.astype(jnp.int32)
+    return get_backend(backend).fused_step(g, topo)
 
 
-@jax.jit
-def fused_fix(g0: jnp.ndarray, topo: FieldTopo, max_iters: int = 512):
-    """Run the fused loop to convergence. Returns (g, iters, converged)."""
+@functools.partial(jax.jit, static_argnames=("max_iters", "backend"))
+def fused_fix(g0: jnp.ndarray, topo: FieldTopo, max_iters: int = 512,
+              backend: BackendLike = "auto"):
+    """Run the fused loop to convergence. Returns (g, iters, converged).
+
+    ``backend`` selects the stencil execution strategy (see
+    core.backend); all backends produce bitwise-identical trajectories,
+    so this choice affects speed only.
+    """
+    be = resolve_backend(backend, g0.shape, g0.dtype)
+
     def cond(state):
         g, it, viol = state
         return (viol > 0) & (it < max_iters)
 
     def body(state):
         g, it, _ = state
-        g2, viol2 = fused_pass(g, topo)
+        g2, viol2 = be.fused_step(g, topo)
         return g2, it + 1, viol2
 
-    g1, viol1 = fused_pass(g0, topo)
+    g1, viol1 = be.fused_step(g0, topo)
     g, iters, viol = jax.lax.while_loop(cond, body, (g1, jnp.int32(1), viol1))
     return g, iters, viol == 0
+
+
+@functools.partial(jax.jit, static_argnames=("max_iters", "backend"))
+def fused_fix_batch(g0: jnp.ndarray, topo: FieldTopo, max_iters: int = 512,
+                    backend: BackendLike = "auto"):
+    """Batched fused loop over a leading batch axis (many-field workloads:
+    timestep series, ensemble members).
+
+    ``g0``: (B, *spatial); every FieldTopo leaf carries the same leading
+    batch axis. The per-iteration pass is vmapped across the batch and the
+    loop runs until every member converges; members that converge early
+    are frozen, so each member's (g, iters) is bitwise identical to a solo
+    ``fused_fix`` run. Returns (g (B, *spatial), iters (B,), converged
+    (B,) bool).
+    """
+    be = resolve_backend(backend, g0.shape[1:], g0.dtype)
+    step = jax.vmap(be.fused_step, in_axes=(0, 0))
+
+    def cond(state):
+        g, it, iters_b, viol = state
+        return jnp.any(viol > 0) & (it < max_iters)
+
+    def body(state):
+        g, it, iters_b, viol = state
+        g2, viol2 = step(g, topo)
+        active = viol > 0
+        # a converged member has no fix targets, so g2 == g for it already;
+        # the where is belt-and-braces freezing
+        keep = active.reshape((-1,) + (1,) * (g.ndim - 1))
+        return (jnp.where(keep, g2, g), it + 1,
+                iters_b + active.astype(jnp.int32),
+                jnp.where(active, viol2, viol))
+
+    g1, viol1 = step(g0, topo)
+    iters0 = jnp.ones(g0.shape[0], jnp.int32)
+    g, _, iters_b, viol = jax.lax.while_loop(
+        cond, body, (g1, jnp.int32(1), iters0, viol1))
+    return g, iters_b, viol == 0
 
 
 # ---------------------------------------------------------------------------

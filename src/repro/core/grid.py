@@ -70,13 +70,28 @@ def linear_index(shape: Sequence[int]) -> jnp.ndarray:
     return jnp.arange(int(np.prod(shape)), dtype=jnp.int32).reshape(shape)
 
 
-def _lex_gt(v1, i1, v2, i2):
-    """SoS strict order: (v1, i1) > (v2, i2)."""
-    return (v1 > v2) | ((v1 == v2) & (i1 > i2))
+def _sos_argbest(vals: jnp.ndarray, idxs: jnp.ndarray, *, ascending: bool):
+    """Slot of the SoS-lexicographic best along axis 0 of stacked
+    (values, linear indices): max (v, i) when ascending, min otherwise.
 
-
-def _lex_lt(v1, i1, v2, i2):
-    return (v1 < v2) | ((v1 == v2) & (i1 < i2))
+    Three small reductions instead of a chained compare-and-select scan:
+    the scan's carried values feed every comparison of every later step,
+    and XLA:CPU's elemental emitter re-emits each operand expression per
+    use, making one fused 14-step scan kernel exponential (~4x compile
+    time per stencil neighbor, >10^5 s for the full Freudenthal stencil).
+    Reductions are emitted as loops, keeping codegen linear; results are
+    bitwise identical to the scan.
+    """
+    if ascending:
+        v_best = jnp.max(vals, axis=0)
+        i_fill = jnp.int32(np.iinfo(np.int32).min)
+        i_best = jnp.max(jnp.where(vals == v_best, idxs, i_fill), axis=0)
+    else:
+        v_best = jnp.min(vals, axis=0)
+        i_fill = jnp.int32(np.iinfo(np.int32).max)
+        i_best = jnp.min(jnp.where(vals == v_best, idxs, i_fill), axis=0)
+    win = (vals == v_best) & (idxs == i_best)
+    return jnp.argmax(win, axis=0).astype(jnp.int32)
 
 
 @functools.partial(jax.jit, static_argnames=())
@@ -89,31 +104,26 @@ def steepest_dirs(f: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
     when ``v`` is a maximum. Symmetrically for ``dn_code`` / minima.
 
     This is the paper's dominant component ('updating directions', ~80% of
-    CPU time, Table 1) fused with its 'find critical points' pass.
+    CPU time, Table 1) fused with its 'find critical points' pass. Slot 0
+    of the stacked candidates is the vertex itself, so slot k+1 is stencil
+    code k and slot 0 winning means 'extremum'.
     """
     offs = offsets_for(f.ndim)
+    sc = jnp.int32(self_code(f.ndim))
     lin = linear_index(f.shape)
     neg_inf = jnp.asarray(-jnp.inf, f.dtype)
     pos_inf = jnp.asarray(jnp.inf, f.dtype)
 
-    up_v, up_i = f, lin
-    up_c = jnp.full(f.shape, self_code(f.ndim), jnp.int32)
-    dn_v, dn_i = f, lin
-    dn_c = jnp.full(f.shape, self_code(f.ndim), jnp.int32)
-    for k, off in enumerate(offs):
-        nv = shift(f, off, neg_inf)
-        ni = shift(lin, off, jnp.int32(-1))
-        take = _lex_gt(nv, ni, up_v, up_i)
-        up_v = jnp.where(take, nv, up_v)
-        up_i = jnp.where(take, ni, up_i)
-        up_c = jnp.where(take, jnp.int32(k), up_c)
+    up_vals = jnp.stack([f] + [shift(f, o, neg_inf) for o in offs])
+    up_idxs = jnp.stack([lin] + [shift(lin, o, jnp.int32(-1)) for o in offs])
+    slot_up = _sos_argbest(up_vals, up_idxs, ascending=True)
+    up_c = jnp.where(slot_up == 0, sc, slot_up - 1)
 
-        nv2 = shift(f, off, pos_inf)
-        ni2 = shift(lin, off, jnp.int32(np.iinfo(np.int32).max))
-        take2 = _lex_lt(nv2, ni2, dn_v, dn_i)
-        dn_v = jnp.where(take2, nv2, dn_v)
-        dn_i = jnp.where(take2, ni2, dn_i)
-        dn_c = jnp.where(take2, jnp.int32(k), dn_c)
+    i_max = jnp.int32(np.iinfo(np.int32).max)
+    dn_vals = jnp.stack([f] + [shift(f, o, pos_inf) for o in offs])
+    dn_idxs = jnp.stack([lin] + [shift(lin, o, i_max) for o in offs])
+    slot_dn = _sos_argbest(dn_vals, dn_idxs, ascending=False)
+    dn_c = jnp.where(slot_dn == 0, sc, slot_dn - 1)
     return up_c, dn_c
 
 

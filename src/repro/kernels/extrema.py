@@ -1,19 +1,29 @@
 """Pallas TPU kernel: fused 'update directions' + 'find false critical
-points' (the paper's two dominant components, Table 1) for 3D fields.
+points' (the paper's two dominant components, Table 1) for 2D and 3D
+fields.
 
-TPU mapping: grid over z-slabs; each program sees three (1, Y, X) slabs of
-each input (z-1, z, z+1) via overlapping BlockSpecs with clamped index
-maps — the TPU-native replacement for the paper's per-thread vertex loop.
-All 14 Freudenthal neighbors decompose into a static dz in {-1,0,1} slab
-select + static (dy, dx) in-slab shift, so the whole stencil is vector ops
-on VMEM-resident slabs; SoS tie-breaking uses arithmetic linear indices
-(no index arrays are loaded).
+TPU mapping: grid over slabs along the leading axis; each program sees
+three slabs of each input (s-1, s, s+1) via overlapping BlockSpecs with
+clamped index maps — the TPU-native replacement for the paper's
+per-thread vertex loop. A 3D field (Z, Y, X) decomposes over z-slabs of
+plane shape (Y, X); a 2D field (Y, X) reuses the identical machinery with
+y as the slab axis and (1, X) row planes (``slab_offsets``). Every
+Freudenthal neighbor decomposes into a static slab select in {-1, 0, +1}
+plus a static in-plane shift, so the whole stencil is vector ops on
+VMEM-resident slabs; SoS tie-breaking uses arithmetic linear indices (no
+index arrays are loaded).
+
+Tiled execution (pMSz-style block decomposition, see DESIGN.md §3):
+``slab_lo`` / ``n_slabs_total`` let a caller run the kernel on a z-tile
+of a larger field. Domain-boundary handling and SoS linear indices then
+use *global* coordinates, so outputs on slabs whose 1-slab halo lies
+inside the tile are bitwise identical to an untiled run; the tile driver
+(core.backend.PallasBackend) keeps a halo margin and discards the rest.
 
 Outputs per vertex: steepest ascending/descending direction codes of g,
 and the three fix-source masks (self_edit / demote / promote) consumed by
-the fix kernel. VMEM footprint: 8 slabs x Y*X*4B (~8 MB at 512x512), fits
-v5e VMEM; larger XY planes would tile Y as well (not needed for the
-paper's datasets).
+the fix kernel. VMEM footprint: ~11 slabs x Y*X*4B (~11 MB at 512x512),
+fits v5e VMEM; larger XY planes would tile Y as well.
 """
 from __future__ import annotations
 
@@ -24,11 +34,52 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from ..core.grid import OFFSETS_3D
+from ..core.grid import OFFSETS_2D, OFFSETS_3D, _sos_argbest
 
-SELF_CODE = len(OFFSETS_3D)  # 14
-_NEG = -3.4e38
-_POS = 3.4e38
+
+def default_interpret() -> bool:
+    """Pallas interpret mode is required everywhere but real TPUs."""
+    return jax.default_backend() != "tpu"
+
+
+def slab_offsets(ndim: int) -> Tuple[Tuple[int, int, int], ...]:
+    """Freudenthal offsets as (slab_delta, dy, dx) triples.
+
+    3D fields decompose over z-slabs of plane shape (Y, X); 2D fields
+    reuse the same slab machinery with y as the slab axis and (1, X)
+    row planes, so dy is always 0 and the 2D dy becomes the slab delta.
+    """
+    if ndim == 3:
+        return tuple(OFFSETS_3D)
+    if ndim == 2:
+        return tuple((dy, 0, dx) for (dy, dx) in OFFSETS_2D)
+    raise ValueError(f"slab kernels support 2D/3D fields, got ndim={ndim}")
+
+
+def slab_block_specs(ndim: int, n_local: int, P: int, X: int):
+    """(halo_specs, center_spec) for a slab-decomposed field.
+
+    ``halo_specs`` maps program s to slabs (s-1, s, s+1), clamped to the
+    *local* array; clamping at a tile edge that is not a domain edge
+    yields garbage the tile driver must discard (the kernels mask true
+    domain edges themselves, in global coordinates).
+    """
+    if ndim == 3:
+        halo = [
+            pl.BlockSpec((1, P, X), lambda z: (jnp.maximum(z - 1, 0), 0, 0)),
+            pl.BlockSpec((1, P, X), lambda z: (z, 0, 0)),
+            pl.BlockSpec((1, P, X),
+                         lambda z: (jnp.minimum(z + 1, n_local - 1), 0, 0)),
+        ]
+        center = pl.BlockSpec((1, P, X), lambda z: (z, 0, 0))
+    else:
+        halo = [
+            pl.BlockSpec((1, X), lambda z: (jnp.maximum(z - 1, 0), 0)),
+            pl.BlockSpec((1, X), lambda z: (z, 0)),
+            pl.BlockSpec((1, X), lambda z: (jnp.minimum(z + 1, n_local - 1), 0)),
+        ]
+        center = pl.BlockSpec((1, X), lambda z: (z, 0))
+    return halo, center
 
 
 def _shift2d(a, dy: int, dx: int, fill):
@@ -40,97 +91,113 @@ def _shift2d(a, dy: int, dx: int, fill):
                          (max(0, dy) + Y, max(0, dx) + X))
 
 
-def _neighbor_scan(slabs, z, Z, Y, X, lin, *, ascending: bool):
-    """Returns (best_code, is_extremum) for the SoS-steepest neighbor."""
-    fill = _NEG if ascending else _POS
-    best_v = slabs[1]
-    best_i = lin
-    best_c = jnp.full((Y, X), SELF_CODE, jnp.int32)
-    for k, (dz, dy, dx) in enumerate(OFFSETS_3D):
-        src = slabs[dz + 1]
-        v = _shift2d(src, dy, dx, fill)
-        # z-boundary: clamped index_map made slab z-1 == slab z at z==0
-        if dz == -1:
+def _neighbor_scan(slabs, z, N, lin, offs, *, ascending: bool):
+    """Returns (best_code, is_extremum) for the SoS-steepest neighbor.
+
+    Off-domain fills are ±inf in the slab dtype (not f32 literals), so
+    f64 fields classify boundary extrema correctly. Candidates are
+    stacked and reduced via ``grid._sos_argbest`` — a chained
+    compare-and-select scan would compile exponentially on XLA:CPU (see
+    that helper's docstring); the stacked form is bitwise identical.
+    """
+    P, X = slabs[1].shape
+    fill = jnp.asarray(-jnp.inf if ascending else jnp.inf, slabs[1].dtype)
+    vals = [slabs[1]]
+    idxs = [lin]
+    for ds, dy, dx in offs:
+        v = _shift2d(slabs[ds + 1], dy, dx, fill)
+        # slab-axis domain boundary, in GLOBAL coordinates (tiled runs
+        # pass the tile's offset; clamped index_maps made slab s-1 == s)
+        if ds == -1:
             v = jnp.where(z == 0, fill, v)
-        elif dz == 1:
-            v = jnp.where(z == Z - 1, fill, v)
+        elif ds == 1:
+            v = jnp.where(z == N - 1, fill, v)
         # in-plane validity is already encoded by the fill value
-        ni = lin + (dz * Y + dy) * X + dx
-        if ascending:
-            take = (v > best_v) | ((v == best_v) & (ni > best_i))
-        else:
-            take = (v < best_v) | ((v == best_v) & (ni < best_i))
-        best_v = jnp.where(take, v, best_v)
-        best_i = jnp.where(take, ni, best_i)
-        best_c = jnp.where(take, jnp.int32(k), best_c)
-    return best_c, best_c == SELF_CODE
+        vals.append(v)
+        idxs.append(lin + (ds * P + dy) * X + dx)
+    slot = _sos_argbest(jnp.stack(vals), jnp.stack(idxs), ascending=ascending)
+    best_c = jnp.where(slot == 0, jnp.int32(len(offs)), slot - 1)
+    return best_c, slot == 0
 
 
 def _kernel(g_m, g_c, g_p, Mf_m, Mf_c, Mf_p, mf_m, mf_c, mf_p,
             maxf_c, minf_c,
-            up_out, dn_out, self_out, demote_out, promote_out, *, Z, Y, X):
-    z = pl.program_id(0)
-    lin_yx = (jax.lax.broadcasted_iota(jnp.int32, (Y, X), 0) * X
-              + jax.lax.broadcasted_iota(jnp.int32, (Y, X), 1))
-    lin = z * (Y * X) + lin_yx
+            up_out, dn_out, self_out, demote_out, promote_out,
+            *, N, P, X, slab_lo, offs):
+    z = slab_lo + pl.program_id(0)
+    lin_px = (jax.lax.broadcasted_iota(jnp.int32, (P, X), 0) * X
+              + jax.lax.broadcasted_iota(jnp.int32, (P, X), 1))
+    lin = z * (P * X) + lin_px
 
-    g_slabs = (g_m[0], g_c[0], g_p[0])
-    up_c, is_max_g = _neighbor_scan(g_slabs, z, Z, Y, X, lin, ascending=True)
-    dn_c, is_min_g = _neighbor_scan(g_slabs, z, Z, Y, X, lin, ascending=False)
+    def plane(ref):
+        return ref[...].reshape(P, X)
 
-    is_max_f = maxf_c[0] != 0
-    is_min_f = minf_c[0] != 0
+    g_slabs = (plane(g_m), plane(g_c), plane(g_p))
+    up_c, is_max_g = _neighbor_scan(g_slabs, z, N, lin, offs, ascending=True)
+    dn_c, is_min_g = _neighbor_scan(g_slabs, z, N, lin, offs, ascending=False)
+
+    is_max_f = plane(maxf_c) != 0
+    is_min_f = plane(minf_c) != 0
 
     # gather original labels at the g-steepest neighbor (Eq. 6 predicates)
     def gather_dir(slabs, code, self_val):
         out = self_val
-        for k, (dz, dy, dx) in enumerate(OFFSETS_3D):
-            v = _shift2d(slabs[dz + 1], dy, dx, 0)
+        for k, (ds, dy, dx) in enumerate(offs):
+            v = _shift2d(slabs[ds + 1], dy, dx, 0)
             out = jnp.where(code == k, v, out)
         return out
 
-    Mf_slabs = (Mf_m[0], Mf_c[0], Mf_p[0])
-    mf_slabs = (mf_m[0], mf_c[0], mf_p[0])
-    M_next = gather_dir(Mf_slabs, up_c, Mf_c[0])
-    m_next = gather_dir(mf_slabs, dn_c, mf_c[0])
+    Mf_slabs = (plane(Mf_m), plane(Mf_c), plane(Mf_p))
+    mf_slabs = (plane(mf_m), plane(mf_c), plane(mf_p))
+    M_next = gather_dir(Mf_slabs, up_c, Mf_slabs[1])
+    m_next = gather_dir(mf_slabs, dn_c, mf_slabs[1])
 
     fpmax = is_max_g & ~is_max_f
     fpmin = is_min_g & ~is_min_f
     fnmax = ~is_max_g & is_max_f
     fnmin = ~is_min_g & is_min_f
-    trouble_max = ~is_max_g & (M_next != Mf_c[0])
-    trouble_min = ~is_min_g & (m_next != mf_c[0])
+    trouble_max = ~is_max_g & (M_next != Mf_slabs[1])
+    trouble_min = ~is_min_g & (m_next != mf_slabs[1])
 
-    up_out[0] = up_c
-    dn_out[0] = dn_c
-    self_out[0] = (fpmax | fnmin).astype(jnp.int32)
-    demote_out[0] = (fnmax | trouble_max).astype(jnp.int32)
-    promote_out[0] = (fpmin | trouble_min).astype(jnp.int32)
+    up_out[...] = up_c.reshape(up_out.shape)
+    dn_out[...] = dn_c.reshape(dn_out.shape)
+    self_out[...] = (fpmax | fnmin).astype(jnp.int32).reshape(self_out.shape)
+    demote_out[...] = ((fnmax | trouble_max).astype(jnp.int32)
+                       .reshape(demote_out.shape))
+    promote_out[...] = ((fpmin | trouble_min).astype(jnp.int32)
+                        .reshape(promote_out.shape))
 
 
 def extrema_masks_pallas(g: jnp.ndarray, M_f: jnp.ndarray, m_f: jnp.ndarray,
                          is_max_f: jnp.ndarray, is_min_f: jnp.ndarray,
-                         *, interpret: bool = True):
-    """g: (Z,Y,X) f32; M_f/m_f: int32 labels of the original field;
-    is_max_f/min_f: int32 0/1. Returns (up_c, dn_c, self_edit, demote_src,
-    promote_src), all (Z,Y,X) int32."""
-    Z, Y, X = g.shape
+                         *, interpret: bool | None = None,
+                         slab_lo: int = 0, n_slabs_total: int | None = None):
+    """g: (Z,Y,X) or (Y,X) float; M_f/m_f: int32 labels of the original
+    field; is_max_f/min_f: int32 0/1. Returns (up_c, dn_c, self_edit,
+    demote_src, promote_src), all int32 of g's shape.
 
-    def halo_spec():
-        return [
-            pl.BlockSpec((1, Y, X), lambda z: (jnp.maximum(z - 1, 0), 0, 0)),
-            pl.BlockSpec((1, Y, X), lambda z: (z, 0, 0)),
-            pl.BlockSpec((1, Y, X),
-                         lambda z: (jnp.minimum(z + 1, Z - 1), 0, 0)),
-        ]
+    ``slab_lo``/``n_slabs_total`` place a z-tile inside a larger field
+    (global slab index of g[0], and the field's total slab count).
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    if g.ndim == 3:
+        n_local, P, X = g.shape
+    elif g.ndim == 2:
+        n_local, X = g.shape
+        P = 1
+    else:
+        raise ValueError(f"extrema kernel supports 2D/3D, got shape {g.shape}")
+    N = int(n_slabs_total) if n_slabs_total is not None else slab_lo + n_local
 
-    center = pl.BlockSpec((1, Y, X), lambda z: (z, 0, 0))
-    out_shape = [jax.ShapeDtypeStruct((Z, Y, X), jnp.int32)] * 5
-    kern = functools.partial(_kernel, Z=Z, Y=Y, X=X)
+    halo, center = slab_block_specs(g.ndim, n_local, P, X)
+    out_shape = [jax.ShapeDtypeStruct(g.shape, jnp.int32)] * 5
+    kern = functools.partial(_kernel, N=N, P=P, X=X, slab_lo=slab_lo,
+                             offs=slab_offsets(g.ndim))
     return pl.pallas_call(
         kern,
-        grid=(Z,),
-        in_specs=halo_spec() + halo_spec() + halo_spec() + [center, center],
+        grid=(n_local,),
+        in_specs=halo + halo + halo + [center, center],
         out_specs=[center] * 5,
         out_shape=out_shape,
         interpret=interpret,

@@ -7,9 +7,10 @@ Each vertex j decreases to (g_j + lower_j)/2 iff
   * a stencil neighbor i has demote_src[i] and up_code_g[i] pointing at j, or
   * a stencil neighbor i has promote_src[i] and dn_code_f[i] pointing at j.
 
-Same z-slab halo layout as the extrema kernel. Also emits the per-slab
-violation count (the paper's lock-free work-queue height becomes a
-reduction)."""
+Same slab halo layout as the extrema kernel (3D: z-slabs; 2D: y-rows),
+including the global-coordinate ``slab_lo``/``n_slabs_total`` placement
+for tiled execution. Also emits the per-slab violation count (the paper's
+lock-free work-queue height becomes a reduction)."""
 from __future__ import annotations
 
 import functools
@@ -18,8 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from ..core.grid import OFFSETS_3D
-from .extrema import _shift2d
+from .extrema import (_shift2d, default_interpret, slab_block_specs,
+                      slab_offsets)
 
 # code k is stored at i; i targets j = i + off_k. From j's view the source
 # sits at -off_k and must carry code k.
@@ -28,65 +29,72 @@ from .extrema import _shift2d
 def _kernel(g_c, low_c, self_c,
             dem_m, dem_c, dem_p, pro_m, pro_c, pro_p,
             upg_m, upg_c, upg_p, dnf_m, dnf_c, dnf_p,
-            g_out, viol_out, *, Z, Y, X):
-    z = pl.program_id(0)
+            g_out, viol_out, *, N, P, X, slab_lo, offs):
+    z = slab_lo + pl.program_id(0)
+
+    def plane(ref):
+        return ref[...].reshape(P, X)
 
     def pulled(src_slabs, code_slabs):
-        out = jnp.zeros((Y, X), bool)
-        for k, (dz, dy, dx) in enumerate(OFFSETS_3D):
-            sdz = -dz
-            src = src_slabs[sdz + 1]
-            cod = code_slabs[sdz + 1]
+        out = jnp.zeros((P, X), bool)
+        for k, (ds, dy, dx) in enumerate(offs):
+            sds = -ds
+            src = src_slabs[sds + 1]
+            cod = code_slabs[sds + 1]
             m = _shift2d(src, -dy, -dx, 0) != 0
             c = _shift2d(cod, -dy, -dx, -1)
-            if sdz == -1:
-                edge = z == 0
-                m = jnp.where(edge, False, m)
-            elif sdz == 1:
-                edge = z == Z - 1
-                m = jnp.where(edge, False, m)
+            if sds == -1:
+                m = jnp.where(z == 0, False, m)
+            elif sds == 1:
+                m = jnp.where(z == N - 1, False, m)
             out = out | (m & (c == k))
         return out
 
-    dem = (dem_m[0], dem_c[0], dem_p[0])
-    pro = (pro_m[0], pro_c[0], pro_p[0])
-    upg = (upg_m[0], upg_c[0], upg_p[0])
-    dnf = (dnf_m[0], dnf_c[0], dnf_p[0])
+    dem = (plane(dem_m), plane(dem_c), plane(dem_p))
+    pro = (plane(pro_m), plane(pro_c), plane(pro_p))
+    upg = (plane(upg_m), plane(upg_c), plane(upg_p))
+    dnf = (plane(dnf_m), plane(dnf_c), plane(dnf_p))
 
-    target = ((self_c[0] != 0)
+    self_p = plane(self_c)
+    target = ((self_p != 0)
               | pulled(dem, upg)
               | pulled(pro, dnf))
-    g = g_c[0]
-    low = low_c[0]
-    new = jnp.maximum((g + low) * 0.5, low)
-    g_out[0] = jnp.where(target, new, g)
-    viol = (jnp.sum(self_c[0]) + jnp.sum(dem_c[0]) + jnp.sum(pro_c[0]))
+    g = plane(g_c)
+    low = plane(low_c)
+    new = jnp.maximum((g + low) * jnp.asarray(0.5, g.dtype), low)
+    g_out[...] = jnp.where(target, new, g).reshape(g_out.shape)
+    viol = jnp.sum(self_p) + jnp.sum(dem[1]) + jnp.sum(pro[1])
     viol_out[0, 0] = viol.astype(jnp.int32)
 
 
 def fix_pass_pallas(g, lower, self_edit, demote_src, promote_src,
-                    up_code_g, dn_code_f, *, interpret: bool = True):
-    """Apply one fused fix pass. All inputs (Z,Y,X); masks int32 0/1.
-    Returns (g_next (Z,Y,X) f32, viol (Z,) int32 per-slab counts)."""
-    Z, Y, X = g.shape
+                    up_code_g, dn_code_f, *, interpret: bool | None = None,
+                    slab_lo: int = 0, n_slabs_total: int | None = None):
+    """Apply one fused fix pass. All inputs (Z,Y,X) or (Y,X); masks int32
+    0/1. Returns (g_next of g's shape/dtype, viol (n_slabs,) int32
+    per-slab counts). ``slab_lo``/``n_slabs_total`` as in the extrema
+    kernel."""
+    if interpret is None:
+        interpret = default_interpret()
+    if g.ndim == 3:
+        n_local, P, X = g.shape
+    elif g.ndim == 2:
+        n_local, X = g.shape
+        P = 1
+    else:
+        raise ValueError(f"fix kernel supports 2D/3D, got shape {g.shape}")
+    N = int(n_slabs_total) if n_slabs_total is not None else slab_lo + n_local
 
-    def halo():
-        return [
-            pl.BlockSpec((1, Y, X), lambda z: (jnp.maximum(z - 1, 0), 0, 0)),
-            pl.BlockSpec((1, Y, X), lambda z: (z, 0, 0)),
-            pl.BlockSpec((1, Y, X),
-                         lambda z: (jnp.minimum(z + 1, Z - 1), 0, 0)),
-        ]
-
-    center = pl.BlockSpec((1, Y, X), lambda z: (z, 0, 0))
+    halo, center = slab_block_specs(g.ndim, n_local, P, X)
     out_specs = [center, pl.BlockSpec((1, 1), lambda z: (z, 0))]
-    out_shape = [jax.ShapeDtypeStruct((Z, Y, X), g.dtype),
-                 jax.ShapeDtypeStruct((Z, 1), jnp.int32)]
-    kern = functools.partial(_kernel, Z=Z, Y=Y, X=X)
+    out_shape = [jax.ShapeDtypeStruct(g.shape, g.dtype),
+                 jax.ShapeDtypeStruct((n_local, 1), jnp.int32)]
+    kern = functools.partial(_kernel, N=N, P=P, X=X, slab_lo=slab_lo,
+                             offs=slab_offsets(g.ndim))
     g2, viol = pl.pallas_call(
         kern,
-        grid=(Z,),
-        in_specs=[center, center, center] + halo() + halo() + halo() + halo(),
+        grid=(n_local,),
+        in_specs=[center, center, center] + halo + halo + halo + halo,
         out_specs=out_specs,
         out_shape=out_shape,
         interpret=interpret,

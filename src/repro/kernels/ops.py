@@ -1,6 +1,11 @@
 """Jit'd public wrappers around the Pallas kernels with automatic fallback
-to the pure-jnp reference path (2D fields, or non-TPU backends where
-interpret-mode would be slower than XLA's fused stencils)."""
+to the pure-jnp reference path (non-TPU backends where interpret-mode
+would be slower than XLA's fused stencils).
+
+These are the low-level per-kernel entry points; production code goes
+through the stencil-backend dispatch in ``repro.core.backend`` instead,
+which adds 2D/3D selection, Z-tiling, and batching on top of the same
+kernels."""
 from __future__ import annotations
 
 import functools
@@ -9,30 +14,24 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
-from .extrema import extrema_masks_pallas
+from .extrema import default_interpret, extrema_masks_pallas
 from .fixpass import fix_pass_pallas
 from .lorenzo import lorenzo_quant_pallas
 
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
 @functools.partial(jax.jit, static_argnames=("use_pallas",))
 def extrema_masks(g, M_f, m_f, is_max_f, is_min_f, use_pallas: bool = False):
-    if use_pallas and g.ndim == 3:
-        return extrema_masks_pallas(g, M_f, m_f, is_max_f, is_min_f,
-                                    interpret=not _on_tpu())
+    if use_pallas and g.ndim in (2, 3):
+        return extrema_masks_pallas(g, M_f, m_f, is_max_f, is_min_f)
     return ref.extrema_masks_ref(g, M_f, m_f, is_max_f, is_min_f)
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas",))
 def fix_pass(g, lower, self_edit, demote_src, promote_src, up_code_g,
              dn_code_f, use_pallas: bool = False):
-    if use_pallas and g.ndim == 3:
+    if use_pallas and g.ndim in (2, 3):
         g2, viol = fix_pass_pallas(g, lower, self_edit, demote_src,
-                                   promote_src, up_code_g, dn_code_f,
-                                   interpret=not _on_tpu())
+                                   promote_src, up_code_g, dn_code_f)
         return g2, jnp.sum(viol)
     return ref.fix_pass_ref(g, lower, self_edit, demote_src, promote_src,
                             up_code_g, dn_code_f)
@@ -41,5 +40,5 @@ def fix_pass(g, lower, self_edit, demote_src, promote_src, up_code_g,
 @functools.partial(jax.jit, static_argnames=("step", "use_pallas"))
 def lorenzo_quant(f, step: float, use_pallas: bool = False):
     if use_pallas and f.ndim == 3:
-        return lorenzo_quant_pallas(f, step, interpret=not _on_tpu())
+        return lorenzo_quant_pallas(f, step, interpret=default_interpret())
     return ref.lorenzo_quant_ref(f, step)

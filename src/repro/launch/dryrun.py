@@ -32,6 +32,7 @@ from ..train import (AdamWConfig, TrainState, TrainStepConfig,
                      make_train_step)
 from . import specs as S
 from .mesh import make_production_mesh
+from ..models.sharding import use_mesh
 
 _DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "s32": 4,
                 "u64": 8, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
@@ -154,7 +155,7 @@ def build_train_lowered(cfg: ArchConfig, shape: ShapeConfig, mesh,
                      in_shardings=(state_shard, b_shard),
                      out_shardings=(state_shard, None),
                      donate_argnums=(0,))
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         lowered = jitted.lower(state_sds, batch_sds)
     return lowered, {"fsdp": fsdp}
 
@@ -171,7 +172,7 @@ def build_prefill_lowered(cfg: ArchConfig, shape: ShapeConfig, mesh):
     b_shard = S.batch_shardings(batch_sds, cfg, mesh)
     jitted = jax.jit(prefill_step, in_shardings=(p_shard, b_shard),
                      out_shardings=None)
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         lowered = jitted.lower(S.param_structs(cfg), batch_sds)
     return lowered, {}
 
@@ -188,7 +189,7 @@ def build_serve_lowered(cfg: ArchConfig, shape: ShapeConfig, mesh):
                      in_shardings=(p_shard, c_shard, b_shard["tokens"], None),
                      out_shardings=(b_shard["tokens"], None, c_shard),
                      donate_argnums=(1,))
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         lowered = jitted.lower(S.param_structs(cfg), c_sds,
                                batch_sds["tokens"], t_sds)
     return lowered, {}

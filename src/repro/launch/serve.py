@@ -19,6 +19,7 @@ from ..configs import get_config, get_smoke_config
 from ..models import init_decode_cache, init_params
 from ..serve import make_serve_step
 from .mesh import make_host_mesh, make_production_mesh
+from ..models.sharding import use_mesh
 
 
 def main(argv=None):
@@ -36,7 +37,7 @@ def main(argv=None):
         else make_production_mesh()
     max_len = args.prompt_len + args.new_tokens
 
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         params = init_params(cfg, jax.random.PRNGKey(args.seed))
         cache = init_decode_cache(cfg, args.batch, max_len)
         step = jax.jit(make_serve_step(cfg), donate_argnums=(1,))

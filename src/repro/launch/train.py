@@ -27,6 +27,7 @@ from ..train import (AdamWConfig, TrainState, TrainStepConfig, adamw_init,
                      make_train_step)
 from .mesh import make_host_mesh, make_production_mesh
 from . import specs as S
+from ..models.sharding import use_mesh
 
 
 def main(argv=None):
@@ -60,7 +61,7 @@ def main(argv=None):
                           decay_steps=args.steps)
     step_fn = make_train_step(cfg, tcfg, opt_cfg)
 
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         params = init_params(cfg, jax.random.PRNGKey(args.seed))
         state = TrainState(params=params, opt=adamw_init(params))
         p_shard = S.param_shardings(cfg, mesh)

@@ -25,6 +25,19 @@ class MeshAxes:
         return self.batch if len(self.batch) > 1 else self.batch[0]
 
 
+def use_mesh(mesh: jax.sharding.Mesh):
+    """Context manager installing ``mesh`` as the ambient mesh.
+
+    ``jax.set_mesh`` where available (newer jax); on older versions the
+    Mesh object's own context manager — ``ambient_axes()`` then reports
+    no abstract mesh and mesh-aware layers fall back to their dense
+    paths, which is the correct degradation."""
+    set_mesh = getattr(jax, "set_mesh", None)
+    if set_mesh is not None:
+        return set_mesh(mesh)
+    return mesh
+
+
 def axes_for_mesh(mesh: jax.sharding.Mesh) -> MeshAxes:
     names = mesh.axis_names
     if "pod" in names:

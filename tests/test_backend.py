@@ -1,0 +1,151 @@
+"""Stencil-backend dispatch: parity, tiling, batching, registry.
+
+The contract under test (core.backend): every backend — and every
+execution strategy within the pallas backend (untiled / Z-tiled /
+batched) — produces bitwise-identical fields AND iteration counts.
+"""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import (PallasBackend, ReferenceBackend, available_backends,
+                        derive_edits, derive_edits_batch, field_topology,
+                        fused_fix, fused_fix_batch, get_backend,
+                        resolve_backend, verify_preservation)
+from repro.compress import (compress_preserving_mss,
+                            compress_preserving_mss_batch,
+                            decompress_artifact)
+
+
+def _pair(shape, seed=0, xi=0.3):
+    rng = np.random.default_rng(seed)
+    f = rng.normal(size=shape).astype(np.float32)
+    fh = (f + rng.uniform(-xi, xi, size=shape) * 0.999).astype(np.float32)
+    return f, fh, xi
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_registry_contents():
+    names = available_backends()
+    assert "reference" in names and "pallas" in names
+    assert get_backend("reference").name == "reference"
+    assert get_backend(PallasBackend(z_tile=2)).z_tile == 2
+    with pytest.raises(ValueError, match="unknown stencil backend"):
+        get_backend("no_such_backend")
+
+
+def test_resolve_auto_prefers_pallas_and_falls_back():
+    assert resolve_backend("auto", (8, 8, 8), np.float32).name == "pallas"
+    # integer fields are outside the pallas contract -> reference
+    assert resolve_backend("auto", (8, 8), np.int32).name == "reference"
+    with pytest.raises(ValueError, match="does not support"):
+        resolve_backend("pallas", (8, 8), np.int32)
+
+
+# ---------------------------------------------------------------------------
+# bitwise parity reference <-> pallas, 2D and 3D
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(9, 11), (12, 16), (5, 6, 7), (8, 6, 10)])
+def test_backend_parity_bitwise(shape):
+    f, fh, xi = _pair(shape, seed=hash(shape) % 97)
+    topo = field_topology(jnp.asarray(f), xi)
+    g_r, it_r, ok_r = fused_fix(jnp.asarray(fh), topo, backend="reference")
+    g_p, it_p, ok_p = fused_fix(jnp.asarray(fh), topo, backend="pallas")
+    np.testing.assert_array_equal(np.asarray(g_r), np.asarray(g_p))
+    assert int(it_r) == int(it_p)
+    assert bool(ok_r) and bool(ok_p)
+
+
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+@pytest.mark.parametrize("shape", [(9, 11), (6, 7, 8)])
+def test_derive_edits_end_to_end_per_backend(backend, shape):
+    f, fh, xi = _pair(shape, seed=3)
+    res = derive_edits(f, fh, xi, backend=backend)
+    assert res.converged
+    assert res.backend == backend
+    v = verify_preservation(f, res.g, xi)
+    assert v["mss_preserved"], v
+    assert v["bound_ok"], v
+
+
+def test_default_production_path_is_pallas():
+    f, fh, xi = _pair((6, 7, 8), seed=9)
+    res = derive_edits(f, fh, xi)          # defaults: mode=fused, auto
+    assert res.backend == "pallas"
+
+
+# ---------------------------------------------------------------------------
+# Z-tiled execution (pMSz-style halo exchange)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape,tile", [((13, 6, 7), 3), ((29, 11), 5)])
+def test_tiled_matches_untiled_bitwise(shape, tile):
+    f, fh, xi = _pair(shape, seed=5)
+    topo = field_topology(jnp.asarray(f), xi)
+    g_u, it_u, ok_u = fused_fix(jnp.asarray(fh), topo, backend="pallas")
+    tiled = PallasBackend(z_tile=tile)
+    g_t, it_t, ok_t = fused_fix(jnp.asarray(fh), topo, backend=tiled)
+    np.testing.assert_array_equal(np.asarray(g_u), np.asarray(g_t))
+    assert int(it_u) == int(it_t)
+    assert bool(ok_u) and bool(ok_t)
+
+
+def test_vmem_budget_triggers_tiling():
+    """A field taller than the slab budget must auto-tile — and still match
+    the untiled result exactly."""
+    f, fh, xi = _pair((12, 5, 6), seed=6)
+    topo = field_topology(jnp.asarray(f), xi)
+    budgeted = PallasBackend(vmem_slab_budget=4)
+    assert budgeted._pick_tile(12) == 4           # tiling engages
+    g_t, it_t, _ = fused_fix(jnp.asarray(fh), topo, backend=budgeted)
+    g_u, it_u, _ = fused_fix(jnp.asarray(fh), topo, backend="pallas")
+    np.testing.assert_array_equal(np.asarray(g_t), np.asarray(g_u))
+    assert int(it_t) == int(it_u)
+
+
+# ---------------------------------------------------------------------------
+# batched execution
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+def test_fused_fix_batch_matches_solo(backend):
+    shape, xi, B = (5, 6, 7), 0.3, 4
+    rng = np.random.default_rng(11)
+    fs = np.stack([rng.normal(size=shape).astype(np.float32)
+                   for _ in range(B)])
+    fhs = np.stack([(fi + rng.uniform(-xi, xi, size=shape) * 0.999)
+                    .astype(np.float32) for fi in fs])
+    results = derive_edits_batch(fs, fhs, xi, backend=backend)
+    assert len(results) == B
+    for fi, fhi, res in zip(fs, fhs, results):
+        solo = derive_edits(fi, fhi, xi, backend=backend)
+        np.testing.assert_array_equal(res.g, solo.g)
+        assert res.iters == solo.iters
+        assert res.converged
+        assert verify_preservation(fi, res.g, xi)["mss_preserved"]
+
+
+def test_pipeline_batch_roundtrip_preserves_mss():
+    """>=4 fields through the batch compression API: every member must
+    decompress to a field with the original's exact MSS."""
+    from repro.data import synthetic_field
+    B, shape = 4, (10, 12, 8)
+    fields = [synthetic_field("molecular", shape=shape, seed=s)
+              for s in range(B)]
+    xi = [0.02 * float(np.ptp(fi)) for fi in fields]
+    arts = compress_preserving_mss_batch(fields, xi, base="szlike")
+    assert len(arts) == B
+    for fi, xi_i, art in zip(fields, xi, arts):
+        g = decompress_artifact(art)
+        v = verify_preservation(fi, g, xi_i)
+        assert v["mss_preserved"], v
+        assert v["bound_ok"], v
+        assert art.backend == "pallas"
+    # batch artifacts match solo-pipeline artifacts byte-for-byte
+    solo = compress_preserving_mss(fields[0], xi[0], base="szlike")
+    assert arts[0].edit_payload == solo.edit_payload
+    assert arts[0].base_payload == solo.base_payload

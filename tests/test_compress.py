@@ -2,7 +2,7 @@
 end-to-end MSS-preserving pipeline."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp_compat import given, settings, st
 
 from repro.compress import (sz_roundtrip, zfp_roundtrip, encode_edits,
                             decode_edits, compress_preserving_mss,

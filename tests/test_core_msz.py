@@ -2,7 +2,7 @@
 import numpy as np
 import pytest
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _hyp_compat import given, settings, st
 
 from repro.core import (steepest_dirs, mss_labels, derive_edits, apply_edits,
                         verify_preservation, segmentation_accuracy,

@@ -5,13 +5,15 @@ import pytest
 import jax
 import jax.numpy as jnp
 
-from repro.core import field_topology, mss_labels, steepest_dirs
+from repro.core import (field_topology, mss_labels, self_code, steepest_dirs)
 from repro.kernels import ref as kref
 from repro.kernels.extrema import extrema_masks_pallas
 from repro.kernels.fixpass import fix_pass_pallas
 from repro.kernels.lorenzo import lorenzo_quant_pallas
 
 SHAPES_3D = [(4, 5, 6), (6, 8, 8), (3, 16, 16), (8, 4, 12)]
+SHAPES_2D = [(5, 7), (9, 11), (4, 16)]
+SHAPES = SHAPES_3D + SHAPES_2D
 
 
 def _setup(shape, seed=0, xi=0.3, dtype=np.float32):
@@ -20,12 +22,12 @@ def _setup(shape, seed=0, xi=0.3, dtype=np.float32):
     g = (f + rng.uniform(-xi, xi, size=shape)).astype(dtype)
     Mf, mf = mss_labels(jnp.asarray(f))
     upf, dnf = steepest_dirs(jnp.asarray(f))
-    sc = len(shape) * 0 + 14  # 3D self code
+    sc = self_code(len(shape))
     return (jnp.asarray(f), jnp.asarray(g), Mf, mf,
             (upf == sc), (dnf == sc), upf, dnf)
 
 
-@pytest.mark.parametrize("shape", SHAPES_3D)
+@pytest.mark.parametrize("shape", SHAPES)
 @pytest.mark.parametrize("seed", [0, 7])
 def test_extrema_kernel_matches_ref(shape, seed):
     f, g, Mf, mf, maxf, minf, _, dnf = _setup(shape, seed)
@@ -38,7 +40,7 @@ def test_extrema_kernel_matches_ref(shape, seed):
                                       err_msg=f"mismatch in {name}")
 
 
-@pytest.mark.parametrize("shape", SHAPES_3D[:2])
+@pytest.mark.parametrize("shape", [SHAPES_3D[0], SHAPES_2D[0]])
 def test_extrema_kernel_dtype_sweep(shape):
     # f32 and f64 fields must classify identically for integer outputs
     for dtype in (np.float32, np.float64):
@@ -49,7 +51,7 @@ def test_extrema_kernel_dtype_sweep(shape):
         np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))
 
 
-@pytest.mark.parametrize("shape", SHAPES_3D)
+@pytest.mark.parametrize("shape", SHAPES_3D + SHAPES_2D[:1])
 @pytest.mark.parametrize("seed", [1, 11])
 def test_fixpass_kernel_matches_ref(shape, seed):
     f, g, Mf, mf, maxf, minf, upf, dnf = _setup(shape, seed)
@@ -73,9 +75,29 @@ def test_lorenzo_kernel_matches_ref(shape, step):
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
+def test_tiled_kernel_placement_matches_full():
+    """Global-coordinate tiling: running the extrema kernel on an interior
+    z-tile (slab_lo/n_slabs_total) must reproduce the full-field outputs on
+    every slab whose 1-slab halo lies inside the tile."""
+    shape = (9, 5, 6)
+    f, g, Mf, mf, maxf, minf, _, dnf = _setup(shape, 4)
+    full = extrema_masks_pallas(g, Mf, mf, maxf.astype(jnp.int32),
+                                minf.astype(jnp.int32), interpret=True)
+    a, b = 2, 8                     # tile [2, 8); interior slabs [3, 7)
+    tile = extrema_masks_pallas(
+        g[a:b], Mf[a:b], mf[a:b],
+        maxf[a:b].astype(jnp.int32), minf[a:b].astype(jnp.int32),
+        interpret=True, slab_lo=a, n_slabs_total=shape[0])
+    for got, want, name in zip(tile, full,
+                               ["up_c", "dn_c", "self", "demote", "promote"]):
+        np.testing.assert_array_equal(
+            np.asarray(got)[1:-1], np.asarray(want)[a + 1:b - 1],
+            err_msg=f"tiled mismatch in {name}")
+
+
 def test_kernel_fix_loop_end_to_end():
     """Drive the fused fix loop entirely through the Pallas kernels and
-    check it reaches the same fixpoint as the jnp driver."""
+    check it reaches the same fixpoint as the reference-backend driver."""
     from repro.core import derive_edits
     shape = (5, 6, 7)
     rng = np.random.default_rng(2)
@@ -84,7 +106,8 @@ def test_kernel_fix_loop_end_to_end():
     fh = (f + rng.uniform(-xi, xi, size=shape) * 0.99).astype(np.float32)
     Mf, mf = mss_labels(jnp.asarray(f))
     upf, dnf = steepest_dirs(jnp.asarray(f))
-    maxf, minf = (upf == 14).astype(jnp.int32), (dnf == 14).astype(jnp.int32)
+    sc = self_code(len(shape))
+    maxf, minf = (upf == sc).astype(jnp.int32), (dnf == sc).astype(jnp.int32)
     lower = jnp.asarray(f) - xi
 
     g = jnp.asarray(fh)
@@ -96,5 +119,5 @@ def test_kernel_fix_loop_end_to_end():
         if int(jnp.sum(viol)) == 0:
             break
         g = g2
-    res = derive_edits(f, fh, xi, mode="fused")
+    res = derive_edits(f, fh, xi, mode="fused", backend="reference")
     np.testing.assert_allclose(np.asarray(g), res.g, rtol=0, atol=0)

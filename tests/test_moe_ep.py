@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import layers
+from repro.models.sharding import use_mesh
 
 
 def _mk(seed, N=64, d=16, E=8, ff=32):
@@ -28,13 +29,21 @@ def _mk(seed, N=64, d=16, E=8, ff=32):
     return x, p
 
 
+# without jax.set_mesh there is no ambient abstract mesh, so moe_ffn_ep
+# falls back to the dense path and the EP-vs-dense comparison is vacuous
+_NEEDS_SET_MESH = pytest.mark.skipif(
+    getattr(jax, "set_mesh", None) is None,
+    reason="jax.set_mesh unavailable: EP path cannot engage on this jax")
+
+
+@_NEEDS_SET_MESH
 def test_ep_matches_dense_single_device_mesh():
     """On a 1x1 mesh the a2a is identity; EP must agree with dense up to
     capacity-drop differences (capacity is ample here)."""
     x, p = _mk(0)
     dense = layers.moe_ffn(x, p, n_experts=8, top_k=2, capacity_factor=4.0)
     mesh = jax.make_mesh((1, 1), ("data", "model"))
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         ep = layers.moe_ffn_ep(x, p, n_experts=8, top_k=2,
                                capacity_factor=4.0)
     np.testing.assert_allclose(np.asarray(ep.y), np.asarray(dense.y),
@@ -50,6 +59,7 @@ _SUBPROC = textwrap.dedent("""
     sys.path.insert(0, "src")
     import numpy as np, jax, jax.numpy as jnp
     from repro.models import layers
+    from repro.models.sharding import use_mesh
 
     rng = np.random.default_rng(1)
     N, d, E, ff, K = 128, 16, {E}, 32, 2
@@ -62,7 +72,7 @@ _SUBPROC = textwrap.dedent("""
     }}
     dense = layers.moe_ffn(x, p, E, K, capacity_factor=8.0)
     mesh = jax.make_mesh((2, 4), ("data", "model"))
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         ep = jax.jit(lambda x, p: layers.moe_ffn_ep(x, p, E, K,
                                                     capacity_factor=8.0))(x, p)
     err = float(jnp.max(jnp.abs(ep.y - dense.y)))
@@ -72,6 +82,7 @@ _SUBPROC = textwrap.dedent("""
 """)
 
 
+@_NEEDS_SET_MESH
 @pytest.mark.parametrize("E", [8, 4])   # E=8 -> E%tp==0 path (tp=4 -> m=1
                                         # after gcd); E=4 -> virtual experts
 def test_ep_matches_dense_multidevice(E):
