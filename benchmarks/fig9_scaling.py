@@ -1,8 +1,16 @@
 """Fig. 9/10 reinterpretation: the paper's strong-scaling study sweeps CPU
-threads; on one CPU we sweep the *problem size* instead and report
-throughput (vertices/s) of the end-to-end fix — flat throughput means the
-dense formulation scales linearly in V, which is the property the paper's
-parallelization targets."""
+threads; we sweep two axes instead:
+
+* *problem size* on one device — flat vertices/s means the dense
+  formulation scales linearly in V, the property the paper's
+  parallelization targets;
+* *device count* over the ('data',) mesh — the slab-sharded SPMD loop
+  (repro.distributed.shardfix) on 1/2/4/8 devices of one field, the
+  strong-scaling axis proper. On CPU hosts emulate devices with
+  ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (set before jax
+  initializes); with one device the sweep reports the degenerate point
+  only.
+"""
 from __future__ import annotations
 
 import numpy as np
@@ -11,8 +19,17 @@ import jax.numpy as jnp
 
 from repro.core import field_topology, fused_fix
 from repro.data import synthetic_field
+from repro.launch.mesh import make_data_mesh
 
 from .common import emit, timeit
+
+
+def _field_pair(shape, rng):
+    f = synthetic_field("fingering", shape=shape)
+    xi = 1e-3 * float(np.ptp(f))
+    g = jnp.asarray((f + rng.uniform(-xi, xi, size=shape))
+                    .astype(np.float32))
+    return f, g, xi
 
 
 def run(quick: bool = True):
@@ -24,10 +41,7 @@ def run(quick: bool = True):
     backends = ("reference",) if quick else ("reference", "pallas")
     rng = np.random.default_rng(0)
     for shape in sizes:
-        f = synthetic_field("fingering", shape=shape)
-        xi = 1e-3 * float(np.ptp(f))
-        g = jnp.asarray((f + rng.uniform(-xi, xi, size=shape))
-                        .astype(np.float32))
+        f, g, xi = _field_pair(shape, rng)
         topo = field_topology(jnp.asarray(f), xi)
         V = int(np.prod(shape))
 
@@ -38,6 +52,22 @@ def run(quick: bool = True):
 
             t = timeit(go, warmup=1, iters=3)
             emit(f"fig9/fused_fix/{backend}/V={V}", t, f"Mvert_s={V/t:.3f}")
+
+    # -- device-count scaling of the sharded loop (one fixed field) ----
+    n_avail = len(jax.devices())
+    shape = (16, 16, 16) if quick else (32, 32, 32)
+    f, g, xi = _field_pair(shape, rng)
+    topo = field_topology(jnp.asarray(f), xi)
+    V = int(np.prod(shape))
+    for n_dev in (n for n in (1, 2, 4, 8) if n <= n_avail):
+        mesh = make_data_mesh(n_dev)
+
+        def go_sharded():
+            out, it, ok = fused_fix(g, topo, backend="sharded", mesh=mesh)
+            jax.block_until_ready(out)
+
+        t = timeit(go_sharded, warmup=1, iters=3)
+        emit(f"fig9/shardfix/ndev={n_dev}/V={V}", t, f"Mvert_s={V/t:.3f}")
 
 
 if __name__ == "__main__":

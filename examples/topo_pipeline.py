@@ -4,27 +4,56 @@ preservation on every cell, and print the paper's metrics (OCR, OBR, edit
 ratio, PSNR, right-labeled ratio before correction).
 
   PYTHONPATH=src python examples/topo_pipeline.py [--full]
+
+With ``--devices N`` the fix loops run slab-sharded over an N-device
+('data',) mesh (repro.distributed.shardfix); on CPU-only hosts N devices
+are emulated via --xla_force_host_platform_device_count, which this
+script sets as long as jax has not initialized its backends yet.
+Artifacts are bitwise identical to single-device runs — only the
+``backend`` column changes.
 """
 import argparse
+import os
 import time
 
-import numpy as np
-import jax.numpy as jnp
 
-from repro.compress import (compress_preserving_mss, decompress_artifact,
-                            overall_bit_rate, overall_compression_ratio,
-                            psnr, sz_roundtrip, zfp_roundtrip)
-from repro.core import segmentation_accuracy, verify_preservation
-from repro.data import synthetic_field
-
-
-def main():
+def _parse_args():
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--backend", default="auto",
                     help="stencil backend for the fix loops "
-                         "(auto | reference | pallas | pallas_tiled)")
-    args = ap.parse_args()
+                         "(auto | reference | pallas | pallas_tiled | "
+                         "sharded)")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="shard the fix loops over an N-device ('data',) "
+                         "mesh (emulated on CPU hosts)")
+    return ap.parse_args()
+
+
+def main():
+    args = _parse_args()
+    if args.devices > 1:
+        # must land before jax initializes its backends (imports below)
+        flag = f"--xla_force_host_platform_device_count={args.devices}"
+        if flag not in os.environ.get("XLA_FLAGS", ""):
+            os.environ["XLA_FLAGS"] = \
+                (os.environ.get("XLA_FLAGS", "") + " " + flag).strip()
+
+    import numpy as np
+    import jax.numpy as jnp
+
+    from repro.compress import (compress_preserving_mss, decompress_artifact,
+                                overall_bit_rate, overall_compression_ratio,
+                                psnr, sz_roundtrip, zfp_roundtrip)
+    from repro.core import segmentation_accuracy, verify_preservation
+    from repro.data import synthetic_field
+    from repro.launch.mesh import make_data_mesh
+
+    mesh = None
+    if args.devices > 1:
+        mesh = make_data_mesh(args.devices)
+        print(f"# sharding fix loops over {args.devices} devices "
+              f"(mesh axes {dict(mesh.shape)})")
     datasets = {
         "molecular": (24, 24, 12),
         "nyx": (24, 24, 24),
@@ -48,7 +77,8 @@ def main():
                 raw_acc = float(segmentation_accuracy(jnp.asarray(f),
                                                       jnp.asarray(fh)))
                 art = compress_preserving_mss(f, xi, base=base,
-                                              backend=args.backend)
+                                              backend=args.backend,
+                                              mesh=mesh)
                 g = decompress_artifact(art)
                 rep = verify_preservation(f, g, xi)
                 ok = rep["mss_preserved"] and rep["bound_ok"]

@@ -80,7 +80,11 @@ def compress_preserving_mss(f: np.ndarray, xi: float, base: BaseName = "szlike",
                             mode: str = "fused",
                             edit_value_dtype: str = "f4",
                             max_iters: int = 512,
-                            backend: BackendLike = "auto") -> CompressedArtifact:
+                            backend: BackendLike = "auto",
+                            mesh=None) -> CompressedArtifact:
+    """``mesh``: route the fix loop through the slab-sharded SPMD backend
+    when the mesh has >= 2 ``data``-axis devices (artifacts stay byte-for-
+    byte identical to single-device runs)."""
     f = np.asarray(f)
     comp, decomp = _BASES[base]
     t0 = time.perf_counter()
@@ -88,7 +92,7 @@ def compress_preserving_mss(f: np.ndarray, xi: float, base: BaseName = "szlike",
     f_hat = decomp(payload)
     t1 = time.perf_counter()
     res = derive_edits(f, f_hat, xi, mode=mode, max_iters=max_iters,
-                       backend=backend)
+                       backend=backend, mesh=mesh)
     if not res.converged:
         raise RuntimeError("MSz fix loops did not converge within max_iters")
     t2 = time.perf_counter()
@@ -103,7 +107,8 @@ def compress_preserving_mss_batch(
         base: BaseName = "szlike",
         edit_value_dtype: str = "f4",
         max_iters: int = 512,
-        backend: BackendLike = "auto") -> List[CompressedArtifact]:
+        backend: BackendLike = "auto",
+        mesh=None) -> List[CompressedArtifact]:
     """Batch variant of compress_preserving_mss for many same-shape fields.
 
     Base compression/decompression runs per member (the codecs are
@@ -133,7 +138,8 @@ def compress_preserving_mss_batch(
 
     t0 = time.perf_counter()
     results = derive_edits_batch(np.stack(fields), np.stack(fhats), xi_arr,
-                                 max_iters=max_iters, backend=backend)
+                                 max_iters=max_iters, backend=backend,
+                                 mesh=mesh)
     t_fix_each = (time.perf_counter() - t0) / B
 
     arts = []

@@ -4,7 +4,8 @@ compression (Li et al., 2024), reformulated for TPU/JAX."""
 from .grid import (OFFSETS_2D, OFFSETS_3D, offsets_for, n_neighbors,
                    self_code, steepest_dirs, gather_dir, dir_to_pointer,
                    shift, linear_index)
-from .labels import mss_labels, pointer_jump, segmentation_accuracy, labels_from_codes
+from .labels import (mss_labels, pointer_jump, default_pointer_iters,
+                     segmentation_accuracy, labels_from_codes)
 from .backend import (StencilMasks, ReferenceBackend, PallasBackend,
                       register_backend, available_backends, get_backend,
                       resolve_backend)
@@ -17,7 +18,8 @@ from .driver import (MszResult, derive_edits, derive_edits_batch, apply_edits,
 __all__ = [
     "OFFSETS_2D", "OFFSETS_3D", "offsets_for", "n_neighbors", "self_code",
     "steepest_dirs", "gather_dir", "dir_to_pointer", "shift", "linear_index",
-    "mss_labels", "pointer_jump", "segmentation_accuracy", "labels_from_codes",
+    "mss_labels", "pointer_jump", "default_pointer_iters",
+    "segmentation_accuracy", "labels_from_codes",
     "StencilMasks", "ReferenceBackend", "PallasBackend",
     "register_backend", "available_backends", "get_backend", "resolve_backend",
     "FieldTopo", "field_topology", "false_critical_masks", "trouble_masks",

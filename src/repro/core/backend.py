@@ -16,11 +16,16 @@ iteration. Registered implementations:
   * ``pallas``    — the slab-decomposed Pallas TPU kernels
     (``kernels.extrema`` / ``kernels.fixpass``), interpret mode off-TPU,
     with pMSz-style Z-tiling for fields above a VMEM slab budget
+  * ``sharded``   — the same kernels distributed over the ``data`` axis
+    of a device mesh under shard_map with per-iteration ppermute halo
+    exchange (``repro.distributed.shardfix``, registered lazily)
 
 Backends must be bitwise-interchangeable: same g trajectory, same
-violation counts, same iteration count (tests/test_backend.py enforces
-this). ``resolve_backend("auto", ...)`` picks ``pallas`` whenever the
-input is supported and falls back to ``reference`` otherwise.
+violation counts, same iteration count (tests/test_backend.py and
+tests/test_shardfix.py enforce this). ``resolve_backend("auto", ...)``
+picks ``sharded`` when a mesh with >= 2 data-axis devices is given or
+active, else ``pallas`` whenever the input is supported, and falls back
+to ``reference`` otherwise.
 """
 from __future__ import annotations
 
@@ -273,13 +278,26 @@ BackendLike = Union[str, ReferenceBackend, PallasBackend]
 
 _REGISTRY: Dict[str, object] = {}
 
+# backends living in higher layers register themselves on import; naming
+# one here pulls its module in on demand so `get_backend("sharded")` works
+# without the caller importing repro.distributed first
+_LAZY_MODULES: Dict[str, str] = {"sharded": "repro.distributed.shardfix"}
+
 
 def register_backend(backend, name: Optional[str] = None) -> None:
     """Register a backend instance under ``name`` (default: backend.name)."""
     _REGISTRY[name or backend.name] = backend
 
 
+def _ensure_lazy_backends() -> None:
+    import importlib
+    for name, module in _LAZY_MODULES.items():
+        if name not in _REGISTRY:
+            importlib.import_module(module)
+
+
 def available_backends() -> Tuple[str, ...]:
+    _ensure_lazy_backends()
     return tuple(sorted(_REGISTRY))
 
 
@@ -289,6 +307,8 @@ def get_backend(spec: BackendLike):
         if spec == "auto":
             raise ValueError(
                 "'auto' needs field shape/dtype — use resolve_backend()")
+        if spec not in _REGISTRY and spec in _LAZY_MODULES:
+            _ensure_lazy_backends()
         try:
             return _REGISTRY[spec]
         except KeyError:
@@ -300,18 +320,44 @@ def get_backend(spec: BackendLike):
     return spec
 
 
-def resolve_backend(spec: BackendLike, shape: Tuple[int, ...], dtype):
-    """Like get_backend, but 'auto' picks pallas when the input is
-    supported and falls back to reference otherwise; an explicitly named
-    backend raises on unsupported inputs instead of silently falling
-    back."""
+def _auto_sharded(shape, dtype, mesh):
+    """The 'sharded' backend bound to ``mesh`` when it (or the active
+    ``with mesh:`` context) has >= 2 data-axis devices, else None."""
+    be = get_backend("sharded")          # lazy-registers via _LAZY_MODULES
+    if mesh is not None:
+        be = be.with_mesh(mesh)
+    else:
+        try:
+            be = be.bind()               # resolve the active mesh context
+        except ValueError:
+            return None
+    if be.n_data_devices() < 2 or not be.supports(shape, dtype):
+        return None
+    return be
+
+
+def resolve_backend(spec: BackendLike, shape: Tuple[int, ...], dtype,
+                    mesh=None):
+    """Like get_backend, but 'auto' picks the best supported backend —
+    'sharded' when a mesh with >= 2 data-axis devices is given or active,
+    else 'pallas', else 'reference'. An explicitly named backend raises on
+    unsupported inputs instead of silently falling back; ``mesh`` is bound
+    into a mesh-less sharded backend when provided."""
     if isinstance(spec, str) and spec == "auto":
+        be = _auto_sharded(shape, dtype, mesh)
+        if be is not None:
+            return be
         be = _REGISTRY["pallas"]
         if be.supports(shape, dtype):
             return be
         return _REGISTRY["reference"]
     be = get_backend(spec)
+    if mesh is not None and hasattr(be, "with_mesh") \
+            and getattr(be, "mesh", None) is None:
+        be = be.with_mesh(mesh)
     if not be.supports(shape, dtype):
+        if hasattr(be, "bind"):
+            be.bind()   # raises the 'needs a mesh' error when that is why
         raise ValueError(
             f"backend {be.name!r} does not support fields of shape {shape} "
             f"dtype {dtype}; use backend='auto' for automatic fallback")

@@ -64,14 +64,16 @@ def _package_result(f, f_hat, g, iters, ok, backend_name: str) -> MszResult:
 
 def derive_edits(f, f_hat, xi: float, mode: Mode = "fused",
                  max_iters: int = 512,
-                 backend: BackendLike = "auto") -> MszResult:
+                 backend: BackendLike = "auto", mesh=None) -> MszResult:
     """Compute the edit series {delta_i} such that f_hat + delta has exactly
     the MS segmentation of f, while |f - (f_hat+delta)| <= xi (Section 4).
 
     ``backend`` picks the stencil execution strategy for the fused loop
-    ("auto" prefers the Pallas kernels and falls back to the jnp
-    reference; see core.backend). Paper mode always runs the reference
-    stencils. Precondition (checked): |f - f_hat| <= xi, same shapes.
+    ("auto" prefers the slab-sharded SPMD loop when ``mesh`` — or the
+    active ``with mesh:`` context — has >= 2 data-axis devices, then the
+    Pallas kernels, then the jnp reference; see core.backend). Paper mode
+    always runs the reference stencils. Precondition (checked):
+    |f - f_hat| <= xi, same shapes.
     """
     f = jnp.asarray(f)
     f_hat = jnp.asarray(f_hat, f.dtype)
@@ -79,7 +81,7 @@ def derive_edits(f, f_hat, xi: float, mode: Mode = "fused",
 
     topo = fixes.field_topology(f, xi)
     if mode == "fused":
-        be = resolve_backend(backend, f.shape, f.dtype)
+        be = resolve_backend(backend, f.shape, f.dtype, mesh=mesh)
         g, iters, ok = fixes.fused_fix(f_hat, topo, max_iters=max_iters,
                                        backend=be)
         backend_name = be.name
@@ -94,7 +96,8 @@ def derive_edits(f, f_hat, xi: float, mode: Mode = "fused",
 
 def derive_edits_batch(f, f_hat, xi: Union[float, Sequence[float]],
                        max_iters: int = 512,
-                       backend: BackendLike = "auto") -> List[MszResult]:
+                       backend: BackendLike = "auto",
+                       mesh=None) -> List[MszResult]:
     """Batched ``derive_edits`` over a leading batch axis (fused mode).
 
     ``f``/``f_hat``: (B, *spatial) with spatial rank 2 or 3; ``xi`` is a
@@ -119,7 +122,7 @@ def derive_edits_batch(f, f_hat, xi: Union[float, Sequence[float]],
 
     topos = [fixes.field_topology(f[i], float(xi_arr[i])) for i in range(B)]
     topo_b = jax.tree_util.tree_map(lambda *leaves: jnp.stack(leaves), *topos)
-    be = resolve_backend(backend, f.shape[1:], f.dtype)
+    be = resolve_backend(backend, f.shape[1:], f.dtype, mesh=mesh)
     g_b, iters_b, ok_b = fixes.fused_fix_batch(f_hat, topo_b,
                                                max_iters=max_iters, backend=be)
     g_b = np.asarray(g_b)

@@ -81,16 +81,20 @@ def fused_pass(g: jnp.ndarray, topo: FieldTopo,
     return get_backend(backend).fused_step(g, topo)
 
 
-@functools.partial(jax.jit, static_argnames=("max_iters", "backend"))
-def fused_fix(g0: jnp.ndarray, topo: FieldTopo, max_iters: int = 512,
-              backend: BackendLike = "auto"):
-    """Run the fused loop to convergence. Returns (g, iters, converged).
+def _bind(be):
+    """Freeze call-time context (the active mesh, for the sharded backend)
+    into the instance so jit caches key on it."""
+    return be.bind() if hasattr(be, "bind") else be
 
-    ``backend`` selects the stencil execution strategy (see
-    core.backend); all backends produce bitwise-identical trajectories,
-    so this choice affects speed only.
-    """
-    be = resolve_backend(backend, g0.shape, g0.dtype)
+
+@functools.partial(jax.jit, static_argnames=("max_iters", "backend"))
+def _fused_fix_impl(g0: jnp.ndarray, topo: FieldTopo, max_iters: int,
+                    backend):
+    be = backend
+    if hasattr(be, "fix_loop"):
+        # distributed backends run the whole loop inside one shard_map
+        # (topology halos exchanged once); trajectory is bitwise equal
+        return be.fix_loop(g0, topo, max_iters=max_iters)
 
     def cond(state):
         g, it, viol = state
@@ -106,20 +110,24 @@ def fused_fix(g0: jnp.ndarray, topo: FieldTopo, max_iters: int = 512,
     return g, iters, viol == 0
 
 
-@functools.partial(jax.jit, static_argnames=("max_iters", "backend"))
-def fused_fix_batch(g0: jnp.ndarray, topo: FieldTopo, max_iters: int = 512,
-                    backend: BackendLike = "auto"):
-    """Batched fused loop over a leading batch axis (many-field workloads:
-    timestep series, ensemble members).
+def fused_fix(g0: jnp.ndarray, topo: FieldTopo, max_iters: int = 512,
+              backend: BackendLike = "auto", mesh=None):
+    """Run the fused loop to convergence. Returns (g, iters, converged).
 
-    ``g0``: (B, *spatial); every FieldTopo leaf carries the same leading
-    batch axis. The per-iteration pass is vmapped across the batch and the
-    loop runs until every member converges; members that converge early
-    are frozen, so each member's (g, iters) is bitwise identical to a solo
-    ``fused_fix`` run. Returns (g (B, *spatial), iters (B,), converged
-    (B,) bool).
+    ``backend`` selects the stencil execution strategy (see
+    core.backend); all backends produce bitwise-identical trajectories,
+    so this choice affects speed only. ``mesh`` routes the loop through
+    the slab-sharded SPMD backend (repro.distributed.shardfix) when it
+    has >= 2 ``data``-axis devices and ``backend`` is "auto"/"sharded".
     """
-    be = resolve_backend(backend, g0.shape[1:], g0.dtype)
+    be = _bind(resolve_backend(backend, g0.shape, g0.dtype, mesh=mesh))
+    return _fused_fix_impl(g0, topo, max_iters=max_iters, backend=be)
+
+
+@functools.partial(jax.jit, static_argnames=("max_iters", "backend"))
+def _fused_fix_batch_impl(g0: jnp.ndarray, topo: FieldTopo, max_iters: int,
+                          backend):
+    be = backend
     step = jax.vmap(be.fused_step, in_axes=(0, 0))
 
     def cond(state):
@@ -142,6 +150,35 @@ def fused_fix_batch(g0: jnp.ndarray, topo: FieldTopo, max_iters: int = 512,
     g, _, iters_b, viol = jax.lax.while_loop(
         cond, body, (g1, jnp.int32(1), iters0, viol1))
     return g, iters_b, viol == 0
+
+
+def fused_fix_batch(g0: jnp.ndarray, topo: FieldTopo, max_iters: int = 512,
+                    backend: BackendLike = "auto", mesh=None):
+    """Batched fused loop over a leading batch axis (many-field workloads:
+    timestep series, ensemble members).
+
+    ``g0``: (B, *spatial); every FieldTopo leaf carries the same leading
+    batch axis. The per-iteration pass is vmapped across the batch and the
+    loop runs until every member converges; members that converge early
+    are frozen, so each member's (g, iters) is bitwise identical to a solo
+    ``fused_fix`` run. Returns (g (B, *spatial), iters (B,), converged
+    (B,) bool).
+
+    With a sharded backend (``mesh`` with >= 2 data-axis devices, or
+    backend="sharded") the members run sequentially through the mesh —
+    each member still bitwise equal to its solo run; vmap over shard_map
+    is not attempted.
+    """
+    be = _bind(resolve_backend(backend, g0.shape[1:], g0.dtype, mesh=mesh))
+    if hasattr(be, "fix_loop"):
+        outs = [_fused_fix_impl(g0[i],
+                                jax.tree_util.tree_map(lambda x: x[i], topo),
+                                max_iters=max_iters, backend=be)
+                for i in range(g0.shape[0])]
+        return (jnp.stack([g for g, _, _ in outs]),
+                jnp.stack([it for _, it, _ in outs]),
+                jnp.stack([ok for _, _, ok in outs]))
+    return _fused_fix_batch_impl(g0, topo, max_iters=max_iters, backend=be)
 
 
 # ---------------------------------------------------------------------------

@@ -12,7 +12,8 @@ that still change, and the while_loop exits when none do.
 """
 from __future__ import annotations
 
-from typing import Tuple
+import math
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -20,12 +21,34 @@ import jax.numpy as jnp
 from . import grid
 
 
-def pointer_jump(nxt: jnp.ndarray, max_iters: int = 64) -> jnp.ndarray:
+def default_pointer_iters(n_vertices: int) -> int:
+    """Doubling sweeps provably sufficient for any pointer chain over
+    ``n_vertices``: an integral line visits each vertex at most once, so
+    path lengths are < V, each sweep doubles the resolved hop distance,
+    and ceil(log2(V)) sweeps reach every root; +1 lets the convergence
+    check observe the fixed point. With this bound the while_loop can
+    only exit converged — there is no silent truncation."""
+    return max(math.ceil(math.log2(max(int(n_vertices), 2))), 1) + 1
+
+
+def pointer_jump(nxt: jnp.ndarray,
+                 max_iters: Optional[int] = None) -> jnp.ndarray:
     """Resolve next-pointers to root labels by pointer doubling.
 
     nxt: int32 [V], extrema are self-pointers (fixed points).
     Returns int32 [V]: the root (extremum) linear index for every vertex.
+
+    ``max_iters=None`` (default) derives the sweep bound from the field
+    size (``default_pointer_iters``), which guarantees convergence for
+    every possible pointer field — including a single integral line
+    snaking through all V vertices. Passing an explicit smaller bound is
+    best-effort only: the loop then exits at the bound with unresolved
+    labels and no error (the convergence check is part of the loop
+    condition, not an output).
     """
+    if max_iters is None:
+        max_iters = default_pointer_iters(nxt.size)
+
     def cond(state):
         it, cur = state
         return (it < max_iters) & jnp.any(cur != jnp.take(cur, cur))

@@ -1,10 +1,14 @@
-"""repro.distributed — mesh-aware distributed-optimization utilities:
-error-bounded compressed cross-pod gradient all-reduce (the paper's
-compressor applied to distributed training), straggler-tolerant stepping,
-and collective helpers."""
+"""repro.distributed — mesh-aware distributed utilities: the slab-sharded
+SPMD MSz fix loop (shardfix), error-bounded compressed cross-pod gradient
+all-reduce (the paper's compressor applied to distributed training),
+straggler-tolerant stepping, and collective helpers."""
 from .compression import (compressed_psum_tree, quantize_tree,
                           dequantize_tree, make_grad_sync)
+from .shardfix import (ShardedBackend, active_data_mesh, data_axis_size,
+                       halo_exchange, sharded_fix)
 from .straggler import StepWatchdog
 
 __all__ = ["compressed_psum_tree", "quantize_tree", "dequantize_tree",
-           "make_grad_sync", "StepWatchdog"]
+           "make_grad_sync", "StepWatchdog",
+           "ShardedBackend", "active_data_mesh", "data_axis_size",
+           "halo_exchange", "sharded_fix"]

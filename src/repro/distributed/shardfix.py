@@ -1,0 +1,312 @@
+"""Sharded pMSz fix loop over the device mesh (shard_map + ppermute).
+
+PR 1 made the Pallas fix kernels the single-device production path,
+including sequential Z-tiling with per-iteration halo re-exchange. This
+module generalizes that tiling into true SPMD execution: the field is
+decomposed into per-device Z-slab blocks (Y-slab blocks in 2D) over the
+``data`` axis of a ``jax.sharding.Mesh``, and every fix iteration runs
+under ``shard_map`` with one-slab ghost layers exchanged between chain
+neighbors via ``jax.lax.ppermute`` (pMSz's per-iteration ghost exchange,
+arXiv 2601.01787).
+
+Halo-exchange protocol per fused iteration (DESIGN.md §3):
+
+  1. exchange a 1-slab halo of the current ``g`` (two ppermutes: last
+     slab forward, first slab backward along the chain);
+  2. run the extrema/false-point kernel on the (L+2)-slab extended block
+     in GLOBAL coordinates (traced ``slab_lo = axis_index * L - 1``,
+     static ``n_slabs_total``) — its interior L slabs are exact;
+  3. exchange a 1-slab halo of the fresh interior masks (one ppermute
+     pair over the stacked mask arrays);
+  4. run the fix kernel on the extended block and keep its interior;
+  5. count fix sources over interior real slabs only and ``psum`` them —
+     the loop's convergence predicate, identical on every device.
+
+Because both kernels evaluate domain boundaries and SoS linear indices in
+global coordinates, halo garbage at the chain ends (ppermute delivers
+zeros to unpaired devices) and in the padding slabs (fields whose slab
+count is not divisible by the device count are zero-padded at the high
+end) is masked inside the kernels and never reaches a real vertex. Every
+real slab therefore computes exactly what the single-device ``pallas``
+backend computes: the sharded trajectory — fields, violation counts,
+iteration counts — is bitwise identical to single-device execution
+(tests/test_shardfix.py enforces this against both single-device
+backends).
+
+``ShardedBackend`` plugs this into the stencil-backend registry
+(``repro.core.backend``) under the name ``"sharded"``; ``resolve_backend
+("auto", ...)`` selects it automatically whenever a mesh with >= 2
+``data``-axis devices is active (``with mesh:``) or passed explicitly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec
+
+from ..core.backend import register_backend
+from ..kernels.extrema import default_interpret, extrema_masks_pallas
+from ..kernels.fixpass import fix_pass_pallas
+
+DATA_AXIS = "data"
+
+
+# ---------------------------------------------------------------------------
+# mesh discovery
+# ---------------------------------------------------------------------------
+
+def active_data_mesh(axis_name: str = DATA_AXIS) -> Optional[Mesh]:
+    """The mesh installed by ``with mesh:`` if it has a ``axis_name`` axis,
+    else None. This is what makes ``backend="auto"`` mesh-aware."""
+    from jax._src import mesh as mesh_lib
+    m = mesh_lib.thread_resources.env.physical_mesh
+    if m.empty or axis_name not in m.axis_names:
+        return None
+    return m
+
+
+def data_axis_size(mesh: Optional[Mesh], axis_name: str = DATA_AXIS) -> int:
+    """Devices along ``axis_name``; 0 when mesh is absent or lacks it."""
+    if mesh is None or axis_name not in mesh.axis_names:
+        return 0
+    return int(mesh.shape[axis_name])
+
+
+# ---------------------------------------------------------------------------
+# halo exchange
+# ---------------------------------------------------------------------------
+
+def halo_exchange(x: jnp.ndarray, axis_name: str, n_dev: int, *,
+                  axis: int = 0) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One-slab ghost layers from the chain neighbors.
+
+    Returns ``(lo, hi)``: ``lo`` is the previous device's last slab along
+    ``axis``, ``hi`` the next device's first. The chain does NOT wrap:
+    device 0's ``lo`` and device n-1's ``hi`` are ppermute zeros, which is
+    safe because the kernels mask true domain boundaries themselves, in
+    global coordinates, and the fix pass never pulls across them.
+    """
+    size = x.shape[axis]
+    fwd = [(d, d + 1) for d in range(n_dev - 1)]
+    bwd = [(d + 1, d) for d in range(n_dev - 1)]
+    last = jax.lax.slice_in_dim(x, size - 1, size, axis=axis)
+    first = jax.lax.slice_in_dim(x, 0, 1, axis=axis)
+    lo = jax.lax.ppermute(last, axis_name, fwd)
+    hi = jax.lax.ppermute(first, axis_name, bwd)
+    return lo, hi
+
+
+def with_halo(x: jnp.ndarray, axis_name: str, n_dev: int) -> jnp.ndarray:
+    """Extend a local (L, ...) slab block to (L+2, ...) with exchanged
+    ghost slabs on both ends."""
+    lo, hi = halo_exchange(x, axis_name, n_dev)
+    return jnp.concatenate([lo, x, hi], axis=0)
+
+
+def _pad_slabs(x: jnp.ndarray, n_padded: int) -> jnp.ndarray:
+    """Zero-pad the slab axis to ``n_padded`` (kernels mask the true
+    domain boundary in global coordinates, so pad content is never read
+    by a real slab; pad outputs are dropped on unpad)."""
+    n = x.shape[0]
+    if n == n_padded:
+        return x
+    return jnp.pad(x, [(0, n_padded - n)] + [(0, 0)] * (x.ndim - 1))
+
+
+# ---------------------------------------------------------------------------
+# the SPMD fix iteration
+# ---------------------------------------------------------------------------
+
+def _spmd_step(g_loc: jnp.ndarray, topo_ext, *, N: int, L: int, n_dev: int,
+               axis_name: str, interpret: bool):
+    """One fused fix iteration on a local (L, ...) slab block.
+
+    ``topo_ext``: FieldTopo whose leaves already carry their (constant)
+    1-slab halos, shape (L+2, ...); ``g`` halos are re-exchanged on every
+    call. Returns (g_next local block, global violation count) — both
+    bitwise equal to the corresponding slice/scalar of a single-device
+    ``pallas`` ``fused_step``.
+    """
+    z0 = jax.lax.axis_index(axis_name).astype(jnp.int32) * L
+    slab_lo = z0 - 1                       # global slab index of ext[0]
+
+    g_ext = with_halo(g_loc, axis_name, n_dev)
+    up_c, _, selfe, dem, pro = extrema_masks_pallas(
+        g_ext, topo_ext.M, topo_ext.m,
+        topo_ext.is_max.astype(jnp.int32), topo_ext.is_min.astype(jnp.int32),
+        interpret=interpret, slab_lo=slab_lo, n_slabs_total=N)
+
+    # the kernel's two boundary slabs lack their own neighbors — replace
+    # them with the chain neighbors' fresh interior masks (the second,
+    # mask-halo exchange of the protocol; one ppermute pair for all four)
+    interior = slice(1, L + 1)
+    stacked = jnp.stack([selfe[interior], dem[interior], pro[interior],
+                         up_c[interior]])
+    m_lo, m_hi = halo_exchange(stacked, axis_name, n_dev, axis=1)
+    self_e, dem_e, pro_e, upc_e = jnp.concatenate([m_lo, stacked, m_hi],
+                                                  axis=1)
+
+    g2_ext, _ = fix_pass_pallas(
+        g_ext, topo_ext.lower, self_e, dem_e, pro_e, upc_e, topo_ext.dn_c,
+        interpret=interpret, slab_lo=slab_lo, n_slabs_total=N)
+
+    # violations: every REAL slab counted exactly once (pad slabs hold
+    # garbage masks and are excluded; psum makes the count global)
+    real = ((z0 + jnp.arange(L, dtype=jnp.int32)) < N).astype(jnp.int32)
+    real = real.reshape((-1,) + (1,) * (g_loc.ndim - 1))
+    viol_loc = jnp.sum((selfe[interior] + dem[interior] + pro[interior])
+                       * real).astype(jnp.int32)
+    return g2_ext[interior], jax.lax.psum(viol_loc, axis_name)
+
+
+def _block_size(n_slabs: int, n_dev: int) -> int:
+    return -(-n_slabs // n_dev)
+
+
+def _shard_args(g, topo, mesh, axis_name):
+    """Pad g and every topo leaf to a device-divisible slab count."""
+    n_dev = data_axis_size(mesh, axis_name)
+    if n_dev < 1:
+        raise ValueError(
+            f"mesh {mesh} has no {axis_name!r} axis to shard the slab "
+            f"axis over")
+    N = g.shape[0]
+    L = _block_size(N, n_dev)
+    n_padded = L * n_dev
+    g_p = _pad_slabs(g, n_padded)
+    topo_p = jax.tree_util.tree_map(lambda x: _pad_slabs(x, n_padded), topo)
+    return g_p, topo_p, n_dev, N, L
+
+
+# ---------------------------------------------------------------------------
+# full distributed loop (one shard_map around the whole while_loop)
+# ---------------------------------------------------------------------------
+
+def sharded_fix(g0: jnp.ndarray, topo, mesh: Mesh, *, max_iters: int = 512,
+                axis_name: str = DATA_AXIS,
+                interpret: Optional[bool] = None):
+    """Run the fused fix loop to convergence, distributed over ``mesh``'s
+    ``axis_name`` devices. Returns (g, iters, converged), bitwise equal to
+    ``fused_fix(..., backend="pallas")``.
+
+    The entire while_loop executes inside ONE shard_map: the (constant)
+    topology halos are exchanged once, only ``g`` and mask halos move per
+    iteration, and the convergence predicate is the psummed violation
+    count carried in the loop state — replicated, so every device decides
+    identically.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    g_p, topo_p, n_dev, N, L = _shard_args(g0, topo, mesh, axis_name)
+
+    def spmd(g_loc, topo_loc):
+        topo_ext = jax.tree_util.tree_map(
+            lambda x: with_halo(x, axis_name, n_dev), topo_loc)
+        step = functools.partial(_spmd_step, topo_ext=topo_ext, N=N, L=L,
+                                 n_dev=n_dev, axis_name=axis_name,
+                                 interpret=interpret)
+
+        def cond(state):
+            _, it, viol = state
+            return (viol > 0) & (it < max_iters)
+
+        def body(state):
+            g, it, _ = state
+            g2, viol2 = step(g)
+            return g2, it + 1, viol2
+
+        g1, viol1 = step(g_loc)
+        return jax.lax.while_loop(cond, body, (g1, jnp.int32(1), viol1))
+
+    spec = PartitionSpec(axis_name)
+    g, iters, viol = shard_map(
+        spmd, mesh=mesh, in_specs=(spec, spec),
+        out_specs=(spec, PartitionSpec(), PartitionSpec()),
+        check_rep=False)(g_p, topo_p)
+    return g[:N], iters, viol == 0
+
+
+# ---------------------------------------------------------------------------
+# the registered backend
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShardedBackend:
+    """Slab-sharded SPMD execution over a mesh's ``data`` axis.
+
+    ``mesh=None`` (the registry instance) resolves the active mesh at
+    call time; ``resolve_backend``/``fused_fix`` bind it into a concrete
+    instance before jit so compilation caches key on the actual mesh.
+    """
+    name: str = "sharded"
+    mesh: Optional[Mesh] = None
+    axis_name: str = DATA_AXIS
+    interpret: Optional[bool] = None
+
+    def with_mesh(self, mesh: Mesh) -> "ShardedBackend":
+        return dataclasses.replace(self, mesh=mesh)
+
+    def bind(self) -> "ShardedBackend":
+        """Freeze the mesh this instance will run on (explicit mesh wins,
+        else the active ``with mesh:`` context)."""
+        if self.mesh is not None:
+            return self
+        m = active_data_mesh(self.axis_name)
+        if m is None:
+            raise ValueError(
+                "sharded backend needs a mesh: pass mesh=..., or enter a "
+                f"`with mesh:` context whose mesh has a {self.axis_name!r} "
+                "axis")
+        return self.with_mesh(m)
+
+    def _interpret(self) -> bool:
+        return default_interpret() if self.interpret is None else self.interpret
+
+    def n_data_devices(self) -> int:
+        """Devices on this instance's data axis (0 when no mesh is bound
+        or active)."""
+        mesh = self.mesh if self.mesh is not None \
+            else active_data_mesh(self.axis_name)
+        return data_axis_size(mesh, self.axis_name)
+
+    def supports(self, shape: Tuple[int, ...], dtype) -> bool:
+        return (len(shape) in (2, 3) and min(shape) >= 1
+                and jnp.issubdtype(jnp.dtype(dtype), jnp.floating)
+                and self.n_data_devices() >= 1)
+
+    # -- protocol: one fused iteration on global arrays ----------------
+    def fused_step(self, g: jnp.ndarray, topo):
+        """Single shard_map-wrapped iteration (pad -> exchange -> kernels
+        -> unpad). ``fix_loop`` is the production path — it amortizes the
+        topology exchange and the shard_map entry over all iterations."""
+        be = self.bind()
+        g_p, topo_p, n_dev, N, L = _shard_args(g, topo, be.mesh,
+                                               be.axis_name)
+
+        def spmd(g_loc, topo_loc):
+            topo_ext = jax.tree_util.tree_map(
+                lambda x: with_halo(x, be.axis_name, n_dev), topo_loc)
+            return _spmd_step(g_loc, topo_ext, N=N, L=L, n_dev=n_dev,
+                              axis_name=be.axis_name,
+                              interpret=be._interpret())
+
+        spec = PartitionSpec(be.axis_name)
+        g2, viol = shard_map(
+            spmd, mesh=be.mesh, in_specs=(spec, spec),
+            out_specs=(spec, PartitionSpec()), check_rep=False)(g_p, topo_p)
+        return g2[:g.shape[0]], viol
+
+    # -- full-loop fast path consumed by fixes.fused_fix ---------------
+    def fix_loop(self, g0: jnp.ndarray, topo, max_iters: int = 512):
+        be = self.bind()
+        return sharded_fix(g0, topo, be.mesh, max_iters=max_iters,
+                           axis_name=be.axis_name,
+                           interpret=be._interpret())
+
+
+register_backend(ShardedBackend())

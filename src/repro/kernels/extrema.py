@@ -120,11 +120,11 @@ def _neighbor_scan(slabs, z, N, lin, offs, *, ascending: bool):
     return best_c, slot == 0
 
 
-def _kernel(g_m, g_c, g_p, Mf_m, Mf_c, Mf_p, mf_m, mf_c, mf_p,
+def _kernel(slab_lo_c, g_m, g_c, g_p, Mf_m, Mf_c, Mf_p, mf_m, mf_c, mf_p,
             maxf_c, minf_c,
             up_out, dn_out, self_out, demote_out, promote_out,
-            *, N, P, X, slab_lo, offs):
-    z = slab_lo + pl.program_id(0)
+            *, N, P, X, offs):
+    z = slab_lo_c[0, 0] + pl.program_id(0)
     lin_px = (jax.lax.broadcasted_iota(jnp.int32, (P, X), 0) * X
               + jax.lax.broadcasted_iota(jnp.int32, (P, X), 1))
     lin = z * (P * X) + lin_px
@@ -168,16 +168,31 @@ def _kernel(g_m, g_c, g_p, Mf_m, Mf_c, Mf_p, mf_m, mf_c, mf_p,
                         .reshape(promote_out.shape))
 
 
+def slab_lo_operand(slab_lo) -> jnp.ndarray:
+    """Normalize a slab offset — python int or traced int32 scalar (the
+    sharded fix loop passes ``axis_index * block - 1``) — to the (1, 1)
+    operand the kernels read. Static and traced offsets produce bitwise
+    identical outputs; only the specialization key differs."""
+    return jnp.asarray(slab_lo, jnp.int32).reshape(1, 1)
+
+
+def slab_lo_spec() -> pl.BlockSpec:
+    """Every grid program sees the same (1, 1) slab-offset block."""
+    return pl.BlockSpec((1, 1), lambda z: (0, 0))
+
+
 def extrema_masks_pallas(g: jnp.ndarray, M_f: jnp.ndarray, m_f: jnp.ndarray,
                          is_max_f: jnp.ndarray, is_min_f: jnp.ndarray,
                          *, interpret: bool | None = None,
-                         slab_lo: int = 0, n_slabs_total: int | None = None):
+                         slab_lo=0, n_slabs_total: int | None = None):
     """g: (Z,Y,X) or (Y,X) float; M_f/m_f: int32 labels of the original
     field; is_max_f/min_f: int32 0/1. Returns (up_c, dn_c, self_edit,
     demote_src, promote_src), all int32 of g's shape.
 
     ``slab_lo``/``n_slabs_total`` place a z-tile inside a larger field
     (global slab index of g[0], and the field's total slab count).
+    ``slab_lo`` may be a traced int32 scalar (one SPMD program serves
+    every shard of a sharded run); ``n_slabs_total`` is then required.
     """
     if interpret is None:
         interpret = default_interpret()
@@ -188,18 +203,24 @@ def extrema_masks_pallas(g: jnp.ndarray, M_f: jnp.ndarray, m_f: jnp.ndarray,
         P = 1
     else:
         raise ValueError(f"extrema kernel supports 2D/3D, got shape {g.shape}")
-    N = int(n_slabs_total) if n_slabs_total is not None else slab_lo + n_local
+    if n_slabs_total is None:
+        if not isinstance(slab_lo, int):
+            raise ValueError(
+                "a traced slab_lo needs an explicit n_slabs_total")
+        N = slab_lo + n_local
+    else:
+        N = int(n_slabs_total)
 
     halo, center = slab_block_specs(g.ndim, n_local, P, X)
     out_shape = [jax.ShapeDtypeStruct(g.shape, jnp.int32)] * 5
-    kern = functools.partial(_kernel, N=N, P=P, X=X, slab_lo=slab_lo,
+    kern = functools.partial(_kernel, N=N, P=P, X=X,
                              offs=slab_offsets(g.ndim))
     return pl.pallas_call(
         kern,
         grid=(n_local,),
-        in_specs=halo + halo + halo + [center, center],
+        in_specs=[slab_lo_spec()] + halo + halo + halo + [center, center],
         out_specs=[center] * 5,
         out_shape=out_shape,
         interpret=interpret,
-    )(g, g, g, M_f, M_f, M_f, m_f, m_f, m_f,
+    )(slab_lo_operand(slab_lo), g, g, g, M_f, M_f, M_f, m_f, m_f, m_f,
       is_max_f.astype(jnp.int32), is_min_f.astype(jnp.int32))

@@ -20,17 +20,17 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from .extrema import (_shift2d, default_interpret, slab_block_specs,
-                      slab_offsets)
+                      slab_lo_operand, slab_lo_spec, slab_offsets)
 
 # code k is stored at i; i targets j = i + off_k. From j's view the source
 # sits at -off_k and must carry code k.
 
 
-def _kernel(g_c, low_c, self_c,
+def _kernel(slab_lo_c, g_c, low_c, self_c,
             dem_m, dem_c, dem_p, pro_m, pro_c, pro_p,
             upg_m, upg_c, upg_p, dnf_m, dnf_c, dnf_p,
-            g_out, viol_out, *, N, P, X, slab_lo, offs):
-    z = slab_lo + pl.program_id(0)
+            g_out, viol_out, *, N, P, X, offs):
+    z = slab_lo_c[0, 0] + pl.program_id(0)
 
     def plane(ref):
         return ref[...].reshape(P, X)
@@ -69,11 +69,11 @@ def _kernel(g_c, low_c, self_c,
 
 def fix_pass_pallas(g, lower, self_edit, demote_src, promote_src,
                     up_code_g, dn_code_f, *, interpret: bool | None = None,
-                    slab_lo: int = 0, n_slabs_total: int | None = None):
+                    slab_lo=0, n_slabs_total: int | None = None):
     """Apply one fused fix pass. All inputs (Z,Y,X) or (Y,X); masks int32
     0/1. Returns (g_next of g's shape/dtype, viol (n_slabs,) int32
     per-slab counts). ``slab_lo``/``n_slabs_total`` as in the extrema
-    kernel."""
+    kernel (``slab_lo`` may be traced; ``n_slabs_total`` then required)."""
     if interpret is None:
         interpret = default_interpret()
     if g.ndim == 3:
@@ -83,22 +83,29 @@ def fix_pass_pallas(g, lower, self_edit, demote_src, promote_src,
         P = 1
     else:
         raise ValueError(f"fix kernel supports 2D/3D, got shape {g.shape}")
-    N = int(n_slabs_total) if n_slabs_total is not None else slab_lo + n_local
+    if n_slabs_total is None:
+        if not isinstance(slab_lo, int):
+            raise ValueError(
+                "a traced slab_lo needs an explicit n_slabs_total")
+        N = slab_lo + n_local
+    else:
+        N = int(n_slabs_total)
 
     halo, center = slab_block_specs(g.ndim, n_local, P, X)
     out_specs = [center, pl.BlockSpec((1, 1), lambda z: (z, 0))]
     out_shape = [jax.ShapeDtypeStruct(g.shape, g.dtype),
                  jax.ShapeDtypeStruct((n_local, 1), jnp.int32)]
-    kern = functools.partial(_kernel, N=N, P=P, X=X, slab_lo=slab_lo,
+    kern = functools.partial(_kernel, N=N, P=P, X=X,
                              offs=slab_offsets(g.ndim))
     g2, viol = pl.pallas_call(
         kern,
         grid=(n_local,),
-        in_specs=[center, center, center] + halo + halo + halo + halo,
+        in_specs=([slab_lo_spec(), center, center, center]
+                  + halo + halo + halo + halo),
         out_specs=out_specs,
         out_shape=out_shape,
         interpret=interpret,
-    )(g, lower, self_edit,
+    )(slab_lo_operand(slab_lo), g, lower, self_edit,
       demote_src, demote_src, demote_src,
       promote_src, promote_src, promote_src,
       up_code_g, up_code_g, up_code_g,

@@ -5,6 +5,7 @@ module never touches jax device state."""
 from __future__ import annotations
 
 import jax
+import numpy as np
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
@@ -20,3 +21,19 @@ def make_host_mesh() -> jax.sharding.Mesh:
     """Degenerate 1x1 mesh over the local device — used by the CPU examples
     so the same pjit code paths run everywhere."""
     return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def make_data_mesh(n_devices: int | None = None) -> jax.sharding.Mesh:
+    """One-axis ('data',) mesh over the first ``n_devices`` local devices
+    (default: all). This is the axis the slab-sharded MSz fix loop
+    (repro.distributed.shardfix) decomposes fields over; on CPU hosts set
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before jax
+    initializes to emulate N devices."""
+    devs = jax.devices()
+    n = len(devs) if n_devices is None else int(n_devices)
+    if not 1 <= n <= len(devs):
+        raise ValueError(
+            f"requested a {n}-device data mesh but {len(devs)} device(s) "
+            "are available (set --xla_force_host_platform_device_count "
+            "before jax initializes to emulate more)")
+    return jax.sharding.Mesh(np.asarray(devs[:n]), ("data",))

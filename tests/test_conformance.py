@@ -1,0 +1,213 @@
+"""Oracle conformance suite: the vectorized label machinery vs the
+brute-force core/ref.py oracle.
+
+TopoSZ (arXiv 2304.11768) motivates why EXACTNESS — not approximate
+agreement — is the bar for topology-preserving compression, so every
+check here is equality, not closeness: ``mss_labels`` /
+``labels_from_codes`` / ``segmentation_accuracy`` must reproduce the
+per-vertex path-walking oracle bit for bit, on randomized fields AND on
+the plateau/tie fields that stress the Simulation-of-Simplicity total
+order. Also holds the pointer-jumping regression: the sweep bound is
+derived from the field size, so a single integral line snaking through
+every vertex still resolves (labels.default_pointer_iters).
+"""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from _hyp_compat import given, settings, st
+
+from repro.core import (default_pointer_iters, labels_from_codes, mss_labels,
+                        pointer_jump, segmentation_accuracy, steepest_dirs)
+from repro.core import ref as R
+from repro.core.grid import dir_to_pointer
+
+
+def _assert_labels_match_oracle(f: np.ndarray):
+    M, m = mss_labels(jnp.asarray(f))
+    Mr, mr = R.mss_labels_ref(f)
+    np.testing.assert_array_equal(np.asarray(M), Mr)
+    np.testing.assert_array_equal(np.asarray(m), mr)
+
+
+def _tie_field(rng, shape, levels: int) -> np.ndarray:
+    """Few quantization levels -> large plateaus; every comparison inside
+    a plateau is decided purely by the SoS index tie-break."""
+    return rng.integers(0, levels, size=shape).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# mss_labels vs oracle — randomized seeded grids, smooth and tie-heavy
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(11, 13), (5, 6, 7)])
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_mss_labels_conform_random(shape, seed):
+    rng = np.random.default_rng(seed)
+    _assert_labels_match_oracle(rng.normal(size=shape).astype(np.float32))
+
+
+@pytest.mark.parametrize("shape", [(11, 13), (5, 6, 7)])
+@pytest.mark.parametrize("levels", [1, 2, 3, 8])
+def test_mss_labels_conform_plateaus(shape, levels):
+    rng = np.random.default_rng(levels * 101 + len(shape))
+    _assert_labels_match_oracle(_tie_field(rng, shape, levels))
+
+
+@pytest.mark.parametrize("shape", [(9, 9), (4, 5, 6)])
+def test_mss_labels_conform_structured_ties(shape):
+    """Hand-built non-Morse structures: checkerboard (every vertex on a
+    tie front) and an axis-constant ridge (degenerate along one axis)."""
+    idx = np.indices(shape).sum(axis=0)
+    checker = (idx % 2).astype(np.float32)
+    _assert_labels_match_oracle(checker)
+    ridge = np.broadcast_to(
+        np.arange(shape[-1], dtype=np.float32) % 3, shape).copy()
+    _assert_labels_match_oracle(ridge)
+
+
+def test_mss_labels_conform_central_plateau():
+    f = np.zeros((10, 10), np.float32)
+    f[3:7, 3:7] = 1.0              # flat square summit
+    f[0, 0] = -1.0                 # unique low corner
+    _assert_labels_match_oracle(f)
+
+
+# ---------------------------------------------------------------------------
+# labels_from_codes vs oracle (no prior direct coverage)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape,levels", [((11, 13), 0), ((5, 6, 7), 0),
+                                          ((11, 13), 3), ((5, 6, 7), 2)])
+def test_labels_from_codes_conform(shape, levels):
+    """Feed ORACLE direction codes into the pointer-jumping resolver: the
+    resulting labels must equal the oracle's full path walk, isolating
+    labels_from_codes from steepest_dirs."""
+    rng = np.random.default_rng(len(shape) * 7 + levels)
+    f = (rng.normal(size=shape).astype(np.float32) if levels == 0
+         else _tie_field(rng, shape, levels))
+    upr, dnr = R.steepest_dirs_ref(f)
+    M, m = labels_from_codes(jnp.asarray(upr), jnp.asarray(dnr))
+    Mr, mr = R.mss_labels_ref(f)
+    np.testing.assert_array_equal(np.asarray(M), Mr)
+    np.testing.assert_array_equal(np.asarray(m), mr)
+    # and the vectorized codes feeding it agree with the oracle codes
+    up, dn = steepest_dirs(jnp.asarray(f))
+    np.testing.assert_array_equal(np.asarray(up), upr)
+    np.testing.assert_array_equal(np.asarray(dn), dnr)
+
+
+# ---------------------------------------------------------------------------
+# segmentation_accuracy vs oracle (no prior direct coverage)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(11, 13), (5, 6, 7)])
+@pytest.mark.parametrize("noise", [0.0, 0.05, 0.5])
+def test_segmentation_accuracy_conform(shape, noise):
+    rng = np.random.default_rng(int(noise * 100) + len(shape))
+    f = rng.normal(size=shape).astype(np.float32)
+    g = (f + noise * rng.normal(size=shape)).astype(np.float32)
+    Mf, mf = R.mss_labels_ref(f)
+    Mg, mg = R.mss_labels_ref(g)
+    want = float(np.mean(((Mf == Mg) & (mf == mg)).astype(np.float32)))
+    got = float(segmentation_accuracy(jnp.asarray(f), jnp.asarray(g)))
+    assert got == pytest.approx(want, abs=1e-7)
+    if noise == 0.0:
+        assert got == 1.0
+
+
+def test_segmentation_accuracy_on_tied_pair():
+    """Plateau vs slightly-perturbed plateau: the right-labeled ratio is
+    entirely SoS-determined and must match the oracle exactly."""
+    rng = np.random.default_rng(5)
+    f = _tie_field(rng, (10, 12), 2)
+    g = f.copy()
+    g[4, 5] += 0.5
+    Mf, mf = R.mss_labels_ref(f)
+    Mg, mg = R.mss_labels_ref(g)
+    want = float(np.mean(((Mf == Mg) & (mf == mg)).astype(np.float32)))
+    got = float(segmentation_accuracy(jnp.asarray(f), jnp.asarray(g)))
+    assert got == pytest.approx(want, abs=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis properties (skipped cleanly when hypothesis is absent)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(data=st.lists(st.integers(0, 3), min_size=42, max_size=42))
+def test_property_2d_tie_labels(data):
+    """Arbitrary 4-level 6x7 fields (ties everywhere): labels must equal
+    the oracle. Fixed shape keeps the suite compile-bound-free."""
+    f = np.asarray(data, np.float32).reshape(6, 7)
+    _assert_labels_match_oracle(f)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), levels=st.integers(1, 5))
+def test_property_3d_tie_labels(seed, levels):
+    rng = np.random.default_rng(seed)
+    _assert_labels_match_oracle(_tie_field(rng, (4, 5, 6), levels))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), noise=st.floats(0.0, 0.3))
+def test_property_accuracy_conform(seed, noise):
+    rng = np.random.default_rng(seed)
+    f = rng.normal(size=(8, 9)).astype(np.float32)
+    g = (f + noise * rng.normal(size=(8, 9))).astype(np.float32)
+    Mf, mf = R.mss_labels_ref(f)
+    Mg, mg = R.mss_labels_ref(g)
+    want = float(np.mean(((Mf == Mg) & (mf == mg)).astype(np.float32)))
+    assert float(segmentation_accuracy(
+        jnp.asarray(f), jnp.asarray(g))) == pytest.approx(want, abs=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# pointer_jump: size-derived sweep bound (regression for the silent
+# truncation hazard of a fixed max_iters)
+# ---------------------------------------------------------------------------
+
+def test_default_pointer_iters_formula():
+    assert default_pointer_iters(2) == 2
+    assert default_pointer_iters(512) == 10
+    assert default_pointer_iters(513) == 11
+    assert default_pointer_iters(2**20) == 21
+    # monotone in V, and always enough doublings to span any path
+    for v in (2, 3, 100, 10_000):
+        assert 2 ** (default_pointer_iters(v) - 1) >= v
+
+
+def test_pointer_jump_long_monotone_staircase():
+    """A (1, V) monotone ramp is ONE integral line through all V vertices
+    — the worst case the derived bound must cover. The default resolves
+    it exactly; an explicitly-too-small bound demonstrably truncates
+    (which is why the default is now derived, not hard-coded)."""
+    V = 500
+    f = np.arange(V, dtype=np.float32).reshape(1, V)
+    up, dn = steepest_dirs(jnp.asarray(f))
+    nxt_up = dir_to_pointer(up)
+    labels = np.asarray(pointer_jump(nxt_up))          # derived default
+    np.testing.assert_array_equal(labels, np.full(V, V - 1, np.int32))
+    assert default_pointer_iters(V) < 64               # tighter than old cap
+    truncated = np.asarray(pointer_jump(nxt_up, max_iters=2))
+    assert not np.array_equal(truncated, labels)       # the hazard is real
+    # full-stack check: labels on the staircase match the path-walk oracle
+    _assert_labels_match_oracle(f)
+
+
+def test_pointer_jump_serpentine_staircase():
+    """2D serpentine: a monotone path over the even rows with a deep
+    barrier between them — a long winding integral line plus massive
+    barrier plateaus, checked against the oracle."""
+    H, W = 9, 21
+    f = np.full((H, W), -1e6, np.float32)
+    val = 0.0
+    for i, y in enumerate(range(0, H, 2)):
+        xs = range(W) if i % 2 == 0 else range(W - 1, -1, -1)
+        for x in xs:
+            f[y, x] = val
+            val += 1.0
+        if y + 1 < H:                       # connector through the barrier
+            f[y + 1, W - 1 if i % 2 == 0 else 0] = val
+            val += 1.0
+    _assert_labels_match_oracle(f)
