@@ -20,6 +20,20 @@ def timeit(fn: Callable, *args, warmup: int = 1, iters: int = 5) -> float:
     return times[len(times) // 2]
 
 
+def base_transform_closure(be, fj, step) -> Callable[[], None]:
+    """The device base stage as one timeable unit: quantize+Lorenzo
+    forward (``be.transform``) then cumsum inverse (``be.reconstruct``),
+    synced. Shared by table1/fig9 so every backend row measures the same
+    dispatch."""
+    import jax
+
+    def go():
+        r = be.transform(fj, step)
+        jax.block_until_ready(be.reconstruct(r, step, fj.dtype))
+
+    return go
+
+
 def emit(name: str, us_per_call: float, derived: str = ""):
     ROWS.append((name, us_per_call, derived))
     print(f"{name},{us_per_call:.1f},{derived}")

@@ -17,11 +17,13 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.compress.szlike import effective_step
 from repro.core import field_topology, fused_fix
+from repro.core.backend import get_backend
 from repro.data import synthetic_field
 from repro.launch.mesh import make_data_mesh
 
-from .common import emit, timeit
+from .common import base_transform_closure, emit, timeit
 
 
 def _field_pair(shape, rng):
@@ -53,6 +55,16 @@ def run(quick: bool = True):
             t = timeit(go, warmup=1, iters=3)
             emit(f"fig9/fused_fix/{backend}/V={V}", t, f"Mvert_s={V/t:.3f}")
 
+            # base-transform time of the device-resident path, reported
+            # separately from the fix loop (DESIGN.md §4): the fused
+            # dispatch is transform -> reconstruct -> fix on-device
+            step = effective_step(f, xi)
+            t = timeit(base_transform_closure(get_backend(backend),
+                                              jnp.asarray(f), step),
+                       warmup=1, iters=3)
+            emit(f"fig9/base_transform/{backend}/V={V}", t,
+                 f"Mvert_s={V/t:.3f}")
+
     # -- device-count scaling of the sharded loop (one fixed field) ----
     n_avail = len(jax.devices())
     shape = (16, 16, 16) if quick else (32, 32, 32)
@@ -68,6 +80,14 @@ def run(quick: bool = True):
 
         t = timeit(go_sharded, warmup=1, iters=3)
         emit(f"fig9/shardfix/ndev={n_dev}/V={V}", t, f"Mvert_s={V/t:.3f}")
+
+        # sharded base transform (each device quantizes its own Z-slab)
+        sb = get_backend("sharded").with_mesh(mesh)
+        step = effective_step(f, xi)
+        t = timeit(base_transform_closure(sb, jnp.asarray(f), step),
+                   warmup=1, iters=3)
+        emit(f"fig9/base_transform/sharded/ndev={n_dev}/V={V}", t,
+             f"Mvert_s={V/t:.3f}")
 
 
 if __name__ == "__main__":

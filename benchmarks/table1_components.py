@@ -17,7 +17,7 @@ from repro.core.grid import dir_to_pointer
 from repro.data import synthetic_field
 from repro.kernels import extrema_masks, fix_pass
 
-from .common import emit, timeit
+from .common import base_transform_closure, emit, timeit
 
 
 def run(quick: bool = True):
@@ -47,6 +47,19 @@ def run(quick: bool = True):
     nxt = dir_to_pointer(up)
     t = timeit(lambda: jax.block_until_ready(pointer_jump(nxt)))
     emit("table1/mss_computation/jnp", t, f"Mvert_s={V/t:.2f}")
+
+    # 5. device base transform (quantize+Lorenzo forward + cumsum inverse;
+    # the device-resident pipeline's base stage, DESIGN.md §4) — reported
+    # SEPARATELY from the fix components so the fused dispatch's
+    # base-vs-fix split shows up in the perf trajectory
+    from repro.compress.szlike import effective_step
+    from repro.core.backend import get_backend
+    step = effective_step(f, xi)
+    for be_name in ("reference",) + (("pallas",) if quick else ()):
+        be = get_backend(be_name)
+        t = timeit(base_transform_closure(be, fj, step),
+                   iters=2 if be_name == "pallas" else 5)
+        emit(f"table1/base_transform/{be_name}", t, f"Mvert_s={V/t:.2f}")
 
     # Pallas kernels (interpret mode on CPU; TPU path on real hardware)
     Mf, mf = topo.M, topo.m

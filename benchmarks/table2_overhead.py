@@ -27,10 +27,13 @@ def run(quick: bool = True):
             for base in ("szlike", "zfplike"):
                 art = compress_preserving_mss(f, xi, base=base)
                 ocr = overall_compression_ratio(f, art)
+                # device-path artifacts split the base-transform time out
+                # of t_comp (t_xform; 0 on the host path)
                 emit(f"table2/{name}/{base}/rel={rel:g}",
                      (art.t_base + art.t_fix) * 1e6,
                      f"OCR={ocr:.2f};t_comp={art.t_base:.3f}s;"
-                     f"t_fix={art.t_fix:.3f}s;edit_ratio={art.edit_ratio:.4f}")
+                     f"t_fix={art.t_fix:.3f}s;t_xform={art.t_transform:.3f}s;"
+                     f"path={art.path};edit_ratio={art.edit_ratio:.4f}")
         emit(f"table2/{name}/gzip", 0.0, f"CR={f.nbytes/gzip_like(f):.2f}")
         emit(f"table2/{name}/zstd", 0.0, f"CR={f.nbytes/zstd_like(f):.2f}")
 

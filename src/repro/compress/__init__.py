@@ -1,7 +1,8 @@
 """repro.compress — error-bounded lossy base compressors (the paper's
 SZ3/ZFP baselines, reimplemented in JAX) plus the lossless edit codec of
 Section 6.3 and the end-to-end MSz-corrected compression pipeline."""
-from .szlike import sz_compress, sz_decompress, sz_roundtrip
+from .szlike import (check_int32_range, effective_step, sz_compress,
+                     sz_decompress, sz_inverse, sz_roundtrip, sz_transform)
 from .zfplike import zfp_compress, zfp_decompress, zfp_roundtrip
 from .codec import (encode_edits, decode_edits, lossless_bytes,
                     gzip_like, zstd_like)
@@ -11,6 +12,7 @@ from .pipeline import (CompressedArtifact, compress_preserving_mss,
 
 __all__ = [
     "sz_compress", "sz_decompress", "sz_roundtrip",
+    "sz_transform", "sz_inverse", "check_int32_range", "effective_step",
     "zfp_compress", "zfp_decompress", "zfp_roundtrip",
     "encode_edits", "decode_edits", "lossless_bytes", "gzip_like", "zstd_like",
     "CompressedArtifact", "compress_preserving_mss",

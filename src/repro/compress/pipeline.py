@@ -4,9 +4,26 @@ compression:   f --base compressor--> payload --decompress--> f_hat
                (f, f_hat) --C/R fix loops--> edits --codec--> edit blob
 decompression: payload --> f_hat ; f_hat + edits --> g  (MSS(g) == MSS(f))
 
-The fix stage dispatches to a stencil backend (repro.core.backend);
-``compress_preserving_mss_batch`` runs many same-shape fields through one
-vmapped fix loop (timestep series, ensemble members).
+Two execution paths produce BITWISE-IDENTICAL artifacts (DESIGN.md §4):
+
+* **device** (the production path for the szlike base): one host->device
+  transfer of ``f``, then quantize+Lorenzo (``backend.transform``),
+  on-device reconstruction of ``f_hat`` from the residual codes
+  (``backend.reconstruct``), the fused fix loop, and on-device edit
+  extraction (mask/count/compaction inside jit) — one device->host
+  transfer of the int32 residual codes, after which only entropy coding
+  (szlike._pack_residuals, codec.encode_edits) runs host-side.
+* **host**: the original per-member byte-codec loop (any base
+  compressor, any dtype, no int32 range precondition).
+
+``device_path="auto"`` picks the device path whenever its preconditions
+hold (szlike base, fused mode, f32 field — or f64 under jax x64 — and
+szlike.check_int32_range passes); artifacts record which path produced
+them (``CompressedArtifact.path``, header version 2).
+
+``compress_preserving_mss_batch`` runs many same-shape fields through
+ONE vmapped transform and ONE batched fix loop instead of B sequential
+host codec calls.
 """
 from __future__ import annotations
 
@@ -14,19 +31,45 @@ import dataclasses
 import time
 from typing import Callable, Dict, List, Literal, Optional, Sequence, Tuple, Union
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
-from ..core.backend import BackendLike
+from ..core import fixes
+from ..core.backend import BackendLike, resolve_backend
 from ..core.driver import (MszResult, apply_edits, derive_edits,
-                           derive_edits_batch, verify_preservation)
+                           derive_edits_batch, extract_edits,
+                           verify_preservation)
 from . import codec, szlike, zfplike
 
 BaseName = Literal["szlike", "zfplike"]
+DevicePath = Union[bool, Literal["auto"]]
 
 _BASES: Dict[str, Tuple[Callable, Callable]] = {
     "szlike": (szlike.sz_compress, szlike.sz_decompress),
     "zfplike": (zfplike.zfp_compress, zfplike.zfp_decompress),
 }
+
+ARTIFACT_VERSION = 2
+
+
+# test seam: when set, called as hook(direction, nbytes) for every
+# host<->device ARRAY crossing the device path makes ("h2d"/"d2h";
+# scalar syncs — counts, convergence flags — are not array transfers and
+# are exempt). tests/test_device_path.py counts field-sized crossings.
+_transfer_hook: Optional[Callable[[str, int], None]] = None
+
+
+def _h2d(x: np.ndarray) -> jnp.ndarray:
+    if _transfer_hook is not None:
+        _transfer_hook("h2d", x.nbytes)
+    return jnp.asarray(x)
+
+
+def _d2h(x: jnp.ndarray) -> np.ndarray:
+    if _transfer_hook is not None:
+        _transfer_hook("d2h", x.nbytes)
+    return np.asarray(x)
 
 
 @dataclasses.dataclass
@@ -43,11 +86,20 @@ class CompressedArtifact:
     edit_ratio: float = 0.0
     fix_iters: int = 0
     backend: str = ""            # stencil backend that ran the fix loop
+    # versioned header (v2): which path produced the artifact, and the
+    # device base-transform time separated out of t_base (0.0 host-side)
+    version: int = ARTIFACT_VERSION
+    path: str = "host"           # "host" | "device"
+    t_transform: float = 0.0     # device quantize+Lorenzo+reconstruct secs
 
     @property
     def nbytes(self) -> int:
         return len(self.base_payload) + len(self.edit_payload)
 
+
+# ---------------------------------------------------------------------------
+# edit encoding (shared by both paths)
+# ---------------------------------------------------------------------------
 
 def _encode_edits_checked(f: np.ndarray, f_hat: np.ndarray, res: MszResult,
                           xi: float, edit_value_dtype: str) -> bytes:
@@ -64,6 +116,24 @@ def _encode_edits_checked(f: np.ndarray, f_hat: np.ndarray, res: MszResult,
     return blob
 
 
+def _encode_edits_checked_dev(fj: jnp.ndarray, f_hat: jnp.ndarray,
+                              idx: np.ndarray, val: np.ndarray, xi: float,
+                              edit_value_dtype: str) -> bytes:
+    """Device-path twin of _encode_edits_checked: the re-verification of a
+    lossy edit dtype runs on DEVICE arrays (f_hat never visits the host),
+    with the same predicate — so both paths make the same f4-fallback
+    decision and stay bitwise identical."""
+    blob = codec.encode_edits(idx, val, edit_value_dtype)
+    if edit_value_dtype != "f4":
+        idx2, val2 = codec.decode_edits(blob)
+        delta2 = (jnp.zeros(f_hat.size, f_hat.dtype).at[idx2].add(val2)
+                  .reshape(f_hat.shape))
+        v = verify_preservation(fj, f_hat + delta2, xi)
+        if not (v["mss_preserved"] and v["bound_ok"]):
+            blob = codec.encode_edits(idx, val, "f4")
+    return blob
+
+
 def _make_artifact(f: np.ndarray, payload: bytes, blob: bytes, xi: float,
                    base: str, res: MszResult, t_base: float,
                    t_fix: float) -> CompressedArtifact:
@@ -76,16 +146,197 @@ def _make_artifact(f: np.ndarray, payload: bytes, blob: bytes, xi: float,
     )
 
 
+# ---------------------------------------------------------------------------
+# path selection
+# ---------------------------------------------------------------------------
+
+def _device_dtype_ok(dtype) -> bool:
+    if dtype == np.float32:
+        return True
+    if dtype == np.float64:
+        return bool(jax.config.jax_enable_x64)
+    return False
+
+
+def _device_path_reason(f: np.ndarray, xi: float, base: str, mode: str
+                        ) -> Tuple[Optional[str], Optional[float]]:
+    """(None, step) when the device path can serve this call, else
+    (why not, None). One field scan total: max|f| feeds both the step
+    headroom and the range-precondition check."""
+    if base != "szlike":
+        return (f"device path serves the szlike base only (got {base!r}); "
+                "zfplike's block transform stays host-side"), None
+    if mode != "fused":
+        return f"device path requires mode='fused' (got {mode!r})", None
+    if f.ndim not in (2, 3) or f.size == 0:
+        return (f"device path needs a non-empty 2D/3D field "
+                f"(shape {f.shape})"), None
+    if not _device_dtype_ok(f.dtype):
+        return (f"device path needs float32 (or float64 under jax x64 "
+                f"mode); got {f.dtype}"), None
+    amax = float(np.max(np.abs(f)))
+    step = szlike.effective_step(f, xi, amax=amax)
+    try:
+        szlike.check_int32_range(f, step / 2.0, amax=amax)
+    except ValueError as e:
+        return str(e), None
+    return None, step
+
+
+def _resolve_device_path(device_path: DevicePath, f: np.ndarray, xi: float,
+                         base: str, mode: str) -> Optional[float]:
+    """The quantization step when the device path should run, else None."""
+    if device_path is False:
+        return None
+    reason, step = _device_path_reason(f, xi, base, mode)
+    if device_path is True and reason is not None:
+        raise ValueError(f"device_path=True but {reason}")
+    return step
+
+
+# ---------------------------------------------------------------------------
+# the device-resident path (DESIGN.md §4)
+# ---------------------------------------------------------------------------
+
+def _device_compress(f: np.ndarray, xi: float, be, max_iters: int,
+                     edit_value_dtype: str, step: float
+                     ) -> CompressedArtifact:
+    """Single host->device transfer of f; transform, reconstruction, fix
+    loop, and edit extraction stay on-device; single device->host
+    transfer of the residual codes for entropy coding. ``step`` comes
+    pre-validated from _device_path_reason."""
+    t0 = time.perf_counter()
+    fj = _h2d(f)
+    r = be.transform(fj, step)
+    f_hat = be.reconstruct(r, step, fj.dtype)
+    base_err = float(jnp.max(jnp.abs(fj - f_hat)))
+    t1 = time.perf_counter()
+    if base_err > xi * (1 + 1e-6):
+        raise ValueError(
+            f"reconstructed data violates the error bound before editing: "
+            f"max|f-f_hat|={base_err:.3g} > xi={xi:.3g}")
+
+    topo = fixes.field_topology(fj, xi)
+    g, iters, ok = fixes.fused_fix(f_hat, topo, max_iters=max_iters,
+                                   backend=be)
+    if not bool(ok):
+        raise RuntimeError("MSz fix loops did not converge within max_iters")
+    idx_d, val_d = extract_edits(f_hat, g)
+    t2 = time.perf_counter()
+
+    # ---- the only host-side stages left: entropy coding ----
+    payload = szlike.sz_encode_residuals(_d2h(r), f.shape, f.dtype, step)
+    idx = _d2h(idx_d).astype(np.int64)
+    val = _d2h(val_d)
+    blob = _encode_edits_checked_dev(fj, f_hat, idx, val, xi,
+                                     edit_value_dtype)
+    t3 = time.perf_counter()
+    return CompressedArtifact(
+        base="szlike", base_payload=payload, edit_payload=blob,
+        shape=f.shape, dtype=str(f.dtype), xi=xi,
+        t_base=(t1 - t0) + (t3 - t2), t_fix=t2 - t1,
+        edit_ratio=float(idx.size) / float(f.size),
+        fix_iters=int(iters), backend=be.name,
+        path="device", t_transform=t1 - t0,
+    )
+
+
+def _device_compress_batch(fields: List[np.ndarray], xi_arr: np.ndarray,
+                           be, max_iters: int, edit_value_dtype: str,
+                           steps: List[float]) -> List[CompressedArtifact]:
+    """Batch device path: ONE vmapped transform + ONE batched fix loop;
+    per-member entropy coding afterwards. Artifacts are bitwise identical
+    to solo device-path calls (the batched loop freezes early-converged
+    members, fixes.fused_fix_batch). ``steps`` come pre-validated from
+    the caller's _device_path_reason sweep."""
+    B = len(fields)
+    t0 = time.perf_counter()
+    f_b = _h2d(np.stack(fields))
+    step_b = _h2d(np.asarray(steps, fields[0].dtype))
+    if hasattr(be, "fix_loop"):
+        # distributed backends run members sequentially (vmap over
+        # shard_map is not attempted, mirroring fused_fix_batch)
+        r_b = jnp.stack([be.transform(f_b[i], step_b[i]) for i in range(B)])
+        fhat_b = jnp.stack([be.reconstruct(r_b[i], step_b[i], f_b.dtype)
+                            for i in range(B)])
+    else:
+        r_b = jax.vmap(be.transform)(f_b, step_b)
+        fhat_b = jax.vmap(lambda ri, si: be.reconstruct(ri, si, f_b.dtype))(
+            r_b, step_b)
+    sp = tuple(range(1, f_b.ndim))
+    base_errs = _d2h(jnp.max(jnp.abs(f_b - fhat_b), axis=sp))
+    t1 = time.perf_counter()
+    for i, (err, xi_i) in enumerate(zip(base_errs, xi_arr)):
+        if err > xi_i * (1 + 1e-6):
+            raise ValueError(
+                f"batch member {i}: reconstructed data violates the error "
+                f"bound before editing: max|f-f_hat|={err:.3g} > xi={xi_i:.3g}")
+
+    topos = [fixes.field_topology(f_b[i], float(xi_arr[i])) for i in range(B)]
+    topo_b = jax.tree_util.tree_map(lambda *leaves: jnp.stack(leaves), *topos)
+    g_b, iters_b, ok_b = fixes.fused_fix_batch(fhat_b, topo_b,
+                                               max_iters=max_iters, backend=be)
+    if not bool(jnp.all(ok_b)):
+        raise RuntimeError("MSz fix loops did not converge within max_iters")
+    edits = [extract_edits(fhat_b[i], g_b[i]) for i in range(B)]
+    t2 = time.perf_counter()
+    t_fix_each = (t2 - t1) / B
+
+    r_host = _d2h(r_b)
+    t_pull_each = (time.perf_counter() - t2) / B
+    arts = []
+    for i, fi in enumerate(fields):
+        # per-member entropy-coding time joins t_base so batch artifacts
+        # report the same cost split as solo device-path calls
+        te0 = time.perf_counter()
+        payload = szlike.sz_encode_residuals(r_host[i], fi.shape, fi.dtype,
+                                             steps[i])
+        idx = _d2h(edits[i][0]).astype(np.int64)
+        val = _d2h(edits[i][1])
+        blob = _encode_edits_checked_dev(f_b[i], fhat_b[i], idx, val,
+                                         float(xi_arr[i]), edit_value_dtype)
+        t_entropy = time.perf_counter() - te0
+        arts.append(CompressedArtifact(
+            base="szlike", base_payload=payload, edit_payload=blob,
+            shape=fi.shape, dtype=str(fi.dtype), xi=float(xi_arr[i]),
+            t_base=(t1 - t0) / B + t_pull_each + t_entropy,
+            t_fix=t_fix_each,
+            edit_ratio=float(idx.size) / float(fi.size),
+            fix_iters=int(iters_b[i]), backend=be.name,
+            path="device", t_transform=(t1 - t0) / B,
+        ))
+    return arts
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
 def compress_preserving_mss(f: np.ndarray, xi: float, base: BaseName = "szlike",
                             mode: str = "fused",
                             edit_value_dtype: str = "f4",
                             max_iters: int = 512,
                             backend: BackendLike = "auto",
-                            mesh=None) -> CompressedArtifact:
+                            mesh=None,
+                            device_path: DevicePath = "auto"
+                            ) -> CompressedArtifact:
     """``mesh``: route the fix loop through the slab-sharded SPMD backend
-    when the mesh has >= 2 ``data``-axis devices (artifacts stay byte-for-
-    byte identical to single-device runs)."""
+    when the mesh has >= 2 ``data``-axis devices. ``device_path``: run
+    the whole compress stage device-resident ("auto" = whenever the
+    preconditions hold, see module docstring). Artifacts are byte-for-
+    byte identical across paths, backends, and meshes."""
     f = np.asarray(f)
+    step = _resolve_device_path(device_path, f, xi, base, mode)
+    if step is not None:
+        be = resolve_backend(backend, f.shape, f.dtype, mesh=mesh)
+        if hasattr(be, "transform"):
+            return _device_compress(f, xi, be, max_iters, edit_value_dtype,
+                                    step)
+        if device_path is True:
+            raise ValueError(
+                f"device_path=True but backend {be.name!r} implements no "
+                "transform/reconstruct protocol entry")
+
     comp, decomp = _BASES[base]
     t0 = time.perf_counter()
     payload = comp(f, xi)
@@ -108,15 +359,16 @@ def compress_preserving_mss_batch(
         edit_value_dtype: str = "f4",
         max_iters: int = 512,
         backend: BackendLike = "auto",
-        mesh=None) -> List[CompressedArtifact]:
+        mesh=None,
+        device_path: DevicePath = "auto") -> List[CompressedArtifact]:
     """Batch variant of compress_preserving_mss for many same-shape fields.
 
-    Base compression/decompression runs per member (the codecs are
-    host-side), but the MSz fix loops — the dominant cost, Table 1 — run
-    as ONE vmapped loop over the whole batch (derive_edits_batch, fused
-    mode). Each member's artifact is bitwise identical to a solo
-    compress_preserving_mss call; t_fix reports the batch fix time split
-    evenly across members.
+    On the device path the base transform of ALL members runs as one
+    vmapped dispatch and the fix loops as one batched while_loop
+    (derive_edits_batch's machinery); host-side only the entropy coders
+    run per member. Each member's artifact is bitwise identical to a solo
+    compress_preserving_mss call; t_base/t_fix report the batch time
+    split evenly across members.
     """
     fields = [np.asarray(fi) for fi in fields]
     if not fields:
@@ -126,8 +378,29 @@ def compress_preserving_mss_batch(
                          f"{[fi.shape for fi in fields]}")
     B = len(fields)
     xi_arr = np.broadcast_to(np.asarray(xi, np.float64), (B,))
-    comp, decomp = _BASES[base]
 
+    use_dev, steps = False, []
+    if device_path is not False:
+        reasons = [_device_path_reason(fi, float(xi_i), base, "fused")
+                   for fi, xi_i in zip(fields, xi_arr)]
+        use_dev = all(r is None for r, _ in reasons)
+        steps = [s for _, s in reasons]
+        if device_path is True and not use_dev:
+            bad = next(r for r, _ in reasons if r is not None)
+            raise ValueError(f"device_path=True but {bad}")
+    if use_dev:
+        be = resolve_backend(backend, fields[0].shape, fields[0].dtype,
+                             mesh=mesh)
+        if hasattr(be, "transform"):
+            be = fixes._bind(be)
+            return _device_compress_batch(fields, xi_arr, be, max_iters,
+                                          edit_value_dtype, steps)
+        if device_path is True:
+            raise ValueError(
+                f"device_path=True but backend {be.name!r} implements no "
+                "transform/reconstruct protocol entry")
+
+    comp, decomp = _BASES[base]
     payloads, fhats, t_bases = [], [], []
     for fi, xi_i in zip(fields, xi_arr):
         t0 = time.perf_counter()

@@ -2,7 +2,8 @@
 quantization), reimplemented with the *dual-quantization* parallel
 reformulation used by GPU SZ implementations (cuSZ):
 
-  1. linear-scaling quantization   q = round(f / (2*xi))   (|f - 2*xi*q| <= xi)
+  1. linear-scaling quantization   q = round(f / step),  step = 2*xi_eff
+     (|f - step*q| <= xi after headroom, see below)
   2. Lorenzo prediction IN THE INTEGER DOMAIN: the residual is the d-D mixed
      first difference of q, which is exact in integers, so prediction is
      embarrassingly parallel both ways — decompression is d nested cumsums
@@ -10,29 +11,118 @@ reformulation used by GPU SZ implementations (cuSZ):
   3. residual entropy coding: small residuals -> int8 stream + escape list,
      then DEFLATE (stand-in for SZ's Huffman+ZSTD stage).
 
-This is the paper's 'base compressor #1' baseline. The host path
-(sz_compress/sz_decompress) is exact int64 numpy; the jit'd JAX path
-(sz_transform/sz_inverse) is the TPU-target hot loop, int32-bounded:
-intermediate cumsums reach 2^d * max|q|, so it requires
-range(f)/xi < 2^28 — asserted, and always true for the paper's bounds.
+This is the paper's 'base compressor #1' baseline, and since the
+device-resident pipeline (DESIGN.md §4) the host and device paths share
+ONE arithmetic contract per dtype so they are bitwise interchangeable:
+
+  * quantization and reconstruction run in the FIELD'S dtype (f32 fields:
+    f32 division/round and f32 multiply — numpy on host, XLA on device —
+    both IEEE-754 round-to-nearest-even, so host and device agree bit for
+    bit);
+  * integer work (Lorenzo residual, cumsum inverse) is exact in any width;
+    the host codec uses int64, the device path int32.
+
+The int32 device path (sz_transform/sz_inverse, backed by the Pallas
+kernel in repro.kernels.lorenzo) therefore requires the residual codes
+and every intermediate cumsum to fit int32: intermediates reach
+2^d * max|q| with max|q| ~= max|f|/step, so it requires
+max|f|/xi < 2^28 (for the paper's field/bound regimes range(f)/xi and
+max|f|/xi coincide within a small factor; both are far below 2^28).
+f32 fields bind EARLIER, at max|f|/xi < 2^21: past that the quantization
+quotient f/step leaves f32 rounding precision (and past ~2^23 no f32
+f_hat can hold the bound at all, so the tighter limit forfeits nothing).
+``check_int32_range`` validates the dtype's limit with a clear error —
+callers of the device path (compress.pipeline) invoke it at runtime;
+``sz_transform`` itself also checks when handed a host (numpy) array.
+f64 fields keep f64 host arithmetic; the device transform serves them
+only when jax x64 mode is enabled.
 """
 from __future__ import annotations
 
 import io
 import struct
 import zlib
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-_MAGIC = b"SZJ1"
+# SZJ2: the dequantization arithmetic runs in the field's dtype (the
+# shared host/device contract above). SZJ1 blobs used f64-multiply-then-
+# cast and would silently reconstruct a different f_hat — refuse them.
+_MAGIC = b"SZJ2"
+
+# intermediate cumsums of the int32 inverse reach 2^d * max|q| (d <= 3),
+# so max|q| < 2^27  <=>  max|f|/xi < 2^28 keeps everything inside int32
+INT32_RANGE_LIMIT = 2.0 ** 28
+# f32 fields bind earlier: the quantization quotient f/step must round
+# exactly in f32 (quotient < 2^22 keeps the fl-division error under half
+# a unit and inside the 2^-22*max|f| headroom), so max|f|/xi < 2^21.
+# Beyond ~2^23 an f32 field cannot hold the bound in ANY arithmetic
+# (xi drops below max|f|'s ulp) — the limit forfeits no well-posed input.
+F32_RANGE_LIMIT = 2.0 ** 21
+
+
+def device_range_limit(dtype) -> float:
+    """max|f|/xi ceiling of the device path for fields of ``dtype``."""
+    return F32_RANGE_LIMIT if np.dtype(dtype) == np.float32 \
+        else INT32_RANGE_LIMIT
+
+
+def effective_step(f: np.ndarray, xi: float,
+                   amax: Optional[float] = None) -> float:
+    """The quantization step actually used for ``f`` at bound ``xi``.
+
+    f32 fields reserve headroom for the dtype-arithmetic reconstruction
+    (quantize + reconstruct in f32 costs up to ~3 ulp relative to exact
+    arithmetic; see zfplike.zfp_compress for the same trick), and the
+    step itself is an f32-exact value so host and device multiply by the
+    identical scalar. ``amax``: pass a precomputed max|f| to skip the
+    field scan.
+    """
+    f = np.asarray(f)
+    if f.dtype == np.float32 and f.size:
+        if amax is None:
+            amax = float(np.max(np.abs(f)))
+        xi = max(xi - amax * 2.0 ** -22, xi * 0.5)
+    step = np.float64(2.0 * xi)
+    if f.dtype == np.float32:
+        step = np.float64(np.float32(step))
+    return float(step)
+
+
+def check_int32_range(f: np.ndarray, xi: float,
+                      amax: Optional[float] = None) -> None:
+    """Validate the device path's range precondition (module docstring):
+    quantized magnitudes and their d-D cumsum intermediates must fit
+    int32 — max|f|/xi < 2^28 — and f32 fields must additionally keep the
+    quantization quotient inside f32 rounding precision — max|f|/xi <
+    2^21, the binding limit. Raises ValueError otherwise. ``amax``: pass
+    a precomputed max|f| to skip the field scan."""
+    f = np.asarray(f)
+    if f.size == 0:
+        return
+    if xi <= 0:
+        raise ValueError(f"error bound must be positive, got xi={xi!r}")
+    if amax is None:
+        amax = float(np.max(np.abs(f)))
+    limit = device_range_limit(f.dtype)
+    if amax / xi >= limit:
+        why = ("the f32 quantization quotient would exceed f32 rounding "
+               "precision" if limit == F32_RANGE_LIMIT else
+               "quantized codes would overflow the int32 cumsum "
+               "reconstruction")
+        raise ValueError(
+            f"device path precondition violated: max|f|/xi = "
+            f"{amax / xi:.3g} >= 2^{int(np.log2(limit))}; {why}. Use the "
+            "host path (device_path=False) or a looser error bound.")
 
 
 # ---------------------------------------------------------------------------
 # JAX hot path (TPU target; also what the Pallas kernel in repro.kernels
-# implements block-wise)
+# implements block-wise). Same arithmetic contract as the host codec:
+# bitwise-equal f_hat within the int32 range precondition.
 # ---------------------------------------------------------------------------
 
 def _lorenzo_residual_jnp(q: jnp.ndarray) -> jnp.ndarray:
@@ -46,18 +136,34 @@ def _lorenzo_residual_jnp(q: jnp.ndarray) -> jnp.ndarray:
 
 
 @jax.jit
-def sz_transform(f: jnp.ndarray, step) -> jnp.ndarray:
-    """quantize + integer Lorenzo -> int32 residual codes."""
+def _sz_transform_jit(f: jnp.ndarray, step) -> jnp.ndarray:
     q = jnp.round(f / step).astype(jnp.int32)
     return _lorenzo_residual_jnp(q)
 
 
+def sz_transform(f, step) -> jnp.ndarray:
+    """quantize + integer Lorenzo -> int32 residual codes.
+
+    ``step`` should be a scalar of f's dtype (a python float behaves as
+    one for f32 fields). Host (numpy) inputs are range-checked against
+    the device-range precondition; device-resident or traced callers
+    must validate themselves via ``check_int32_range`` — the check is a
+    host scan and must not force a device->host pull of the field.
+    """
+    if isinstance(f, np.ndarray) and not isinstance(step, jax.core.Tracer):
+        check_int32_range(f, float(np.asarray(step)) / 2.0)
+    return _sz_transform_jit(f, step)
+
+
 @jax.jit
 def sz_inverse(r: jnp.ndarray, step) -> jnp.ndarray:
+    """int32 residual codes -> reconstructed field, in step's dtype
+    (weakly-typed python floats reconstruct f32)."""
     q = r
     for ax in range(r.ndim):
         q = jnp.cumsum(q, axis=ax, dtype=jnp.int32)
-    return q.astype(jnp.float32) * jnp.float32(step)
+    step = jnp.asarray(step)
+    return q.astype(step.dtype) * step
 
 
 # ---------------------------------------------------------------------------
@@ -75,7 +181,7 @@ def _lorenzo_residual_np(q: np.ndarray) -> np.ndarray:
 
 def _pack_residuals(r: np.ndarray) -> bytes:
     """int8 main stream with int64 escape side-channel, DEFLATE'd."""
-    flat = r.reshape(-1)
+    flat = r.reshape(-1).astype(np.int64)
     small = (flat >= -127) & (flat <= 127)
     main = np.where(small, flat, -128).astype(np.int8)
     esc_idx = np.flatnonzero(~small).astype(np.int64)
@@ -106,22 +212,35 @@ def _unpack_residuals(buf: bytes, n: int) -> np.ndarray:
     return out[:n]
 
 
+def sz_encode_residuals(r: np.ndarray, shape: Tuple[int, ...],
+                        dtype, step: float) -> bytes:
+    """Serialize Lorenzo residual codes into the self-describing SZ-like
+    blob. The single entropy-coding entry point for BOTH paths: the host
+    codec packs its own int64 residuals, the device pipeline packs the
+    int32 codes pulled off the device — identical codes give identical
+    bytes."""
+    dtype = np.dtype(dtype)
+    ndim = len(shape)
+    size = int(np.prod(shape, dtype=np.int64)) if shape else 1
+    hdr = struct.pack("<4sBBdQ", _MAGIC, ndim,
+                      0 if dtype == np.float32 else 1, float(step), size)
+    dims = struct.pack(f"<{ndim}Q", *shape)
+    return hdr + dims + _pack_residuals(np.asarray(r))
+
+
 def sz_compress(f: np.ndarray, xi: float) -> bytes:
     """Compress with absolute error bound xi. Self-describing blob."""
     f = np.asarray(f)
     if f.dtype not in (np.float32, np.float64):
         raise TypeError(f"float field expected, got {f.dtype}")
-    # headroom for the final f32 cast (see zfplike.zfp_compress)
-    if f.dtype == np.float32 and f.size:
-        xi = max(xi - float(np.max(np.abs(f))) * 2.0 ** -22, xi * 0.5)
-    step = np.float64(2.0 * xi)
-    q = np.round(f.astype(np.float64) / step).astype(np.int64)
+    step = effective_step(f, xi)
+    if f.dtype == np.float32:
+        # canonical f32 arithmetic — bitwise-shared with the device path
+        q = np.round(f / np.float32(step)).astype(np.int64)
+    else:
+        q = np.round(f.astype(np.float64) / step).astype(np.int64)
     r = _lorenzo_residual_np(q)
-    body = _pack_residuals(r)
-    hdr = struct.pack("<4sBBdQ", _MAGIC, f.ndim,
-                      0 if f.dtype == np.float32 else 1, float(step), f.size)
-    dims = struct.pack(f"<{f.ndim}Q", *f.shape)
-    return hdr + dims + body
+    return sz_encode_residuals(r, f.shape, f.dtype, step)
 
 
 def sz_decompress(blob: bytes) -> np.ndarray:
@@ -135,8 +254,10 @@ def sz_decompress(blob: bytes) -> np.ndarray:
     q = r
     for ax in range(len(shape)):
         q = np.cumsum(q, axis=ax, dtype=np.int64)
-    out = q.astype(np.float64) * step
-    return out.astype(np.float32 if dt == 0 else np.float64)
+    if dt == 0:
+        # canonical f32 reconstruction (matches sz_inverse bit for bit)
+        return q.astype(np.float32) * np.float32(step)
+    return q.astype(np.float64) * step
 
 
 def sz_roundtrip(f: np.ndarray, xi: float) -> Tuple[np.ndarray, int]:

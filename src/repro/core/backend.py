@@ -1,4 +1,5 @@
-"""Unified stencil-backend dispatch for the MSz fix loop.
+"""Unified stencil-backend dispatch for the MSz fix loop and the
+device-resident base transform.
 
 One protocol, many execution strategies (see DESIGN.md §3): every
 backend exposes the two stencil stages of the fused fix iteration,
@@ -9,7 +10,17 @@ backend exposes the two stencil stages of the fused fix iteration,
     application (DESIGN.md §2)
 
 plus ``fused_step`` composing them into one (g_next, n_violations)
-iteration. Registered implementations:
+iteration, and — since the device-resident compression path
+(DESIGN.md §4) — the SZ-like base transform pair,
+
+  * ``transform(f, step)``          — quantize + integer Lorenzo
+    -> int32 residual codes (the cuSZ dual-quantization forward pass)
+  * ``reconstruct(r, step, dtype)`` — d nested int32 cumsums + dequant
+    -> f_hat, bitwise equal to the host codec's ``sz_decompress`` of the
+    same codes (int32 range precondition: szlike.check_int32_range)
+
+so ``f_hat`` flows from residual codes straight into the fix loop
+without leaving the device. Registered implementations:
 
   * ``reference`` — pure-jnp dense stencils (XLA-fused; the former
     ``fixes.fused_pass`` body lives here)
@@ -168,6 +179,18 @@ class ReferenceBackend:
         masks = self.extrema_masks(g, topo)
         return self.fix_pass(g, topo, masks)
 
+    # -- device-resident base transform (DESIGN.md §4) ----------------
+    def transform(self, f: jnp.ndarray, step) -> jnp.ndarray:
+        """Quantize + integer Lorenzo -> int32 residual codes."""
+        from ..compress.szlike import _sz_transform_jit
+        return _sz_transform_jit(f, jnp.asarray(step, f.dtype))
+
+    def reconstruct(self, r: jnp.ndarray, step, dtype) -> jnp.ndarray:
+        """int32 residual codes -> f_hat in ``dtype`` (bitwise equal to
+        the host codec's reconstruction of the same codes)."""
+        from ..compress.szlike import sz_inverse
+        return sz_inverse(r, jnp.asarray(step, dtype))
+
 
 @dataclasses.dataclass(frozen=True)
 class PallasBackend:
@@ -230,6 +253,21 @@ class PallasBackend:
             masks = self.extrema_masks(g, topo)
             return self.fix_pass(g, topo, masks)
         return self._tiled_step(g, topo, tile)
+
+    # -- device-resident base transform (DESIGN.md §4) ----------------
+    def transform(self, f: jnp.ndarray, step) -> jnp.ndarray:
+        """Quantize + integer Lorenzo via the slab kernel. No Z-tiling:
+        the pallas_call grid already streams slab pairs through VMEM, so
+        the footprint is ~2 slabs regardless of field height."""
+        from ..kernels.lorenzo import lorenzo_quant_pallas
+        return lorenzo_quant_pallas(f, jnp.asarray(step, f.dtype),
+                                    interpret=self._interpret())
+
+    def reconstruct(self, r: jnp.ndarray, step, dtype) -> jnp.ndarray:
+        """Inverse stays an XLA associative scan (kernels.lorenzo
+        docstring) — identical arithmetic to the reference backend."""
+        from ..compress.szlike import sz_inverse
+        return sz_inverse(r, jnp.asarray(step, dtype))
 
     def _tiled_step(self, g: jnp.ndarray, topo, tile: int):
         """pMSz-style block-decomposed iteration over the slab axis.

@@ -4,7 +4,8 @@ workflow around the C/R fix loops)."""
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Literal, Optional, Sequence, Union
+import functools
+from typing import List, Literal, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -129,6 +130,41 @@ def derive_edits_batch(f, f_hat, xi: Union[float, Sequence[float]],
     return [_package_result(f[i], f_hat[i], g_b[i], iters_b[i], ok_b[i],
                             be.name)
             for i in range(B)]
+
+
+# --- device-side edit extraction (device-resident path, DESIGN.md §4) ------
+
+@jax.jit
+def _edit_count(f_hat: jnp.ndarray, g: jnp.ndarray):
+    delta = g - f_hat
+    return delta, jnp.sum(delta != 0).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("size",))
+def _edit_compact(delta: jnp.ndarray, size: int):
+    flat = delta.reshape(-1)
+    idx = jnp.nonzero(flat != 0, size=size, fill_value=0)[0]
+    return idx, flat[idx]
+
+
+def extract_edits(f_hat: jnp.ndarray, g: jnp.ndarray
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """On-device edit extraction: ``delta != 0`` mask, count, and
+    compaction all run inside jit; only the edit count crosses to the
+    host (to fix the compaction's static output size), so the returned
+    (idx, val) device arrays are the ONLY edit-sized data a caller needs
+    to pull. Ascending flat indices — identical to the host path's
+    ``np.flatnonzero`` ordering. The compaction size is rounded up to the
+    next power of two (then sliced back to the true count), capping jit
+    specializations at ~log2(V) instead of one per distinct edit count."""
+    delta, n = _edit_count(f_hat, g)
+    n = int(n)
+    if n == 0:
+        empty = jnp.zeros(0, jnp.int32)
+        return empty, jnp.zeros(0, f_hat.dtype)
+    cap = 1 << (n - 1).bit_length()
+    idx, val = _edit_compact(delta, cap)
+    return idx[:n], val[:n]
 
 
 def apply_edits(f_hat, edits_idx, edits_val) -> np.ndarray:

@@ -52,6 +52,7 @@ from jax.sharding import Mesh, PartitionSpec
 from ..core.backend import register_backend
 from ..kernels.extrema import default_interpret, extrema_masks_pallas
 from ..kernels.fixpass import fix_pass_pallas
+from ..kernels.lorenzo import lorenzo_quant_pallas
 
 DATA_AXIS = "data"
 
@@ -232,6 +233,71 @@ def sharded_fix(g0: jnp.ndarray, topo, mesh: Mesh, *, max_iters: int = 512,
 
 
 # ---------------------------------------------------------------------------
+# sharded base transform (device-resident compression path, DESIGN.md §4)
+# ---------------------------------------------------------------------------
+
+def sharded_transform(f: jnp.ndarray, step, mesh: Mesh, *,
+                      axis_name: str = DATA_AXIS,
+                      interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Quantize + integer Lorenzo over the mesh: each device transforms
+    its own Z-slab block after a single backward 1-slab halo exchange of
+    ``f`` (the Lorenzo stencil is backward-only). The kernel runs in
+    global coordinates via the same ``slab_lo`` plumbing as the fix
+    kernels, so the q(z-1) term is zeroed at the true z == 0 boundary
+    only — residual codes are bitwise equal to a single-device run."""
+    if interpret is None:
+        interpret = default_interpret()
+    n_dev = data_axis_size(mesh, axis_name)
+    N = f.shape[0]
+    L = _block_size(N, n_dev)
+    f_p = _pad_slabs(f, L * n_dev)
+    step_arr = jnp.asarray(step, f.dtype)
+
+    def spmd(f_loc):
+        lo, _ = halo_exchange(f_loc, axis_name, n_dev)
+        f_ext = jnp.concatenate([lo, f_loc], axis=0)       # (L+1, ...)
+        slab_lo = jax.lax.axis_index(axis_name).astype(jnp.int32) * L - 1
+        r_ext = lorenzo_quant_pallas(f_ext, step_arr, interpret=interpret,
+                                     slab_lo=slab_lo)
+        return r_ext[1:]   # drop the halo slab's (possibly garbage) output
+
+    spec = PartitionSpec(axis_name)
+    r = shard_map(spmd, mesh=mesh, in_specs=(spec,), out_specs=spec,
+                  check_rep=False)(f_p)
+    return r[:N]
+
+
+def sharded_reconstruct(r: jnp.ndarray, step, dtype, mesh: Mesh, *,
+                        axis_name: str = DATA_AXIS) -> jnp.ndarray:
+    """Inverse transform over the mesh: the in-block cumsums are local;
+    the slab-axis cumsum becomes local-cumsum + an exclusive prefix of
+    per-device block totals (one all_gather of a single plane). All
+    integer arithmetic is exact, and the final dequantization multiply is
+    elementwise — bitwise equal to single-device ``sz_inverse``."""
+    n_dev = data_axis_size(mesh, axis_name)
+    N = r.shape[0]
+    L = _block_size(N, n_dev)
+    r_p = _pad_slabs(r, L * n_dev)
+    step_arr = jnp.asarray(step, dtype)
+
+    def spmd(r_loc):
+        q = jnp.cumsum(r_loc, axis=0, dtype=jnp.int32)
+        totals = jax.lax.all_gather(q[-1], axis_name)      # (n_dev, ...)
+        idx = jax.lax.axis_index(axis_name)
+        before = (jnp.arange(n_dev) < idx).astype(jnp.int32)
+        before = before.reshape((-1,) + (1,) * (q.ndim - 1))
+        q = q + jnp.sum(totals * before, axis=0, dtype=jnp.int32)
+        for ax in range(1, q.ndim):
+            q = jnp.cumsum(q, axis=ax, dtype=jnp.int32)
+        return q.astype(dtype) * step_arr
+
+    spec = PartitionSpec(axis_name)
+    out = shard_map(spmd, mesh=mesh, in_specs=(spec,), out_specs=spec,
+                    check_rep=False)(r_p)
+    return out[:N]
+
+
+# ---------------------------------------------------------------------------
 # the registered backend
 # ---------------------------------------------------------------------------
 
@@ -307,6 +373,17 @@ class ShardedBackend:
         return sharded_fix(g0, topo, be.mesh, max_iters=max_iters,
                            axis_name=be.axis_name,
                            interpret=be._interpret())
+
+    # -- device-resident base transform (DESIGN.md §4) ------------------
+    def transform(self, f: jnp.ndarray, step) -> jnp.ndarray:
+        be = self.bind()
+        return sharded_transform(f, step, be.mesh, axis_name=be.axis_name,
+                                 interpret=be._interpret())
+
+    def reconstruct(self, r: jnp.ndarray, step, dtype) -> jnp.ndarray:
+        be = self.bind()
+        return sharded_reconstruct(r, step, dtype, be.mesh,
+                                   axis_name=be.axis_name)
 
 
 register_backend(ShardedBackend())

@@ -1,12 +1,27 @@
 """Pallas TPU kernel: dual-quantization Lorenzo transform (the SZ-like
-compressor's hot loop, repro.compress.szlike) for 3D fields.
+compressor's hot loop, repro.compress.szlike) for 2D and 3D fields.
 
-r[z,y,x] = q - q(z-1) - q(y-1) - q(x-1) + q(z-1,y-1) + q(z-1,x-1)
-         + q(y-1,x-1) - q(z-1,y-1,x-1),   q = round(f / step)
+3D:  r[z,y,x] = q - q(z-1) - q(y-1) - q(x-1) + q(z-1,y-1) + q(z-1,x-1)
+              + q(y-1,x-1) - q(z-1,y-1,x-1),   q = round(f / step)
+2D:  r[y,x]   = q - q(y-1) - q(x-1) + q(y-1,x-1)
 
-Backward-only 1-halo in z (two slabs), static shifts in-plane. The inverse
-(triple cumsum) stays an XLA associative scan — scans are already optimal
-there and a hand-rolled kernel would only re-derive them."""
+Slab decomposition mirrors the extrema/fix kernels (3D: z-slabs of plane
+shape (Y, X); 2D: y-rows of shape (1, X)), but Lorenzo is backward-only:
+each program reads two slabs (s-1, s) and static in-plane shifts. The
+quantization ``round(f / step)`` runs in the field's dtype — the shared
+arithmetic contract with the host codec (szlike module docstring), so the
+int32 residuals match the host's bit for bit within the int32 range
+precondition.
+
+``step`` and ``slab_lo`` are scalar OPERANDS, not static parameters:
+``step`` so batched execution can vmap one compiled kernel over
+per-member quantization steps, ``slab_lo`` (traced-capable, like the
+extrema kernel's) so the sharded backend can transform its own Z-slab in
+global coordinates — the q(z-1) term is zeroed at the TRUE domain
+boundary z == 0 only, not at slab edges.
+
+The inverse (d nested cumsums) stays an XLA associative scan — scans are
+already optimal there and a hand-rolled kernel would only re-derive them."""
 from __future__ import annotations
 
 import functools
@@ -15,44 +30,70 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .extrema import _shift2d
+from .extrema import _shift2d, default_interpret, slab_lo_operand, slab_lo_spec
 
 
-def _kernel(f_m, f_c, r_out, *, Z, Y, X, step):
-    z = pl.program_id(0)
-    inv = 1.0 / step
+def _kernel(slab_lo_c, step_c, f_m, f_c, r_out, *, ndim, P, X):
+    z = slab_lo_c[0, 0] + pl.program_id(0)
+    step = step_c[0, 0]
 
-    def q_of(slab):
-        return jnp.round(slab * inv).astype(jnp.int32)
+    def q_of(ref):
+        return jnp.round(ref[...].reshape(P, X) / step).astype(jnp.int32)
 
-    qc = q_of(f_c[0])
-    qm = q_of(f_m[0])
+    qc = q_of(f_c)
+    qm = q_of(f_m)
     qm = jnp.where(z == 0, 0, qm)          # zero-pad before the domain
 
     def sh(a, dy, dx):
         return _shift2d(a, dy, dx, 0)
 
-    r = (qc
-         - sh(qc, -1, 0) - sh(qc, 0, -1) - qm
-         + sh(qm, -1, 0) + sh(qm, 0, -1) + sh(qc, -1, -1)
-         - sh(qm, -1, -1))
-    r_out[0] = r
+    if ndim == 3:
+        r = (qc
+             - sh(qc, -1, 0) - sh(qc, 0, -1) - qm
+             + sh(qm, -1, 0) + sh(qm, 0, -1) + sh(qc, -1, -1)
+             - sh(qm, -1, -1))
+    else:                                  # 2D: slab axis is y, P == 1
+        r = qc - sh(qc, 0, -1) - qm + sh(qm, 0, -1)
+    r_out[...] = r.reshape(r_out.shape)
 
 
-def lorenzo_quant_pallas(f: jnp.ndarray, step: float, *,
-                         interpret: bool = True) -> jnp.ndarray:
-    """f: (Z,Y,X) float; returns int32 Lorenzo residuals of round(f/step)."""
-    Z, Y, X = f.shape
-    specs = [
-        pl.BlockSpec((1, Y, X), lambda z: (jnp.maximum(z - 1, 0), 0, 0)),
-        pl.BlockSpec((1, Y, X), lambda z: (z, 0, 0)),
-    ]
-    kern = functools.partial(_kernel, Z=Z, Y=Y, X=X, step=float(step))
+def lorenzo_quant_pallas(f: jnp.ndarray, step, *,
+                         interpret: bool | None = None,
+                         slab_lo=0) -> jnp.ndarray:
+    """f: (Z,Y,X) or (Y,X) float; returns int32 Lorenzo residuals of
+    round(f / step).
+
+    ``slab_lo`` places a slab block inside a larger field exactly as in
+    ``extrema_masks_pallas`` (no ``n_slabs_total`` — the stencil is
+    backward-only, so only the z == 0 domain boundary matters). It may be
+    a traced int32 scalar (the sharded transform passes
+    ``axis_index * L - 1``); outputs on slabs whose backward 1-slab halo
+    lies inside the block are bitwise identical to an unblocked run.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    if f.ndim == 3:
+        n_local, P, X = f.shape
+        specs = [
+            pl.BlockSpec((1, P, X), lambda z: (jnp.maximum(z - 1, 0), 0, 0)),
+            pl.BlockSpec((1, P, X), lambda z: (z, 0, 0)),
+        ]
+    elif f.ndim == 2:
+        n_local, X = f.shape
+        P = 1
+        specs = [
+            pl.BlockSpec((1, X), lambda z: (jnp.maximum(z - 1, 0), 0)),
+            pl.BlockSpec((1, X), lambda z: (z, 0)),
+        ]
+    else:
+        raise ValueError(f"lorenzo kernel supports 2D/3D, got shape {f.shape}")
+    kern = functools.partial(_kernel, ndim=f.ndim, P=P, X=X)
+    step_op = jnp.asarray(step, f.dtype).reshape(1, 1)
     return pl.pallas_call(
         kern,
-        grid=(Z,),
-        in_specs=specs,
-        out_specs=pl.BlockSpec((1, Y, X), lambda z: (z, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((Z, Y, X), jnp.int32),
+        grid=(n_local,),
+        in_specs=[slab_lo_spec(), slab_lo_spec()] + specs,
+        out_specs=specs[1],
+        out_shape=jax.ShapeDtypeStruct(f.shape, jnp.int32),
         interpret=interpret,
-    )(f, f)
+    )(slab_lo_operand(slab_lo), step_op, f, f)

@@ -37,8 +37,8 @@ def fix_pass(g, lower, self_edit, demote_src, promote_src, up_code_g,
                             up_code_g, dn_code_f)
 
 
-@functools.partial(jax.jit, static_argnames=("step", "use_pallas"))
-def lorenzo_quant(f, step: float, use_pallas: bool = False):
-    if use_pallas and f.ndim == 3:
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def lorenzo_quant(f, step, use_pallas: bool = False):
+    if use_pallas and f.ndim in (2, 3):
         return lorenzo_quant_pallas(f, step, interpret=default_interpret())
     return ref.lorenzo_quant_ref(f, step)

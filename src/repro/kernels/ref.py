@@ -42,8 +42,10 @@ def fix_pass_ref(g, lower, self_edit, demote_src, promote_src,
 
 
 def lorenzo_quant_ref(f, step):
-    """Oracle for kernels.lorenzo.lorenzo_quant_pallas."""
-    q = jnp.round(f * (1.0 / step)).astype(jnp.int32)
+    """Oracle for kernels.lorenzo.lorenzo_quant_pallas. Divides by step
+    (not multiply-by-reciprocal) — the canonical quantization arithmetic
+    shared with the host codec (szlike module docstring)."""
+    q = jnp.round(f / step).astype(jnp.int32)
     r = q
     for ax in range(f.ndim):
         shifted = jnp.concatenate(

@@ -1,5 +1,7 @@
 """Tests for the error-bounded base compressors, the edit codec, and the
 end-to-end MSS-preserving pipeline."""
+import time
+
 import numpy as np
 import pytest
 from _hyp_compat import given, settings, st
@@ -8,9 +10,14 @@ from repro.compress import (sz_roundtrip, zfp_roundtrip, encode_edits,
                             decode_edits, compress_preserving_mss,
                             decompress_artifact, overall_compression_ratio,
                             overall_bit_rate, psnr)
-from repro.compress.szlike import sz_transform, sz_inverse
+from repro.compress import szlike
+from repro.compress.codec import _varint_decode, _varint_encode
+from repro.compress.szlike import (check_int32_range, effective_step,
+                                   sz_compress, sz_decompress, sz_inverse,
+                                   sz_transform)
 from repro.core import verify_preservation
 from repro.data import synthetic_field
+import jax
 import jax.numpy as jnp
 
 
@@ -40,6 +47,84 @@ def test_sz_jax_path_matches_host():
     assert np.max(np.abs(f - back)) <= xi * (1 + 1e-5)
 
 
+# ---------------------------------------------------------------------------
+# device/host codec parity: the arithmetic contract of DESIGN.md §4 —
+# sz_inverse(sz_transform(f)) must be BITWISE equal to the f_hat that
+# sz_decompress(sz_compress(f)) reconstructs
+# ---------------------------------------------------------------------------
+
+def _tie_field(shape, step):
+    """Plateaus and values on exact quantization midpoints (k + 1/2)*step —
+    the round-half-even edge both paths must take identically."""
+    f = np.zeros(shape, np.float32)
+    f.reshape(-1)[::3] = np.float32(2.5 * step)
+    f.reshape(-1)[1::5] = np.float32(-0.5 * step)
+    f[tuple(s // 2 for s in shape)] = np.float32(7 * step)
+    return f
+
+
+def _parity_case(f, xi):
+    fh_host = sz_decompress(sz_compress(f, xi))
+    step = effective_step(f, xi)
+    sj = jnp.asarray(np.asarray(step, f.dtype))
+    r = sz_transform(jnp.asarray(f), sj)
+    fh_dev = np.asarray(sz_inverse(r, sj))
+    assert fh_dev.dtype == f.dtype
+    np.testing.assert_array_equal(fh_host, fh_dev)
+    # and the device residual codes re-encode to the identical blob
+    blob = szlike.sz_encode_residuals(np.asarray(r), f.shape, f.dtype, step)
+    assert blob == sz_compress(f, xi)
+
+
+@pytest.mark.parametrize("xi", [1e-1, 1e-3])
+@pytest.mark.parametrize("shape", [(33, 47), (17, 19, 23)])
+def test_device_host_codec_parity_f32(shape, xi):
+    rng = np.random.default_rng(7)
+    _parity_case(rng.normal(size=shape).astype(np.float32), xi)
+
+
+@pytest.mark.parametrize("shape", [(21, 27), (9, 11, 13)])
+def test_device_host_codec_parity_ties_plateaus(shape):
+    xi = 0.05
+    _parity_case(_tie_field(shape, 2 * xi), xi)
+    _parity_case(np.zeros(shape, np.float32), xi)          # all-plateau
+
+
+@pytest.mark.parametrize("shape", [(21, 27), (9, 11, 13)])
+def test_device_host_codec_parity_f64(shape):
+    """f64 parity needs f64 device arithmetic — run the jit path under
+    x64 mode (the device pipeline only auto-selects f64 when x64 is on)."""
+    from jax.experimental import enable_x64
+    rng = np.random.default_rng(8)
+    f = rng.normal(size=shape)
+    assert f.dtype == np.float64
+    with enable_x64():
+        _parity_case(f, 1e-3)
+
+
+def test_int32_range_precondition_checked():
+    """The szlike docstring promises a runtime check of the int32 range
+    precondition — both directly and through the device pipeline."""
+    f = np.array([[1e9, -1e9], [5e8, 0.0]], np.float32)
+    with pytest.raises(ValueError, match="device path precondition"):
+        check_int32_range(f, 1e-3)
+    with pytest.raises(ValueError, match="device path precondition"):
+        sz_transform(f, np.float32(2e-3))
+    with pytest.raises(ValueError, match="device_path=True"):
+        compress_preserving_mss(f, 1e-3, device_path=True)
+    # f64 fields get the looser int32 limit: 2^21 < ratio < 2^28 passes
+    f64 = f.astype(np.float64)
+    check_int32_range(f64, 100.0)               # ratio 1e7: ok for f64
+    with pytest.raises(ValueError, match="int32 cumsum"):
+        check_int32_range(f64, 1e-3)            # ratio 1e12: overflows
+    # auto mode classifies the f32 field as host-path-only
+    from repro.compress.pipeline import _device_path_reason
+    reason, step = _device_path_reason(f, 1e-3, "szlike", "fused")
+    assert reason is not None and "precondition" in reason and step is None
+    with pytest.raises(ValueError, match="positive"):
+        check_int32_range(f, 0.0)
+
+
 @pytest.mark.parametrize("xi", [1e-1, 1e-2, 1e-3])
 @pytest.mark.parametrize("shape", [(32, 48), (16, 20, 24), (33, 47)])
 def test_zfp_error_bound(xi, shape):
@@ -66,6 +151,28 @@ def test_edit_codec_roundtrip(seed, n):
     idx2, val2 = decode_edits(blob)
     np.testing.assert_array_equal(idx, idx2)
     np.testing.assert_array_equal(val, val2)
+
+
+def test_varint_decode_vectorized_roundtrip_guard():
+    """Round-trip microbenchmark guard for the vectorized LEB128 decode:
+    the former per-byte Python loop took several seconds on a million-edit
+    stream; the numpy scan must stay well under the wall-clock budget
+    (generous enough for slow CI, ~10x above the vectorized time)."""
+    rng = np.random.default_rng(12)
+    deltas = rng.integers(0, 2 ** 40, size=1_000_000, dtype=np.int64)
+    deltas[::3] = rng.integers(0, 100, size=deltas[::3].size)  # mixed widths
+    buf = _varint_encode(deltas)
+    t0 = time.perf_counter()
+    got = _varint_decode(buf, deltas.size)
+    elapsed = time.perf_counter() - t0
+    np.testing.assert_array_equal(got, deltas)
+    assert elapsed < 3.0, f"varint decode regressed: {elapsed:.2f}s for 1M"
+    # boundary widths: 1-byte, 2-byte, and full-uint63 values
+    edge = np.array([0, 1, 127, 128, 16383, 16384, 2 ** 62], np.int64)
+    np.testing.assert_array_equal(_varint_decode(_varint_encode(edge),
+                                                 edge.size), edge)
+    with pytest.raises(ValueError, match="truncated varint"):
+        _varint_decode(_varint_encode(edge)[:-1], edge.size)
 
 
 def test_edit_codec_bf16_mode():

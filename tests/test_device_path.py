@@ -1,0 +1,222 @@
+"""Device-resident compression path (DESIGN.md §4).
+
+The contract under test: ``compress_preserving_mss(..., device_path=True)``
+(and "auto" whenever the preconditions hold) produces artifacts BYTE-FOR-
+BYTE identical to the host-path artifact's — base payload, edit payload,
+and decompressed field — on 2D and 3D fields, for the reference, pallas,
+and sharded backends, while moving at most one host->device and one
+device->host transfer of field-sized data per call.
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.compress import (compress_preserving_mss,
+                            compress_preserving_mss_batch,
+                            decompress_artifact)
+from repro.compress import pipeline
+from repro.core import verify_preservation
+from repro.core.backend import get_backend
+from repro.data import synthetic_field
+from repro.launch.mesh import make_data_mesh
+
+N_AVAIL = len(jax.devices())
+
+SHAPES = [(26, 18), (12, 10, 9)]
+
+
+def _case(shape, seed=3, rel=0.02):
+    f = synthetic_field("molecular", shape=shape, seed=seed)
+    return f, rel * float(np.ptp(f))
+
+
+def _assert_identical(a, b):
+    assert a.base_payload == b.base_payload
+    assert a.edit_payload == b.edit_payload
+    np.testing.assert_array_equal(decompress_artifact(a),
+                                  decompress_artifact(b))
+
+
+# ---------------------------------------------------------------------------
+# bitwise parity host <-> device, per backend
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+@pytest.mark.parametrize("shape", SHAPES)
+def test_device_path_bitwise_identical(shape, backend):
+    f, xi = _case(shape)
+    host = compress_preserving_mss(f, xi, device_path=False, backend=backend)
+    dev = compress_preserving_mss(f, xi, device_path=True, backend=backend)
+    assert host.path == "host" and dev.path == "device"
+    assert dev.version == pipeline.ARTIFACT_VERSION
+    assert dev.backend == backend
+    assert dev.t_transform > 0.0 and host.t_transform == 0.0
+    _assert_identical(host, dev)
+    g = decompress_artifact(dev)
+    v = verify_preservation(f, g, xi)
+    assert v["mss_preserved"] and v["bound_ok"], v
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_device_path_sharded_bitwise_identical(shape):
+    if N_AVAIL < 2:
+        pytest.skip("needs >= 2 devices (run under "
+                    "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+    mesh = make_data_mesh(min(N_AVAIL, 4))
+    f, xi = _case(shape)
+    host = compress_preserving_mss(f, xi, device_path=False)
+    dev = compress_preserving_mss(f, xi, device_path=True, backend="sharded",
+                                  mesh=mesh)
+    assert dev.path == "device" and dev.backend == "sharded"
+    _assert_identical(host, dev)
+
+
+def test_auto_picks_device_path_and_matches():
+    f, xi = _case((12, 10, 9))
+    auto = compress_preserving_mss(f, xi)               # defaults
+    host = compress_preserving_mss(f, xi, device_path=False)
+    assert auto.path == "device"
+    _assert_identical(auto, host)
+
+
+def test_auto_falls_back_to_host():
+    # zfplike's block transform has no device implementation
+    f, xi = _case((26, 18))
+    art = compress_preserving_mss(f, xi, base="zfplike")
+    assert art.path == "host"
+    # f64 needs x64 mode for device arithmetic -> host path off-x64
+    f64, xi64 = _case((26, 18))
+    f64 = f64.astype(np.float64)
+    art64 = compress_preserving_mss(f64, xi64)
+    assert art64.path == "host"
+    v = verify_preservation(f64, decompress_artifact(art64), xi64)
+    assert v["mss_preserved"] and v["bound_ok"]
+    # paper mode always runs host-side
+    art_p = compress_preserving_mss(f, xi, mode="paper")
+    assert art_p.path == "host"
+    with pytest.raises(ValueError, match="device_path=True"):
+        compress_preserving_mss(f, xi, base="zfplike", device_path=True)
+
+
+# ---------------------------------------------------------------------------
+# transfer counting: the device path moves field-sized data across the
+# host/device boundary exactly once in each direction
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_device_path_transfer_count(shape, monkeypatch):
+    f, xi = _case(shape)
+    log = []
+    monkeypatch.setattr(pipeline, "_transfer_hook",
+                        lambda d, n: log.append((d, n)))
+    compress_preserving_mss(f, xi, device_path=True)
+    field_sized = [(d, n) for d, n in log if n >= f.nbytes]
+    assert sum(1 for d, _ in field_sized if d == "h2d") == 1, log
+    assert sum(1 for d, _ in field_sized if d == "d2h") == 1, log
+
+
+def test_device_path_batch_transfer_count(monkeypatch):
+    B = 3
+    fields = [synthetic_field("molecular", shape=(10, 12, 8), seed=s)
+              for s in range(B)]
+    xis = [0.02 * float(np.ptp(fi)) for fi in fields]
+    log = []
+    monkeypatch.setattr(pipeline, "_transfer_hook",
+                        lambda d, n: log.append((d, n)))
+    compress_preserving_mss_batch(fields, xis)
+    batch_bytes = B * fields[0].nbytes
+    field_sized = [(d, n) for d, n in log if n >= batch_bytes]
+    assert sum(1 for d, _ in field_sized if d == "h2d") == 1, log
+    assert sum(1 for d, _ in field_sized if d == "d2h") == 1, log
+
+
+# ---------------------------------------------------------------------------
+# batched device path
+# ---------------------------------------------------------------------------
+
+def test_batch_device_path_matches_solo():
+    B = 4
+    fields = [synthetic_field("molecular", shape=(10, 12, 8), seed=s)
+              for s in range(B)]
+    xis = [0.02 * float(np.ptp(fi)) for fi in fields]
+    arts = compress_preserving_mss_batch(fields, xis)
+    assert len(arts) == B
+    for fi, xi_i, art in zip(fields, xis, arts):
+        assert art.path == "device"
+        solo = compress_preserving_mss(fi, xi_i, device_path=True)
+        assert art.base_payload == solo.base_payload
+        assert art.edit_payload == solo.edit_payload
+        v = verify_preservation(fi, decompress_artifact(art), xi_i)
+        assert v["mss_preserved"] and v["bound_ok"], v
+
+
+def test_batch_device_path_sharded_matches_solo():
+    if N_AVAIL < 2:
+        pytest.skip("needs >= 2 devices (run under "
+                    "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+    mesh = make_data_mesh(2)
+    fields = [synthetic_field("molecular", shape=(10, 12, 8), seed=s)
+              for s in range(2)]
+    xis = [0.02 * float(np.ptp(fi)) for fi in fields]
+    arts = compress_preserving_mss_batch(fields, xis, mesh=mesh)
+    for fi, xi_i, art in zip(fields, xis, arts):
+        assert art.path == "device" and art.backend == "sharded"
+        solo = compress_preserving_mss(fi, xi_i, device_path=True)
+        assert art.base_payload == solo.base_payload
+        assert art.edit_payload == solo.edit_payload
+
+
+def test_batch_device_path_2d():
+    B = 3
+    fields = [synthetic_field("climate", shape=(20, 26), seed=s)
+              for s in range(B)]
+    xi = 0.01 * float(np.ptp(fields[0]))
+    arts = compress_preserving_mss_batch(fields, xi)
+    host = compress_preserving_mss_batch(fields, xi, device_path=False)
+    for a, h in zip(arts, host):
+        assert a.path == "device" and h.path == "host"
+        _assert_identical(a, h)
+
+
+# ---------------------------------------------------------------------------
+# the backend transform/reconstruct protocol itself
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(9, 11), (6, 7, 8)])
+def test_backend_transform_parity(shape):
+    rng = np.random.default_rng(5)
+    f = jnp.asarray(rng.normal(size=shape).astype(np.float32))
+    step = np.float32(0.04)
+    ref = get_backend("reference")
+    pal = get_backend("pallas")
+    r_ref = np.asarray(ref.transform(f, step))
+    r_pal = np.asarray(pal.transform(f, step))
+    np.testing.assert_array_equal(r_ref, r_pal)
+    fh_ref = np.asarray(ref.reconstruct(jnp.asarray(r_ref), step, f.dtype))
+    fh_pal = np.asarray(pal.reconstruct(jnp.asarray(r_ref), step, f.dtype))
+    np.testing.assert_array_equal(fh_ref, fh_pal)
+    if N_AVAIL >= 2:
+        sb = get_backend("sharded").with_mesh(make_data_mesh(min(N_AVAIL, 4)))
+        np.testing.assert_array_equal(r_ref, np.asarray(sb.transform(f, step)))
+        np.testing.assert_array_equal(
+            fh_ref, np.asarray(sb.reconstruct(jnp.asarray(r_ref), step,
+                                              f.dtype)))
+
+
+def test_edit_extraction_on_device_matches_host():
+    from repro.core.driver import extract_edits
+    rng = np.random.default_rng(9)
+    f_hat = rng.normal(size=(7, 8, 9)).astype(np.float32)
+    g = f_hat.copy()
+    picks = rng.choice(f_hat.size, size=40, replace=False)
+    g.reshape(-1)[picks] -= 0.125
+    idx, val = extract_edits(jnp.asarray(f_hat), jnp.asarray(g))
+    delta = g - f_hat
+    want_idx = np.flatnonzero(delta != 0)
+    np.testing.assert_array_equal(np.asarray(idx), want_idx)
+    np.testing.assert_array_equal(np.asarray(val),
+                                  delta.reshape(-1)[want_idx])
+    # no edits
+    idx0, val0 = extract_edits(jnp.asarray(f_hat), jnp.asarray(f_hat))
+    assert idx0.size == 0 and val0.size == 0
