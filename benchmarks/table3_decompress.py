@@ -1,0 +1,100 @@
+"""Table 3 (beyond-paper): decompression-path throughput — the host
+byte-codec loop vs the device-resident decode (on-device reconstruct +
+edit scatter, DESIGN.md §5), fields/sec vs batch size vs device count.
+
+The read path is what serves traffic at scale (ROADMAP north star), so
+this table answers the deployment question TopoSZp poses: is the
+topology-corrected decode light enough to serve from? Artifacts are
+synthesized directly (base blob + a sparse random edit stream) so the
+table measures DECOMPRESSION only, independent of fix-loop cost; a
+one-time bitwise cross-check of host vs device output guards the
+parity contract while the clock runs.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.compress import decompress_artifact, decompress_artifact_batch
+from repro.compress import codec, szlike
+from repro.compress.pipeline import CompressedArtifact
+from repro.data import synthetic_field
+
+from .common import emit
+
+
+def _synthetic_artifact(f: np.ndarray, xi: float, edit_frac: float = 0.002,
+                        seed: int = 0) -> CompressedArtifact:
+    """An szlike artifact with a plausible sparse edit stream; decode cost
+    does not depend on how the edits were derived, so the fix loop is
+    skipped (it would dominate setup at 256^3)."""
+    payload = szlike.sz_compress(f, xi)
+    rng = np.random.default_rng(seed)
+    n = max(1, int(edit_frac * f.size))
+    idx = np.sort(rng.choice(f.size, size=n, replace=False)).astype(np.int64)
+    val = (0.5 * xi * rng.standard_normal(n)).astype(np.float32)
+    return CompressedArtifact(
+        base="szlike", base_payload=payload,
+        edit_payload=codec.encode_edits(idx, val),
+        shape=f.shape, dtype=str(f.dtype), xi=xi)
+
+
+def _time_fields_per_sec(fn, n_fields: int, iters: int) -> float:
+    fn()                                    # warmup (jit compile)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return n_fields / times[len(times) // 2]
+
+
+def run(quick: bool = True):
+    import jax
+
+    side = 32 if quick else 256
+    batches = (1, 4) if quick else (1, 4, 16)
+    iters = 3 if quick else 5
+    f = synthetic_field("nyx", shape=(side,) * 3).astype(np.float32)
+    xi = 1e-3 * float(np.ptp(f))
+    art = _synthetic_artifact(f, xi)
+
+    # parity guard: the numbers below only count if both paths agree
+    np.testing.assert_array_equal(
+        decompress_artifact(art),
+        decompress_artifact_batch([art], device_path=True)[0])
+
+    for B in batches:
+        arts = [art] * B
+        host = _time_fields_per_sec(
+            lambda: [decompress_artifact(a) for a in arts], B, iters)
+        emit(f"table3/{side}^3/host/B={B}", 1e6 * B / host,
+             f"fields_per_sec={host:.2f};path=host")
+        dev = _time_fields_per_sec(
+            lambda: decompress_artifact_batch(arts, device_path=True),
+            B, iters)
+        emit(f"table3/{side}^3/device/B={B}", 1e6 * B / dev,
+             f"fields_per_sec={dev:.2f};path=device;"
+             f"speedup={dev / host:.2f}x")
+
+    n_avail = len(jax.devices())
+    if n_avail >= 2:
+        from repro.launch.mesh import make_data_mesh
+        B = batches[-1]
+        arts = [art] * B
+        for n_dev in (2, 4, 8):
+            if n_dev > n_avail:
+                break
+            mesh = make_data_mesh(n_dev)
+            sh = _time_fields_per_sec(
+                lambda: decompress_artifact_batch(
+                    arts, device_path=True, backend="sharded", mesh=mesh),
+                B, iters)
+            emit(f"table3/{side}^3/sharded/B={B}/devices={n_dev}",
+                 1e6 * B / sh, f"fields_per_sec={sh:.2f};path=device")
+
+
+if __name__ == "__main__":
+    run()

@@ -31,6 +31,12 @@ def _parse_args():
                     help="force the host byte-codec path (default: the "
                          "device-resident path whenever its preconditions "
                          "hold; artifacts are bitwise identical either way)")
+    ap.add_argument("--decode-path", default="auto",
+                    choices=("auto", "host", "device"),
+                    help="decompression path: 'device' forces the "
+                         "device-resident decode (szlike artifacts only; "
+                         "zfplike rows fall back to auto), 'host' the "
+                         "byte-codec loop; outputs are bitwise identical")
     return ap.parse_args()
 
 
@@ -47,8 +53,9 @@ def main():
     import jax.numpy as jnp
 
     from repro.compress import (compress_preserving_mss, decompress_artifact,
-                                overall_bit_rate, overall_compression_ratio,
-                                psnr, sz_roundtrip, zfp_roundtrip)
+                                decompress_preserving_mss, overall_bit_rate,
+                                overall_compression_ratio, psnr, sz_roundtrip,
+                                zfp_roundtrip)
     from repro.core import segmentation_accuracy, verify_preservation
     from repro.data import synthetic_field
     from repro.launch.mesh import make_data_mesh
@@ -86,7 +93,17 @@ def main():
                                               backend=args.backend,
                                               mesh=mesh,
                                               device_path=device_path)
-                g = decompress_artifact(art)
+                if args.decode_path == "host":
+                    g = decompress_artifact(art)
+                else:
+                    # 'device' forces the device decode for szlike rows;
+                    # zfplike has no device reconstruct, so fall back to
+                    # auto there (bitwise identical output either way)
+                    dp = True if (args.decode_path == "device"
+                                  and base == "szlike") else "auto"
+                    g = decompress_preserving_mss(art, device_path=dp,
+                                                  backend=args.backend,
+                                                  mesh=mesh)
                 rep = verify_preservation(f, g, xi)
                 ok = rep["mss_preserved"] and rep["bound_ok"]
                 print(f"{name:12s} {base:8s} {rel:<8g} {100*raw_acc:10.2f} "

@@ -4,18 +4,21 @@ Section 6.3 and the end-to-end MSz-corrected compression pipeline."""
 from .szlike import (check_int32_range, effective_step, sz_compress,
                      sz_decompress, sz_inverse, sz_roundtrip, sz_transform)
 from .zfplike import zfp_compress, zfp_decompress, zfp_roundtrip
-from .codec import (encode_edits, decode_edits, lossless_bytes,
-                    gzip_like, zstd_like)
+from .codec import (encode_edits, decode_edits, decode_edits_batch,
+                    lossless_bytes, gzip_like, zstd_like)
 from .pipeline import (CompressedArtifact, compress_preserving_mss,
                        compress_preserving_mss_batch, decompress_artifact,
+                       decompress_artifact_batch, decompress_preserving_mss,
                        overall_compression_ratio, overall_bit_rate, psnr)
 
 __all__ = [
     "sz_compress", "sz_decompress", "sz_roundtrip",
     "sz_transform", "sz_inverse", "check_int32_range", "effective_step",
     "zfp_compress", "zfp_decompress", "zfp_roundtrip",
-    "encode_edits", "decode_edits", "lossless_bytes", "gzip_like", "zstd_like",
+    "encode_edits", "decode_edits", "decode_edits_batch",
+    "lossless_bytes", "gzip_like", "zstd_like",
     "CompressedArtifact", "compress_preserving_mss",
     "compress_preserving_mss_batch", "decompress_artifact",
+    "decompress_artifact_batch", "decompress_preserving_mss",
     "overall_compression_ratio", "overall_bit_rate", "psnr",
 ]

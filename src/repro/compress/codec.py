@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import struct
 import zlib
-from typing import Tuple
+from typing import Optional, Tuple
 
 import numpy as np
 
@@ -75,7 +75,15 @@ def _varint_decode(buf: bytes, count: int) -> np.ndarray:
 
 
 def encode_edits(idx: np.ndarray, val: np.ndarray, value_dtype="f4") -> bytes:
-    """Pack sorted edit indices + values. value_dtype: 'f4' or 'bf16'."""
+    """Pack sorted edit indices + values. value_dtype: 'f4' or 'bf16'.
+
+    Unsorted indices are sorted (order carries no information); DUPLICATE
+    indices are a hard error. One vertex never receives two edits — the
+    fix loop produces one delta per vertex — so a duplicate means the
+    caller's edit extraction is broken, and the delta coding + the
+    decompression scatter would otherwise mask it (re-sorting used to
+    swallow duplicates silently; ``apply_edits`` would then drop or
+    double-apply them depending on the path)."""
     idx = np.asarray(idx, np.int64)
     val = np.asarray(val, np.float32)
     if idx.size != val.size:
@@ -83,6 +91,11 @@ def encode_edits(idx: np.ndarray, val: np.ndarray, value_dtype="f4") -> bytes:
     if idx.size and np.any(np.diff(idx) <= 0):
         order = np.argsort(idx, kind="stable")
         idx, val = idx[order], val[order]
+        if np.any(np.diff(idx) == 0):
+            dup = int(idx[np.flatnonzero(np.diff(idx) == 0)[0]])
+            raise ValueError(
+                f"duplicate edit index {dup}: edits must target each vertex "
+                "at most once (broken upstream edit extraction?)")
     deltas = np.diff(idx, prepend=np.int64(0))
     key_stream = zlib.compress(_varint_encode(deltas), 9)
     if value_dtype == "bf16":
@@ -113,6 +126,71 @@ def decode_edits(blob: bytes) -> Tuple[np.ndarray, np.ndarray]:
     else:
         val = np.frombuffer(vals, np.float32)
     return idx, val.copy()
+
+
+def iter_decode_blobs(decode, blobs, max_workers: Optional[int] = None,
+                      window: Optional[int] = None):
+    """Lazily yield ``decode(blob)`` results in blob order from a thread
+    pool.
+
+    DEFLATE decompression (and the numpy post-processing around it)
+    releases the GIL, so worker threads scale the host-side decode of a
+    batch across cores while the consumer processes already-decoded
+    members — the batched read path overlaps entropy decode with device
+    dispatch this way. At most ``window`` (default 2x workers) decodes
+    are in flight or undelivered, so resident memory stays O(window)
+    decoded blobs however large the batch. Single-element (or empty)
+    batches skip the pool."""
+    n = len(blobs)
+    if n <= 1:
+        for b in blobs:
+            yield decode(b)
+        return
+    import os
+    from collections import deque
+    from concurrent.futures import ThreadPoolExecutor
+    workers = max_workers or min(n, os.cpu_count() or 1)
+    window = window or 2 * workers
+    with ThreadPoolExecutor(max_workers=workers) as ex:
+        pending = deque()
+        i = 0
+        while i < n or pending:
+            while i < n and len(pending) < window:
+                pending.append(ex.submit(decode, blobs[i]))
+                i += 1
+            yield pending.popleft().result()
+
+
+def decode_blobs_parallel(decode, blobs, max_workers: Optional[int] = None):
+    """Eager form of ``iter_decode_blobs``: the full result list."""
+    return list(iter_decode_blobs(decode, blobs, max_workers))
+
+
+def decode_edits_batch(blobs, fill_idx: Optional[int] = None):
+    """Stream-decode many edit blobs in one call.
+
+    With ``fill_idx=None`` returns the list of per-blob ``(idx, val)``
+    pairs. With ``fill_idx`` set (the field size, one past the last valid
+    flat index) returns the dense layout the batched device scatter
+    consumes: ``(idx_b, val_b, counts)`` where ``idx_b``/``val_b`` are
+    (B, L) arrays padded to the longest member — indices with
+    ``fill_idx`` (out-of-range, dropped by the scatter's OOB semantics)
+    and values with 0 — and ``counts`` holds each member's true edit
+    count. Padding keeps every row sorted ascending.
+    """
+    pairs = decode_blobs_parallel(decode_edits, blobs)
+    if fill_idx is None:
+        return pairs
+    B = len(pairs)
+    L = max((i.size for i, _ in pairs), default=0)
+    idx_b = np.full((B, L), np.int64(fill_idx), np.int64)
+    val_b = np.zeros((B, L), np.float32)
+    counts = np.zeros(B, np.int64)
+    for i, (idx, val) in enumerate(pairs):
+        idx_b[i, :idx.size] = idx
+        val_b[i, :idx.size] = val
+        counts[i] = idx.size
+    return idx_b, val_b, counts
 
 
 # --- lossless baselines (Table 2's GZIP / ZSTD columns) --------------------

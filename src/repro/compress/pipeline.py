@@ -24,6 +24,14 @@ them (``CompressedArtifact.path``, header version 2).
 ``compress_preserving_mss_batch`` runs many same-shape fields through
 ONE vmapped transform and ONE batched fix loop instead of B sequential
 host codec calls.
+
+The READ side is symmetric (DESIGN.md §5): ``decompress_preserving_mss``
+host-decodes the entropy streams once, then does one h2d of the int32
+residual codes, on-device ``backend.reconstruct`` + edit scatter-add
+(``backend.scatter_edits``), and one d2h of g — bitwise identical to the
+host-side ``decompress_artifact``. ``decompress_artifact_batch`` serves
+many same-shape artifacts pipelined: threaded entropy decode overlapping
+per-member async device dispatch, one d2h of the stacked batch.
 """
 from __future__ import annotations
 
@@ -429,10 +437,189 @@ def compress_preserving_mss_batch(
 
 
 def decompress_artifact(art: CompressedArtifact) -> np.ndarray:
+    """Host-side decompression: byte-codec decode + numpy edit apply.
+    Works for any base/dtype; ``decompress_preserving_mss`` is the
+    production read path (device-resident whenever possible)."""
     _, decomp = _BASES[art.base]
     f_hat = decomp(art.base_payload)
     idx, val = codec.decode_edits(art.edit_payload)
     return apply_edits(f_hat, idx, val)
+
+
+# ---------------------------------------------------------------------------
+# the device-resident decompression path (DESIGN.md §5)
+# ---------------------------------------------------------------------------
+
+def _device_decode_reason(art: CompressedArtifact) -> Optional[str]:
+    """None when the device decode path can serve ``art`` on metadata
+    grounds (the residual-code range check runs after entropy decode),
+    else why not. Mirrors _device_path_reason on the write side."""
+    if art.base != "szlike":
+        return (f"device decode serves the szlike base only (got "
+                f"{art.base!r}); zfplike's block transform stays host-side")
+    if len(art.shape) not in (2, 3) or _size_of(art.shape) == 0:
+        return (f"device decode needs a non-empty 2D/3D field "
+                f"(shape {art.shape})")
+    if not _device_dtype_ok(np.dtype(art.dtype)):
+        return (f"device decode needs float32 (or float64 under jax x64 "
+                f"mode); got {art.dtype}")
+    return None
+
+
+def _size_of(shape) -> int:
+    return int(np.prod(shape, dtype=np.int64)) if len(shape) else 1
+
+
+def _decode_backend(backend: BackendLike, shape, dtype, mesh,
+                    device_path: DevicePath):
+    """Resolve the stencil backend for a decode call, or None (-> host
+    fallback) when it lacks the reconstruct/scatter protocol entries."""
+    be = resolve_backend(backend, shape, np.dtype(dtype), mesh=mesh)
+    if hasattr(be, "reconstruct") and hasattr(be, "scatter_edits"):
+        return be
+    if device_path is True:
+        raise ValueError(
+            f"device_path=True but backend {be.name!r} implements no "
+            "reconstruct/scatter_edits protocol entry")
+    return None
+
+
+def _checked_codes(art: CompressedArtifact):
+    """Entropy-decode ``art``'s residual stream and validate the int32
+    reconstruction precondition. Returns (r, shape, dtype, step) or a
+    reason string. Device-path artifacts were range-checked against the
+    original field at compress time; every other artifact's decoded
+    stream is validated soundly (szlike.codes_fit_int32 — a cheap
+    sum|r| sufficiency pass in the common case) because nothing in the
+    codec itself enforces the error bound: a directly-constructed
+    artifact can carry codes of any magnitude."""
+    r, shape, dtype, step = szlike.sz_decode_residuals(art.base_payload)
+    reason = _codes_reason(art, r)
+    if reason is not None:
+        return reason
+    return r, shape, dtype, step
+
+
+def _codes_reason(art: CompressedArtifact, r: np.ndarray) -> Optional[str]:
+    if art.path != "device" and not szlike.codes_fit_int32(r):
+        return ("the artifact's residual codes overflow the int32 cumsum "
+                "reconstruction (host-path artifact beyond the device "
+                "range precondition)")
+    return None
+
+
+def decompress_preserving_mss(art: CompressedArtifact,
+                              device_path: DevicePath = "auto",
+                              backend: BackendLike = "auto",
+                              mesh=None) -> np.ndarray:
+    """The mirror of the device-resident compress path (DESIGN.md §5):
+    host-decode the entropy streams once, then ONE host->device transfer
+    of the int32 residual codes, on-device ``backend.reconstruct`` of
+    f_hat and scatter-add of the edit deltas (``backend.scatter_edits``),
+    and ONE device->host transfer of g. Bitwise identical to
+    ``decompress_artifact`` — both reconstructions share the per-dtype
+    arithmetic contract (szlike module docstring) and the scatter adds
+    the identical f32 deltas at unique indices.
+
+    ``device_path="auto"`` falls back to the host path whenever the
+    preconditions fail (non-szlike base, unsupported dtype, residual
+    codes beyond the int32 range); ``True`` raises instead; ``False``
+    is ``decompress_artifact``. ``mesh`` routes reconstruction and the
+    scatter through the slab-sharded SPMD backend."""
+    if device_path is False:
+        return decompress_artifact(art)
+    reason = _device_decode_reason(art)
+    decoded = None
+    if reason is None:
+        decoded = _checked_codes(art)
+        if isinstance(decoded, str):
+            reason, decoded = decoded, None
+    be = None
+    if reason is None:
+        r, shape, dtype, step = decoded
+        be = _decode_backend(backend, shape, dtype, mesh, device_path)
+    if reason is not None or be is None:
+        if device_path is True:
+            raise ValueError(f"device_path=True but {reason}")
+        return decompress_artifact(art)
+
+    idx, val = codec.decode_edits(art.edit_payload)
+    idx, val = _pad_pow2(idx, val, _size_of(shape))
+    r_j = _h2d(np.ascontiguousarray(r, np.int32))
+    f_hat = be.reconstruct(r_j, step, dtype)
+    g = be.scatter_edits(f_hat, _h2d(idx.astype(np.int32)), _h2d(val))
+    return _d2h(g)
+
+
+def _pad_pow2(idx_b: np.ndarray, val_b: np.ndarray, fill_idx: int):
+    """Pad the edit axis to the next power of two (fill indices drop in
+    the scatter) so the jitted scatter specializes on ~log2(V) distinct
+    lengths instead of one per edit count — same trick as
+    driver.extract_edits on the write side."""
+    L = idx_b.shape[-1]
+    cap = 1 << max(L - 1, 0).bit_length() if L else 0
+    if cap == L:
+        return idx_b, val_b
+    pad = [(0, 0)] * (idx_b.ndim - 1) + [(0, cap - L)]
+    return (np.pad(idx_b, pad, constant_values=fill_idx),
+            np.pad(val_b, pad, constant_values=0))
+
+
+def decompress_artifact_batch(arts: Sequence[CompressedArtifact],
+                              device_path: DevicePath = "auto",
+                              backend: BackendLike = "auto",
+                              mesh=None) -> List[np.ndarray]:
+    """Batch decompression of many same-shape szlike artifacts, pipelined:
+    the entropy streams inflate on host worker threads while each
+    already-decoded member's residual codes cross to the device (one
+    member-sized h2d each) and its reconstruct + edit scatter dispatch
+    asynchronously; g stays device-resident until ONE d2h of the stacked
+    batch at the end. Edit streams are decoded up front and padded to a
+    shared power-of-two length with out-of-range indices the scatter
+    drops. Per-member output is bitwise identical to a solo
+    ``decompress_preserving_mss`` / ``decompress_artifact`` call.
+    Heterogeneous batches (mixed shapes, dtypes, or bases) decompress
+    member-by-member instead; the sharded backend serves each member's
+    reconstruct/scatter over the mesh within the same pipeline."""
+    arts = list(arts)
+    if not arts:
+        return []
+    a0 = arts[0]
+    uniform = all(a.base == a0.base and a.shape == a0.shape
+                  and a.dtype == a0.dtype for a in arts)
+    if device_path is False or not uniform:
+        return [decompress_preserving_mss(a, device_path=device_path,
+                                          backend=backend, mesh=mesh)
+                for a in arts]
+    reason = _device_decode_reason(a0)
+    be = None
+    if reason is None:
+        shape, dtype = tuple(a0.shape), np.dtype(a0.dtype)
+        be = _decode_backend(backend, shape, dtype, mesh, device_path)
+    if reason is not None or be is None:
+        if device_path is True:
+            raise ValueError(f"device_path=True but {reason}")
+        return [decompress_artifact(a) for a in arts]
+
+    V = _size_of(shape)
+    idx_b, val_b, _ = codec.decode_edits_batch(
+        [a.edit_payload for a in arts], fill_idx=V)
+    idx_b, val_b = _pad_pow2(idx_b, val_b, V)
+    idx_j = _h2d(idx_b.astype(np.int32))
+    val_j = _h2d(val_b)
+    gs = []
+    for i, (r, _, _, step) in enumerate(codec.iter_decode_blobs(
+            szlike.sz_decode_residuals, [a.base_payload for a in arts])):
+        reason = _codes_reason(arts[i], r)
+        if reason is not None:
+            if device_path is True:
+                raise ValueError(f"device_path=True but {reason}")
+            return [decompress_artifact(a) for a in arts]
+        r_j = _h2d(np.ascontiguousarray(r, np.int32))
+        f_hat = be.reconstruct(r_j, step, dtype)
+        gs.append(be.scatter_edits(f_hat, idx_j[i], val_j[i]))
+    g_host = _d2h(jnp.stack(gs))
+    return [g_host[i] for i in range(len(arts))]
 
 
 # --- paper metrics (Section 7 / Appendix B) --------------------------------
@@ -448,7 +635,15 @@ def overall_bit_rate(f: np.ndarray, art: CompressedArtifact) -> float:
 
 
 def psnr(f: np.ndarray, g: np.ndarray) -> float:
-    mse = float(np.mean((f.astype(np.float64) - g.astype(np.float64)) ** 2))
+    """PSNR normalized by the VALUE RANGE max(f) - min(f), as in the paper
+    and the SZ/ZFP literature — not max|f|, which wildly inflates the
+    score for fields with a large offset (a field in [1000, 1001] would
+    report ~60 dB extra) and is not shift-invariant."""
+    f64 = np.asarray(f, np.float64)
+    mse = float(np.mean((f64 - np.asarray(g, np.float64)) ** 2))
     if mse == 0:
         return float("inf")
-    return 20.0 * np.log10(float(np.max(np.abs(f))) / np.sqrt(mse))
+    rng = float(np.max(f64) - np.min(f64))
+    if rng == 0:
+        return float("-inf")     # constant field reconstructed with error
+    return 20.0 * np.log10(rng / np.sqrt(mse))

@@ -76,8 +76,9 @@ def effective_step(f: np.ndarray, xi: float,
 
     f32 fields reserve headroom for the dtype-arithmetic reconstruction
     (quantize + reconstruct in f32 costs up to ~3 ulp relative to exact
-    arithmetic; see zfplike.zfp_compress for the same trick), and the
-    step itself is an f32-exact value so host and device multiply by the
+    arithmetic, hence 2^-22; zfplike reserves its own — smaller,
+    half-ulp — headroom for its single final f32 cast), and the step
+    itself is an f32-exact value so host and device multiply by the
     identical scalar. ``amax``: pass a precomputed max|f| to skip the
     field scan.
     """
@@ -155,13 +156,29 @@ def sz_transform(f, step) -> jnp.ndarray:
     return _sz_transform_jit(f, step)
 
 
+def int32_cumsum(x: jnp.ndarray, axis: int) -> jnp.ndarray:
+    """Exact int32 cumsum along ``axis``. The leading axis of a >= 2D
+    array runs as an O(n) ``lax.scan`` with a slab carry — XLA's
+    log-depth cumsum rewrite strides badly there (~2x slower at 256^3 on
+    CPU) — the rest as XLA's native cumsum. Integer adds are exact, so
+    both formulations are bitwise identical."""
+    x = x.astype(jnp.int32)      # both branches accumulate in int32
+    if axis == 0 and x.ndim > 1:
+        def step(c, row):
+            s = c + row
+            return s, s
+        _, out = jax.lax.scan(step, jnp.zeros_like(x[0]), x)
+        return out
+    return jnp.cumsum(x, axis=axis, dtype=jnp.int32)
+
+
 @jax.jit
 def sz_inverse(r: jnp.ndarray, step) -> jnp.ndarray:
     """int32 residual codes -> reconstructed field, in step's dtype
     (weakly-typed python floats reconstruct f32)."""
     q = r
     for ax in range(r.ndim):
-        q = jnp.cumsum(q, axis=ax, dtype=jnp.int32)
+        q = int32_cumsum(q, ax)
     step = jnp.asarray(step)
     return q.astype(step.dtype) * step
 
@@ -171,6 +188,8 @@ def sz_inverse(r: jnp.ndarray, step) -> jnp.ndarray:
 # ---------------------------------------------------------------------------
 
 def _lorenzo_residual_np(q: np.ndarray) -> np.ndarray:
+    if q.size == 0:
+        return q
     r = q
     for ax in range(q.ndim):
         pad = np.zeros_like(np.take(r, [0], axis=ax))
@@ -243,7 +262,15 @@ def sz_compress(f: np.ndarray, xi: float) -> bytes:
     return sz_encode_residuals(r, f.shape, f.dtype, step)
 
 
-def sz_decompress(blob: bytes) -> np.ndarray:
+def sz_decode_residuals(blob: bytes
+                        ) -> Tuple[np.ndarray, Tuple[int, ...], np.dtype,
+                                   float]:
+    """Entropy-decode an SZ-like blob into ``(r, shape, dtype, step)``
+    WITHOUT reconstructing: ``r`` is the int64 Lorenzo residual-code
+    array. This is the host half of the device decompression path
+    (DESIGN.md §5) — the byte-stream-sequential DEFLATE decode runs once
+    on the host, and everything downstream (cumsum reconstruction,
+    dequantization, edit scatter) can stay on device."""
     magic, ndim, dt, step, size = struct.unpack_from("<4sBBdQ", blob, 0)
     if magic != _MAGIC:
         raise ValueError("not an SZ-like blob")
@@ -251,10 +278,45 @@ def sz_decompress(blob: bytes) -> np.ndarray:
     shape = struct.unpack_from(f"<{ndim}Q", blob, off)
     off += 8 * ndim
     r = _unpack_residuals(blob[off:], size).reshape(shape)
+    return r, tuple(int(s) for s in shape), \
+        np.dtype(np.float32 if dt == 0 else np.float64), float(step)
+
+
+def codes_fit_int32(r: np.ndarray) -> bool:
+    """Sound decode-side precondition of the int32 device reconstruction:
+    every intermediate of the d nested cumsums (each axis pass's full
+    array — whose elements ARE that axis's running prefixes) must fit
+    int32. Compress-time artifacts from the device path satisfy this by
+    construction (``check_int32_range``); host-path artifacts can carry
+    arbitrarily large codes, so the device decode validates the decoded
+    stream itself. Two tiers: every intermediate is a box-prefix sum of
+    r entries, so ``sum|r| < 2^31`` proves all of them fit in one cheap
+    vectorized pass (typical Lorenzo residuals are tiny, so this is the
+    common exit); only an inconclusive sum pays the exact int64 cumsum
+    sweep per axis — still far cheaper than the DEFLATE decode that
+    precedes it."""
+    q = np.asarray(r, np.int64)
+    if q.size == 0:
+        return True
+    lim = np.int64(2 ** 31 - 1)
+    # f64 total is within ~n*eps relative error; the margin keeps the
+    # shortcut strictly sufficient
+    total = float(np.sum(np.abs(q), dtype=np.float64))
+    if total * (1 + 1e-6) < float(lim):
+        return True
+    for ax in range(q.ndim):
+        q = np.cumsum(q, axis=ax, dtype=np.int64)
+        if np.max(np.abs(q)) > lim:
+            return False
+    return True
+
+
+def sz_decompress(blob: bytes) -> np.ndarray:
+    r, shape, dtype, step = sz_decode_residuals(blob)
     q = r
     for ax in range(len(shape)):
         q = np.cumsum(q, axis=ax, dtype=np.int64)
-    if dt == 0:
+    if dtype == np.float32:
         # canonical f32 reconstruction (matches sz_inverse bit for bit)
         return q.astype(np.float32) * np.float32(step)
     return q.astype(np.float64) * step

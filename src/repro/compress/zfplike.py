@@ -129,10 +129,19 @@ def zfp_compress(f: np.ndarray, xi: float) -> bytes:
     f = np.asarray(f)
     if f.ndim not in (2, 3):
         raise ValueError("zfp-like supports 2D/3D fields")
-    # reserve headroom for the final f32 cast (<= amax * 2^-24): the f64
-    # guarantee must hold inclusive of output rounding
+    # reserve headroom for the final f32 cast: the cast costs at most half
+    # an ulp of the cast value, |f_hat| <= amax + xi, so the cast error is
+    # <= (amax + xi) * 2^-24 — the f64 guarantee then holds inclusive of
+    # output rounding. (Below xi ~ amax * 2^-23 the bound is unreachable
+    # in f32 regardless of headroom: BFP quantization + the cast alone
+    # exceed it; the xi*0.5 floor keeps the transform well-posed there.)
     if f.dtype == np.float32 and f.size:
-        xi = max(xi - float(np.max(np.abs(f))) * 2.0 ** -22, xi * 0.5)
+        amax = float(np.max(np.abs(f)))
+        xi = max(xi - (amax + xi) * 2.0 ** -24, xi * 0.5)
+    if f.size == 0:                  # empty field: header only, no blocks
+        hdr = struct.pack("<4sBdQ", _MAGIC, f.ndim, float(xi), 0)
+        dims = struct.pack(f"<{f.ndim}Q", *f.shape)
+        return hdr + dims + struct.pack("<QQ", 0, 0)
     blocks, padded = _blockify(f.astype(np.float64))
     nb = blocks.shape[0]
     flat = blocks.reshape(nb, -1)
@@ -182,6 +191,8 @@ def zfp_decompress(blob: bytes) -> np.ndarray:
     off += 8 * ndim
     lm, ls = struct.unpack_from("<QQ", blob, off)
     off += 16
+    if nb == 0:                     # empty field: no blocks were coded
+        return np.zeros(shape, np.float32)
     meta = zlib.decompress(blob[off:off + lm]); off += lm
     stream = zlib.decompress(blob[off:off + ls])
     e = np.frombuffer(meta[:2 * nb], np.int16).astype(np.float64)

@@ -20,7 +20,15 @@ iteration, and — since the device-resident compression path
     same codes (int32 range precondition: szlike.check_int32_range)
 
 so ``f_hat`` flows from residual codes straight into the fix loop
-without leaving the device. Registered implementations:
+without leaving the device, and — since the device-resident
+DECOMPRESSION path (DESIGN.md §5) — the read-side mirror,
+
+  * ``scatter_edits(f_hat, idx, val)`` — jitted scatter-add of the edit
+    deltas, g = f_hat + delta, bitwise equal to the host path's
+    ``driver.apply_edits`` (unique indices; OOB indices drop, so batched
+    callers can pad edit streams)
+
+Registered implementations:
 
   * ``reference`` — pure-jnp dense stencils (XLA-fused; the former
     ``fixes.fused_pass`` body lives here)
@@ -191,6 +199,13 @@ class ReferenceBackend:
         from ..compress.szlike import sz_inverse
         return sz_inverse(r, jnp.asarray(step, dtype))
 
+    # -- device-resident decompression path (DESIGN.md §5) ------------
+    def scatter_edits(self, f_hat: jnp.ndarray, idx, val) -> jnp.ndarray:
+        """g = f_hat + delta via one jitted scatter-add (XLA-native; a
+        Pallas kernel buys nothing for an irregular sparse scatter)."""
+        from .driver import apply_edits_device
+        return apply_edits_device(f_hat, idx, val)
+
 
 @dataclasses.dataclass(frozen=True)
 class PallasBackend:
@@ -264,10 +279,17 @@ class PallasBackend:
                                     interpret=self._interpret())
 
     def reconstruct(self, r: jnp.ndarray, step, dtype) -> jnp.ndarray:
-        """Inverse stays an XLA associative scan (kernels.lorenzo
-        docstring) — identical arithmetic to the reference backend."""
+        """Inverse stays XLA-level (kernels.lorenzo docstring) —
+        identical arithmetic to the reference backend."""
         from ..compress.szlike import sz_inverse
         return sz_inverse(r, jnp.asarray(step, dtype))
+
+    # -- device-resident decompression path (DESIGN.md §5) ------------
+    def scatter_edits(self, f_hat: jnp.ndarray, idx, val) -> jnp.ndarray:
+        """Same XLA-native scatter-add as the reference backend (sparse
+        irregular scatter has no slab structure to exploit)."""
+        from .driver import apply_edits_device
+        return apply_edits_device(f_hat, idx, val)
 
     def _tiled_step(self, g: jnp.ndarray, topo, tile: int):
         """pMSz-style block-decomposed iteration over the slab axis.

@@ -168,11 +168,46 @@ def extract_edits(f_hat: jnp.ndarray, g: jnp.ndarray
 
 
 def apply_edits(f_hat, edits_idx, edits_val) -> np.ndarray:
-    """Decompression-side reconstruction: g = f_hat + delta (Fig. 3 bottom)."""
+    """Decompression-side reconstruction: g = f_hat + delta (Fig. 3 bottom).
+
+    Duplicate indices ACCUMULATE (``np.add.at`` semantics — buffered fancy
+    ``+=`` would keep only the last value and silently drop edits). The
+    codec forbids duplicates (codec.encode_edits raises), so decoded
+    streams take the fast vectorized path; unsorted/duplicated inputs from
+    other callers still apply every edit."""
     g = np.array(f_hat, copy=True)
     flat = g.reshape(-1)
-    flat[edits_idx] += edits_val
+    idx = np.asarray(edits_idx).reshape(-1)
+    val = np.asarray(edits_val).reshape(-1)
+    if idx.size == 0:
+        return g
+    if idx.size == 1 or np.all(np.diff(idx) > 0):
+        flat[idx] += val            # strictly increasing => no duplicates
+    else:
+        np.add.at(flat, idx, val)   # unbuffered: duplicates accumulate
     return g
+
+
+@jax.jit
+def _scatter_edits_jit(f_hat: jnp.ndarray, idx: jnp.ndarray,
+                       val: jnp.ndarray) -> jnp.ndarray:
+    flat = f_hat.reshape(-1)
+    flat = flat.at[idx].add(val.astype(f_hat.dtype), mode="drop")
+    return flat.reshape(f_hat.shape)
+
+
+def apply_edits_device(f_hat: jnp.ndarray, edits_idx, edits_val
+                       ) -> jnp.ndarray:
+    """On-device twin of ``apply_edits``: one jitted scatter-add, so g
+    never leaves the device (the decompression path's mirror of
+    ``extract_edits``; DESIGN.md §5). Indices must be unique — the codec
+    invariant — making the scatter order-free and the result bitwise
+    equal to the host path's ``f_hat[idx] += val``. Out-of-range indices
+    (the batched path's padding rows point one past the end) are dropped,
+    never wrapped, so callers can pad edit streams to a common length."""
+    return _scatter_edits_jit(jnp.asarray(f_hat),
+                              jnp.asarray(edits_idx, jnp.int32),
+                              jnp.asarray(edits_val))
 
 
 def verify_preservation(f, g, xi: float) -> dict:

@@ -267,6 +267,44 @@ def sharded_transform(f: jnp.ndarray, step, mesh: Mesh, *,
     return r[:N]
 
 
+def sharded_scatter_edits(f_hat: jnp.ndarray, idx, val, mesh: Mesh, *,
+                          axis_name: str = DATA_AXIS) -> jnp.ndarray:
+    """Edit scatter over the mesh (the device decompression path's
+    g = f_hat + delta, DESIGN.md §5): ``f_hat`` stays slab-sharded, the
+    (small) edit stream is replicated to every device, and each device
+    applies exactly the edits whose flat indices land in its own slab
+    block — no collectives. Indices outside the local block (including
+    the batched path's one-past-the-end padding) are remapped out of
+    range and dropped by the scatter, never wrapped. Unique global
+    indices mean every target is updated once with the same arithmetic
+    as the single-device scatter — bitwise equal."""
+    n_dev = data_axis_size(mesh, axis_name)
+    N = f_hat.shape[0]
+    L = _block_size(N, n_dev)
+    f_p = _pad_slabs(f_hat, L * n_dev)
+    stride = 1
+    for s in f_hat.shape[1:]:
+        stride *= int(s)
+    loc_size = L * stride
+
+    def spmd(fh_loc, idx_g, val_g):
+        base = jax.lax.axis_index(axis_name).astype(jnp.int32) \
+            * jnp.int32(loc_size)
+        local = idx_g.astype(jnp.int32) - base
+        oob = (local < 0) | (local >= loc_size)
+        local = jnp.where(oob, jnp.int32(loc_size), local)
+        flat = fh_loc.reshape(-1)
+        flat = flat.at[local].add(val_g.astype(flat.dtype), mode="drop")
+        return flat.reshape(fh_loc.shape)
+
+    spec = PartitionSpec(axis_name)
+    out = shard_map(spmd, mesh=mesh,
+                    in_specs=(spec, PartitionSpec(), PartitionSpec()),
+                    out_specs=spec, check_rep=False)(
+        f_p, jnp.asarray(idx, jnp.int32), jnp.asarray(val))
+    return out[:N]
+
+
 def sharded_reconstruct(r: jnp.ndarray, step, dtype, mesh: Mesh, *,
                         axis_name: str = DATA_AXIS) -> jnp.ndarray:
     """Inverse transform over the mesh: the in-block cumsums are local;
@@ -281,14 +319,15 @@ def sharded_reconstruct(r: jnp.ndarray, step, dtype, mesh: Mesh, *,
     step_arr = jnp.asarray(step, dtype)
 
     def spmd(r_loc):
-        q = jnp.cumsum(r_loc, axis=0, dtype=jnp.int32)
+        from ..compress.szlike import int32_cumsum
+        q = int32_cumsum(r_loc, 0)
         totals = jax.lax.all_gather(q[-1], axis_name)      # (n_dev, ...)
         idx = jax.lax.axis_index(axis_name)
         before = (jnp.arange(n_dev) < idx).astype(jnp.int32)
         before = before.reshape((-1,) + (1,) * (q.ndim - 1))
         q = q + jnp.sum(totals * before, axis=0, dtype=jnp.int32)
         for ax in range(1, q.ndim):
-            q = jnp.cumsum(q, axis=ax, dtype=jnp.int32)
+            q = int32_cumsum(q, ax)
         return q.astype(dtype) * step_arr
 
     spec = PartitionSpec(axis_name)
@@ -384,6 +423,12 @@ class ShardedBackend:
         be = self.bind()
         return sharded_reconstruct(r, step, dtype, be.mesh,
                                    axis_name=be.axis_name)
+
+    # -- device-resident decompression path (DESIGN.md §5) --------------
+    def scatter_edits(self, f_hat: jnp.ndarray, idx, val) -> jnp.ndarray:
+        be = self.bind()
+        return sharded_scatter_edits(f_hat, idx, val, be.mesh,
+                                     axis_name=be.axis_name)
 
 
 register_backend(ShardedBackend())

@@ -20,8 +20,10 @@ extrema kernel's) so the sharded backend can transform its own Z-slab in
 global coordinates — the q(z-1) term is zeroed at the TRUE domain
 boundary z == 0 only, not at slab edges.
 
-The inverse (d nested cumsums) stays an XLA associative scan — scans are
-already optimal there and a hand-rolled kernel would only re-derive them."""
+The inverse (d nested cumsums) stays XLA-level (szlike.sz_inverse): a
+slab-carry ``lax.scan`` along the leading axis — O(n) and cache-friendly
+where XLA's log-depth cumsum rewrite strides badly — and native cumsums
+elsewhere; a hand-rolled Pallas kernel would only re-derive them."""
 from __future__ import annotations
 
 import functools
