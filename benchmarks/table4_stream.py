@@ -1,0 +1,145 @@
+"""Table 4 (beyond-paper): streaming-service throughput — the sequential
+per-field loop vs the double-buffered stream scheduler
+(repro.compress.stream, DESIGN.md §6), fields/sec vs in-flight window vs
+batch size vs device count.
+
+This is the table behind the ROADMAP's serving north star: pMSz frames
+fields as a *stream* of timesteps/ensemble members, and the question
+that decides deployability is whether overlapping host entropy coding,
+transfers, and the batched device fix loop beats calling the one-shot
+pipeline per field. Artifacts are checked byte-identical to the one-shot
+path while the clock runs, so every row measures the same computation.
+
+Quick mode uses tiny fields (the CI smoke leg); ``--full`` runs the
+acceptance configuration — >= 4 in-flight 128^3 f32 fields on one device
+and, when emulated devices are available (``XLA_FLAGS=
+--xla_force_host_platform_device_count=8`` before jax initializes), on
+the 8-device ('data',) mesh.
+
+  PYTHONPATH=src python -m benchmarks.table4_stream --smoke
+  PYTHONPATH=src python -m benchmarks.run --only table4
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.compress import (CompressStream, DecompressStream,
+                            compress_preserving_mss,
+                            decompress_preserving_mss)
+from repro.data import synthetic_field
+from repro.launch.mesh import make_data_mesh
+
+from .common import emit
+
+
+def _traffic(n: int, shape: Tuple[int, ...], xi_rel: float = 1e-3
+             ) -> Tuple[List[np.ndarray], List[float]]:
+    """n same-shape f32 fields (a synthetic timestep stream) + bounds."""
+    fields = [synthetic_field("nyx", shape=shape, seed=s).astype(np.float32)
+              for s in range(n)]
+    return fields, [xi_rel * float(np.ptp(f)) for f in fields]
+
+
+def _check_identical(arts, ref_arts) -> None:
+    for a, r in zip(arts, ref_arts):
+        assert a.base_payload == r.base_payload \
+            and a.edit_payload == r.edit_payload, \
+            "stream artifact differs from the one-shot path"
+
+
+def _bench_device_count(fields, xis, n_dev: Optional[int], window: int,
+                        max_batch: int, iters: int):
+    """One (device count, window, batch) cell: sequential baseline,
+    stream compress, stream decompress — byte-identity enforced."""
+    mesh = make_data_mesh(n_dev) if n_dev and n_dev > 1 else None
+    tag = f"ndev={n_dev or 1}"
+    n = len(fields)
+
+    # sequential per-field baseline (the pre-§6 serving loop)
+    ref_arts = [compress_preserving_mss(f, xi, mesh=mesh)
+                for f, xi in zip(fields, xis)]          # warmup + reference
+    t_seq = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        ref_arts = [compress_preserving_mss(f, xi, mesh=mesh)
+                    for f, xi in zip(fields, xis)]
+        t_seq.append(time.perf_counter() - t0)
+    fps_seq = n / sorted(t_seq)[len(t_seq) // 2]
+    emit(f"table4/compress/sequential/{tag}",
+         sorted(t_seq)[len(t_seq) // 2] / n * 1e6, f"fields_s={fps_seq:.3f}")
+
+    def stream_pass():
+        with CompressStream(window=window, max_batch=max_batch,
+                            mesh=mesh) as cs:
+            arts = cs.map(fields, xis)
+            occ = cs.stats()["batch_occupancy"]
+        return arts, occ
+
+    arts, _ = stream_pass()                             # warmup (batch jit)
+    _check_identical(arts, ref_arts)
+    t_str = []
+    occ = 0.0
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        arts, occ = stream_pass()
+        t_str.append(time.perf_counter() - t0)
+    fps_str = n / sorted(t_str)[len(t_str) // 2]
+    emit(f"table4/compress/stream/w{window}_b{max_batch}/{tag}",
+         sorted(t_str)[len(t_str) // 2] / n * 1e6,
+         f"fields_s={fps_str:.3f} speedup={fps_str / fps_seq:.2f} "
+         f"occupancy={occ:.2f}")
+
+    # read side: sequential one-shot decode vs the decompress stream
+    gs_ref = [decompress_preserving_mss(a, mesh=mesh) for a in ref_arts]
+    t0 = time.perf_counter()
+    gs_ref = [decompress_preserving_mss(a, mesh=mesh) for a in ref_arts]
+    fps_dseq = n / (time.perf_counter() - t0)
+    with DecompressStream(window=window, max_batch=max_batch,
+                          mesh=mesh) as ds:
+        ds.map(ref_arts)                                # warmup
+    t0 = time.perf_counter()
+    with DecompressStream(window=window, max_batch=max_batch,
+                          mesh=mesh) as ds:
+        gs = ds.map(ref_arts)
+    fps_dstr = n / (time.perf_counter() - t0)
+    for g, gr in zip(gs, gs_ref):
+        assert np.array_equal(g, gr), "stream decode differs from one-shot"
+    emit(f"table4/decompress/stream/w{window}_b{max_batch}/{tag}",
+         1e6 / fps_dstr, f"fields_s={fps_dstr:.3f} "
+         f"speedup={fps_dstr / fps_dseq:.2f}")
+    return fps_seq, fps_str
+
+
+def run(quick: bool = True):
+    import jax
+
+    shape = (16, 16, 16) if quick else (128, 128, 128)
+    n_fields = 8
+    iters = 1 if quick else 2
+    # (window, max_batch): the window axis is what buys cross-batch
+    # pipelining — entropy coding of batch k overlaps batch k+1's device
+    # stage only when the window holds more than one batch
+    cells = ((4, 4), (8, 4)) if quick else ((4, 1), (4, 4), (8, 4), (8, 8))
+    fields, xis = _traffic(n_fields, shape)
+
+    n_avail = len(jax.devices())
+    device_counts = [None] + [n for n in (8,) if n <= n_avail]
+    for n_dev in device_counts:
+        for window, max_batch in cells:
+            _bench_device_count(fields, xis, n_dev, window, max_batch, iters)
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny fields, one repetition (the CI leg)")
+    ap.add_argument("--full", action="store_true",
+                    help="acceptance configuration: 128^3 f32 fields")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(quick=not args.full)

@@ -1,0 +1,51 @@
+"""README/markdown link check — the docs CI gate's second half.
+
+Scans the repo's top-level markdown files for relative links and fails
+(exit 1) when a target path does not exist. External (scheme-qualified)
+links and pure anchors are skipped — this guards the cross-file pointers
+(README -> DESIGN.md, CHANGES.md -> ...) that silently rot when files
+move.
+
+  python docs/check_links.py
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+from typing import List
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+DOCS = ("README.md", "DESIGN.md", "ROADMAP.md", "PAPER.md", "ISSUE.md")
+_LINK = re.compile(r"\[[^\]]+\]\(([^)\s]+)\)")
+
+
+def broken_links() -> List[str]:
+    """Every dangling relative link as a ``file: target`` string."""
+    problems = []
+    for doc in DOCS:
+        path = REPO_ROOT / doc
+        if not path.exists():
+            continue
+        for target in _LINK.findall(path.read_text()):
+            if "://" in target or target.startswith(("#", "mailto:")):
+                continue
+            rel = target.split("#", 1)[0]
+            if rel and not (path.parent / rel).exists():
+                problems.append(f"{doc}: {target}")
+    return problems
+
+
+def main() -> int:
+    """CLI entry: print dangling links and exit 1 when any exist."""
+    problems = broken_links()
+    for p in problems:
+        print(f"BROKEN LINK: {p}")
+    if problems:
+        return 1
+    print("markdown link check clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

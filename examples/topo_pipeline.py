@@ -1,16 +1,28 @@
-"""End-to-end driver #1 (the paper's kind): a compression service run —
-sweep datasets x base compressors x error bounds, verify exact MSS
+"""End-to-end driver #1 (the paper's kind): a compression sweep —
+datasets x base compressors x error bounds, verify exact MSS
 preservation on every cell, and print the paper's metrics (OCR, OBR, edit
 ratio, PSNR, right-labeled ratio before correction).
 
-  PYTHONPATH=src python examples/topo_pipeline.py [--full]
+  PYTHONPATH=src python examples/topo_pipeline.py [--full] [--stream]
 
-With ``--devices N`` the fix loops run slab-sharded over an N-device
-('data',) mesh (repro.distributed.shardfix); on CPU-only hosts N devices
-are emulated via --xla_force_host_platform_device_count, which this
-script sets as long as jax has not initialized its backends yet.
-Artifacts are bitwise identical to single-device runs — only the
-``backend`` column changes.
+Both directions default to the DEVICE-RESIDENT paths (DESIGN.md §4/§5);
+every flag combination below produces bitwise-identical artifacts and
+outputs — the flags change execution strategy only.
+
+  --full           paper-scale dataset sizes and the full bound sweep
+  --backend B      stencil backend for the fix loops
+                   (auto | reference | pallas | pallas_tiled | sharded)
+  --devices N      slab-shard fix loops/transforms over an N-device
+                   ('data',) mesh (emulated on CPU hosts; sets
+                   --xla_force_host_platform_device_count before jax
+                   initializes)
+  --host-path      force the host byte-codec COMPRESS path (default:
+                   device-resident whenever preconditions hold)
+  --decode-path P  decompression path: auto | host | device
+  --stream         route each dataset's szlike cells through the
+                   streaming scheduler (repro.compress.stream,
+                   DESIGN.md §6) instead of one-shot calls, and print
+                   its stats line; artifacts stay byte-identical
 """
 import argparse
 import os
@@ -37,6 +49,10 @@ def _parse_args():
                          "device-resident decode (szlike artifacts only; "
                          "zfplike rows fall back to auto), 'host' the "
                          "byte-codec loop; outputs are bitwise identical")
+    ap.add_argument("--stream", action="store_true",
+                    help="serve each dataset's szlike cells through the "
+                         "streaming scheduler (DESIGN.md §6) instead of "
+                         "one-shot calls; artifacts stay byte-identical")
     return ap.parse_args()
 
 
@@ -77,6 +93,12 @@ def main():
     bounds = (1e-4, 1e-3) if not args.full else (1e-5, 1e-4, 1e-3, 1e-2)
 
     device_path = False if args.host_path else "auto"
+    stream = None
+    if args.stream:
+        from repro.compress import CompressStream
+        stream = CompressStream(window=2 * len(bounds), max_batch=len(bounds),
+                                backend=args.backend, mesh=mesh,
+                                device_path=device_path)
     print(f"{'dataset':12s} {'base':8s} {'rel_xi':8s} {'raw_right%':>10s} "
           f"{'OCR':>6s} {'OBR':>6s} {'edit%':>7s} {'PSNR':>6s} {'t_fix':>6s} "
           f"{'path':6s} ok")
@@ -84,15 +106,21 @@ def main():
         f = synthetic_field(name, shape=shape)
         rng = float(np.ptp(f))
         for base, rt in (("szlike", sz_roundtrip), ("zfplike", zfp_roundtrip)):
+            futs = None
+            if stream is not None and base == "szlike":
+                # every bound's request in flight at once: same-spec cells
+                # coalesce into batched device dispatches
+                futs = {rel: stream.submit(f, rel * rng) for rel in bounds}
             for rel in bounds:
                 xi = rel * rng
                 fh, _ = rt(f, xi)
                 raw_acc = float(segmentation_accuracy(jnp.asarray(f),
                                                       jnp.asarray(fh)))
-                art = compress_preserving_mss(f, xi, base=base,
-                                              backend=args.backend,
-                                              mesh=mesh,
-                                              device_path=device_path)
+                art = futs[rel].result() if futs is not None else \
+                    compress_preserving_mss(f, xi, base=base,
+                                            backend=args.backend,
+                                            mesh=mesh,
+                                            device_path=device_path)
                 if args.decode_path == "host":
                     g = decompress_artifact(art)
                 else:
@@ -112,6 +140,12 @@ def main():
                       f"{100*art.edit_ratio:7.3f} {psnr(f, g):6.1f} "
                       f"{art.t_fix:6.2f} {art.path:6s} {ok}")
                 assert ok, (name, base, rel)
+    if stream is not None:
+        st = stream.stats()
+        stream.close()
+        print(f"# stream: {st['completed']} cells in {st['batches']} batches, "
+              f"occupancy={st['batch_occupancy']:.2f}, "
+              f"{st['fields_per_sec']:.2f} fields/s")
     print("all cells preserved MSS exactly within bounds")
 
 

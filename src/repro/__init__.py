@@ -1,0 +1,29 @@
+"""MSz on JAX/Pallas: topology-preserving error-bounded lossy compression.
+
+A reproduction — grown toward a production-scale serving system — of
+*MSz: An Efficient Parallel Algorithm for Correcting Morse-Smale
+Segmentations in Error-Bounded Lossy Compressors*. The package couples
+error-bounded lossy base compressors with a parallel fix loop that edits
+the decompressed field until its Morse-Smale segmentation is EXACTLY the
+original's, while keeping every value within the error bound.
+
+Layer map (see README.md and DESIGN.md):
+
+* ``repro.core``        — MSz itself: grid stencils, MSS labels, the fix
+  loops, the stencil-backend protocol, and the high-level
+  ``derive_edits`` / ``verify_preservation`` API.
+* ``repro.kernels``     — Pallas slab kernels for the stencil stages and
+  the Lorenzo transform.
+* ``repro.compress``    — SZ/ZFP-like base codecs, the edit codec, the
+  end-to-end pipeline (``compress_preserving_mss``), and the streaming
+  scheduler (``repro.compress.stream``).
+* ``repro.distributed`` — the slab-sharded SPMD fix loop over a device
+  mesh (``shardfix``) plus gradient-compression utilities.
+* ``repro.serve``       — the request-batched compression service
+  (``repro.serve.compression``) and LM serving steps.
+* ``repro.launch``      — mesh construction and the service/train/LM
+  launchers; ``repro.data`` — synthetic fields standing in for the
+  paper's datasets; ``repro.models`` / ``repro.train`` / ``repro.configs``
+  / ``repro.checkpoint`` — the LM stack the serving scaffolding grew
+  around.
+"""

@@ -170,6 +170,8 @@ class CheckpointManager:
     compress: str = "zlib"
 
     def maybe_save(self, step: int, tree: Any) -> Optional[Path]:
+        """Save ``tree`` when ``step`` hits the save cadence; returns
+        the checkpoint path (None when this step is skipped)."""
         if step % self.save_every:
             return None
         p = save_checkpoint(self.directory, step, tree, self.compress)
@@ -185,4 +187,6 @@ class CheckpointManager:
             shutil.rmtree(tmp, ignore_errors=True)
 
     def restore_latest(self, like: Any, shardings: Any = None):
+        """Restore the newest checkpoint in the directory into the
+        structure of ``like`` (optionally placed onto ``shardings``)."""
         return restore_checkpoint(self.directory, like, shardings=shardings)

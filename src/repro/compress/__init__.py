@@ -10,8 +10,12 @@ from .pipeline import (CompressedArtifact, compress_preserving_mss,
                        compress_preserving_mss_batch, decompress_artifact,
                        decompress_artifact_batch, decompress_preserving_mss,
                        overall_compression_ratio, overall_bit_rate, psnr)
+from .stream import (CompressStream, DecompressStream, SpecCache,
+                     StreamBackpressure, StreamClosed)
 
 __all__ = [
+    "CompressStream", "DecompressStream", "SpecCache",
+    "StreamBackpressure", "StreamClosed",
     "sz_compress", "sz_decompress", "sz_roundtrip",
     "sz_transform", "sz_inverse", "check_int32_range", "effective_step",
     "zfp_compress", "zfp_decompress", "zfp_roundtrip",

@@ -112,6 +112,8 @@ def encode_edits(idx: np.ndarray, val: np.ndarray, value_dtype="f4") -> bytes:
 
 
 def decode_edits(blob: bytes) -> Tuple[np.ndarray, np.ndarray]:
+    """Inverse of ``encode_edits``: (sorted int64 indices, f32 values)
+    of one edit blob (bf16-coded values widen back to f32)."""
     magic, dt, n, lk, lv = struct.unpack_from("<4sBQQQ", blob, 0)
     if magic != _MAGIC:
         raise ValueError("not an MSz edit blob")
@@ -208,4 +210,6 @@ def zstd_like(data: np.ndarray) -> int:
 
 
 def lossless_bytes(data: np.ndarray, codec: str = "gzip") -> int:
+    """Compressed byte size of ``data`` under the named lossless
+    baseline codec (Table 2's GZIP / ZSTD columns)."""
     return gzip_like(data) if codec == "gzip" else zstd_like(data)

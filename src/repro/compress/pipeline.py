@@ -249,21 +249,44 @@ def _device_compress(f: np.ndarray, xi: float, be, max_iters: int,
     )
 
 
-def _device_compress_batch(fields: List[np.ndarray], xi_arr: np.ndarray,
-                           be, max_iters: int, edit_value_dtype: str,
-                           steps: List[float]) -> List[CompressedArtifact]:
-    """Batch device path: ONE vmapped transform + ONE batched fix loop;
-    per-member entropy coding afterwards. Artifacts are bitwise identical
-    to solo device-path calls (the batched loop freezes early-converged
-    members, fixes.fused_fix_batch). ``steps`` come pre-validated from
-    the caller's _device_path_reason sweep."""
+@dataclasses.dataclass
+class _DeviceBatch:
+    """Completed device stage of one compress batch (DESIGN.md §4/§6).
+
+    Everything up to — and including — the single d2h of the residual
+    codes has run; what remains per member is host-only entropy coding
+    (``_encode_batch_member``). The stream scheduler hands that stage to
+    worker threads so it overlaps the NEXT batch's device dispatch;
+    ``_device_compress_batch`` runs it inline for the one-shot API."""
+    fields: List[np.ndarray]
+    xi_arr: np.ndarray
+    steps: List[float]
+    f_b: jnp.ndarray             # device-resident originals (bf16 re-verify)
+    fhat_b: jnp.ndarray          # device-resident reconstructions
+    r_host: np.ndarray           # residual codes, already pulled to host
+    edits: List[Tuple[jnp.ndarray, jnp.ndarray]]  # device (idx, val) pairs
+    iters_b: np.ndarray
+    backend_name: str
+    t_transform_each: float
+    t_fix_each: float
+    t_pull_each: float
+    nbytes_h2d: int = 0          # array bytes crossed host->device
+    nbytes_d2h: int = 0          # array bytes crossed device->host
+
+
+def _batch_transform(fields: List[np.ndarray], xi_arr: np.ndarray, be,
+                     steps: List[float], n_check: int):
+    """Shared device prologue of the two batch stages: ONE h2d of the
+    stacked fields + steps, the transform/reconstruct dispatch (vmapped;
+    member-sequential for distributed backends, where vmap over
+    shard_map is not attempted, mirroring fused_fix_batch), and the
+    pre-edit bound check of the first ``n_check`` members. Returns
+    (f_stack, f_b, step_b, r_b, fhat_b, base_errs)."""
     B = len(fields)
-    t0 = time.perf_counter()
-    f_b = _h2d(np.stack(fields))
+    f_stack = np.stack(fields)
+    f_b = _h2d(f_stack)
     step_b = _h2d(np.asarray(steps, fields[0].dtype))
     if hasattr(be, "fix_loop"):
-        # distributed backends run members sequentially (vmap over
-        # shard_map is not attempted, mirroring fused_fix_batch)
         r_b = jnp.stack([be.transform(f_b[i], step_b[i]) for i in range(B)])
         fhat_b = jnp.stack([be.reconstruct(r_b[i], step_b[i], f_b.dtype)
                             for i in range(B)])
@@ -273,12 +296,27 @@ def _device_compress_batch(fields: List[np.ndarray], xi_arr: np.ndarray,
             r_b, step_b)
     sp = tuple(range(1, f_b.ndim))
     base_errs = _d2h(jnp.max(jnp.abs(f_b - fhat_b), axis=sp))
-    t1 = time.perf_counter()
-    for i, (err, xi_i) in enumerate(zip(base_errs, xi_arr)):
-        if err > xi_i * (1 + 1e-6):
+    for i in range(n_check):
+        if base_errs[i] > xi_arr[i] * (1 + 1e-6):
             raise ValueError(
                 f"batch member {i}: reconstructed data violates the error "
-                f"bound before editing: max|f-f_hat|={err:.3g} > xi={xi_i:.3g}")
+                f"bound before editing: max|f-f_hat|={base_errs[i]:.3g} > "
+                f"xi={xi_arr[i]:.3g}")
+    return f_stack, f_b, step_b, r_b, fhat_b, base_errs
+
+
+def _device_batch_stage(fields: List[np.ndarray], xi_arr: np.ndarray,
+                        be, max_iters: int,
+                        steps: List[float]) -> _DeviceBatch:
+    """The device-resident half of a compress batch: ONE h2d of the
+    stacked fields, ONE vmapped transform + ONE batched fix loop +
+    on-device edit extraction, ONE d2h of the residual codes. ``steps``
+    come pre-validated from the caller's _device_path_reason sweep."""
+    B = len(fields)
+    t0 = time.perf_counter()
+    f_stack, f_b, step_b, r_b, fhat_b, base_errs = _batch_transform(
+        fields, xi_arr, be, steps, n_check=B)
+    t1 = time.perf_counter()
 
     topos = [fixes.field_topology(f_b[i], float(xi_arr[i])) for i in range(B)]
     topo_b = jax.tree_util.tree_map(lambda *leaves: jnp.stack(leaves), *topos)
@@ -288,32 +326,110 @@ def _device_compress_batch(fields: List[np.ndarray], xi_arr: np.ndarray,
         raise RuntimeError("MSz fix loops did not converge within max_iters")
     edits = [extract_edits(fhat_b[i], g_b[i]) for i in range(B)]
     t2 = time.perf_counter()
-    t_fix_each = (t2 - t1) / B
 
     r_host = _d2h(r_b)
-    t_pull_each = (time.perf_counter() - t2) / B
-    arts = []
-    for i, fi in enumerate(fields):
-        # per-member entropy-coding time joins t_base so batch artifacts
-        # report the same cost split as solo device-path calls
-        te0 = time.perf_counter()
-        payload = szlike.sz_encode_residuals(r_host[i], fi.shape, fi.dtype,
-                                             steps[i])
-        idx = _d2h(edits[i][0]).astype(np.int64)
-        val = _d2h(edits[i][1])
-        blob = _encode_edits_checked_dev(f_b[i], fhat_b[i], idx, val,
-                                         float(xi_arr[i]), edit_value_dtype)
-        t_entropy = time.perf_counter() - te0
-        arts.append(CompressedArtifact(
-            base="szlike", base_payload=payload, edit_payload=blob,
-            shape=fi.shape, dtype=str(fi.dtype), xi=float(xi_arr[i]),
-            t_base=(t1 - t0) / B + t_pull_each + t_entropy,
-            t_fix=t_fix_each,
-            edit_ratio=float(idx.size) / float(fi.size),
-            fix_iters=int(iters_b[i]), backend=be.name,
-            path="device", t_transform=(t1 - t0) / B,
-        ))
-    return arts
+    t_pull = time.perf_counter() - t2
+    return _DeviceBatch(
+        fields=fields, xi_arr=xi_arr, steps=steps,
+        f_b=f_b, fhat_b=fhat_b, r_host=r_host, edits=edits,
+        iters_b=np.asarray(iters_b), backend_name=be.name,
+        t_transform_each=(t1 - t0) / B, t_fix_each=(t2 - t1) / B,
+        t_pull_each=t_pull / B,
+        nbytes_h2d=f_stack.nbytes + step_b.nbytes,
+        nbytes_d2h=r_host.nbytes + base_errs.nbytes,
+    )
+
+
+def _encode_batch_member(db: _DeviceBatch, i: int,
+                         edit_value_dtype: str) -> CompressedArtifact:
+    """Host-only entropy coding of batch member ``i`` (thread-safe: zlib
+    and the edit-sized d2h pulls release the GIL, so the stream runs many
+    members through worker threads while the scheduler dispatches the
+    next batch's device stage)."""
+    fi = db.fields[i]
+    # per-member entropy-coding time joins t_base so batch artifacts
+    # report the same cost split as solo device-path calls
+    te0 = time.perf_counter()
+    payload = szlike.sz_encode_residuals(db.r_host[i], fi.shape, fi.dtype,
+                                         db.steps[i])
+    idx = _d2h(db.edits[i][0]).astype(np.int64)
+    val = _d2h(db.edits[i][1])
+    blob = _encode_edits_checked_dev(db.f_b[i], db.fhat_b[i], idx, val,
+                                     float(db.xi_arr[i]), edit_value_dtype)
+    t_entropy = time.perf_counter() - te0
+    return CompressedArtifact(
+        base="szlike", base_payload=payload, edit_payload=blob,
+        shape=fi.shape, dtype=str(fi.dtype), xi=float(db.xi_arr[i]),
+        t_base=db.t_transform_each + db.t_pull_each + t_entropy,
+        t_fix=db.t_fix_each,
+        edit_ratio=float(idx.size) / float(fi.size),
+        fix_iters=int(db.iters_b[i]), backend=db.backend_name,
+        path="device", t_transform=db.t_transform_each,
+    )
+
+
+def _device_pipelined_stage(fields: List[np.ndarray], xi_arr: np.ndarray,
+                            be, max_iters: int, steps: List[float],
+                            n_real: Optional[int] = None) -> _DeviceBatch:
+    """The stream scheduler's large-member alternative to
+    ``_device_batch_stage`` (DESIGN.md §6): ONE h2d + ONE vmapped
+    transform/reconstruct dispatch for the whole batch (elementwise —
+    vmap amortizes its dispatch overhead at every size), but the fix
+    loops run per member through the SOLO ``fixes.fused_fix``
+    specialization. The batched while_loop computes every member each
+    iteration until the slowest converges (B x max(iters) work) and
+    vmapping the interpret-mode Pallas stencils multiplies per-iteration
+    cost, so above a few thousand voxels per member solo loops win;
+    per-member g is the exact one-shot computation, so artifacts stay
+    byte-identical. ``n_real``: members beyond it are batch padding —
+    transformed (they ride the vmapped dispatch) but never fixed."""
+    B = len(fields)
+    n_real = B if n_real is None else n_real
+    t0 = time.perf_counter()
+    f_stack, f_b, step_b, r_b, fhat_b, base_errs = _batch_transform(
+        fields, xi_arr, be, steps, n_check=n_real)
+    t1 = time.perf_counter()
+
+    edits: List[Tuple[jnp.ndarray, jnp.ndarray]] = []
+    iters_list: List[int] = []
+    for i in range(n_real):
+        topo = fixes.field_topology(f_b[i], float(xi_arr[i]))
+        g, iters, ok = fixes.fused_fix(fhat_b[i], topo, max_iters=max_iters,
+                                       backend=be)
+        if not bool(ok):
+            raise RuntimeError(
+                "MSz fix loops did not converge within max_iters")
+        edits.append(extract_edits(fhat_b[i], g))
+        iters_list.append(int(iters))
+    t2 = time.perf_counter()
+
+    r_host = _d2h(r_b)
+    t_pull = time.perf_counter() - t2
+    empty = (jnp.zeros(0, jnp.int32), jnp.zeros(0, f_b.dtype))
+    return _DeviceBatch(
+        fields=fields, xi_arr=xi_arr, steps=steps,
+        f_b=f_b, fhat_b=fhat_b, r_host=r_host,
+        edits=edits + [empty] * (B - n_real),
+        iters_b=np.asarray(iters_list + [0] * (B - n_real)),
+        backend_name=be.name,
+        t_transform_each=(t1 - t0) / B,
+        t_fix_each=(t2 - t1) / max(n_real, 1),
+        t_pull_each=t_pull / B,
+        nbytes_h2d=f_stack.nbytes + step_b.nbytes,
+        nbytes_d2h=r_host.nbytes + base_errs.nbytes,
+    )
+
+
+def _device_compress_batch(fields: List[np.ndarray], xi_arr: np.ndarray,
+                           be, max_iters: int, edit_value_dtype: str,
+                           steps: List[float]) -> List[CompressedArtifact]:
+    """Batch device path: ONE vmapped transform + ONE batched fix loop;
+    per-member entropy coding afterwards. Artifacts are bitwise identical
+    to solo device-path calls (the batched loop freezes early-converged
+    members, fixes.fused_fix_batch)."""
+    db = _device_batch_stage(fields, xi_arr, be, max_iters, steps)
+    return [_encode_batch_member(db, i, edit_value_dtype)
+            for i in range(len(fields))]
 
 
 # ---------------------------------------------------------------------------
@@ -551,13 +667,20 @@ def decompress_preserving_mss(art: CompressedArtifact,
     return _d2h(g)
 
 
+def _pow2_at_least(n: int) -> int:
+    """Smallest power of two >= n (0 stays 0) — the shared pad-to-pow2
+    bound capping jit specializations at ~log2 of the padded dimension
+    (edit streams here, batch axes in the stream scheduler)."""
+    return 1 << max(n - 1, 0).bit_length() if n else 0
+
+
 def _pad_pow2(idx_b: np.ndarray, val_b: np.ndarray, fill_idx: int):
     """Pad the edit axis to the next power of two (fill indices drop in
     the scatter) so the jitted scatter specializes on ~log2(V) distinct
     lengths instead of one per edit count — same trick as
     driver.extract_edits on the write side."""
     L = idx_b.shape[-1]
-    cap = 1 << max(L - 1, 0).bit_length() if L else 0
+    cap = _pow2_at_least(L)
     if cap == L:
         return idx_b, val_b
     pad = [(0, 0)] * (idx_b.ndim - 1) + [(0, cap - L)]

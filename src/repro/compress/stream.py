@@ -1,0 +1,656 @@
+"""Streaming topology-preserving compression (DESIGN.md §6).
+
+The one-shot pipeline (``compress_preserving_mss`` and friends) serves a
+single call at a time: the caller pays base transform, fix loop, and
+entropy coding sequentially per field. In the streaming settings pMSz
+targets — timestep series and ensemble members arriving continuously —
+that serialization wastes both the device (idle while zlib runs) and the
+host (idle while the fix loop runs). This module overlaps the three:
+
+* ``CompressStream`` / ``DecompressStream`` — double-buffered async
+  schedulers over a bounded window of in-flight fields. A scheduler
+  thread owns the DEVICE stage (one batched transform + fix-loop + edit
+  extraction dispatch per coalesced batch, ``pipeline._device_batch_stage``);
+  host entropy coding of batch *k* runs on worker threads while the
+  scheduler is already dispatching batch *k+1*'s device stage, and jax's
+  async dispatch overlaps the h2d/d2h transfers with both.
+* **dynamic batching** — same-spec requests (shape, dtype, base codec;
+  ``xi`` is free per request) queued at dispatch time coalesce into ONE
+  ``*_batch`` call, padded to a power-of-two member count so the vmapped
+  fix loop specializes on ~log2(window) batch sizes instead of one per
+  occupancy (the PR-4 pad-to-pow2 trick applied to the batch axis).
+  Mixed-spec traffic batches separately; ``strict_uniform=True`` rejects
+  it at submit instead.
+* **backpressure** — ``window`` bounds in-flight requests; ``submit``
+  blocks (or raises ``StreamBackpressure`` with ``block=False``) until a
+  slot frees, so memory stays O(window · field) however fast producers
+  run.
+* ``SpecCache`` — an LRU of dispatch specializations keyed by
+  ``(shape, dtype, xi, backend)``. Values hold the resolved, mesh-bound
+  stencil backend, so every batch of a cached spec reuses ONE backend
+  instance and jit's compilation cache keys stay stable (jax owns the
+  compiled code itself; this cache bounds and *observes* the dispatch
+  specs — hits/misses/evictions feed the service stats).
+
+Every artifact (and decompressed field) is byte-identical to its
+one-shot ``compress_preserving_mss`` / ``decompress_preserving_mss``
+counterpart: the stream reorders and overlaps work, never changes it.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Callable, Dict, Hashable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core import fixes
+from ..core.backend import BackendLike, resolve_backend
+from . import pipeline
+
+
+class StreamBackpressure(RuntimeError):
+    """Raised by a non-blocking ``submit`` when the in-flight window is
+    full (the stream's bounded-memory contract; block=True waits
+    instead)."""
+
+
+class StreamClosed(RuntimeError):
+    """Raised by ``submit`` after ``close()`` — a closed stream drains
+    its in-flight work but accepts no new requests."""
+
+
+# ---------------------------------------------------------------------------
+# specialization cache
+# ---------------------------------------------------------------------------
+
+class SpecCache:
+    """LRU cache of dispatch specializations, keyed by
+    ``(shape, dtype, xi, backend)`` (plus the mesh width when sharded).
+
+    The cached value is the resolved, mesh-bound stencil backend for that
+    request class. Reusing one bound instance per spec keeps
+    ``jax.jit``'s static-argument cache keys stable across batches (a
+    fresh ``bind()`` per call would be a new hashable every time) and
+    gives the stream an observable cache surface: ``hits`` / ``misses``
+    / ``evictions`` counters feed the service stats endpoint. Thread-safe.
+
+    Note the xi component: the cached backend itself is xi-independent,
+    so traffic that varies xi per request creates one (cheap-to-rebuild)
+    entry per distinct bound — the key deliberately identifies the full
+    request class the stats observe, trading some LRU churn under
+    many-bound traffic for a cache population that mirrors the workload.
+    """
+
+    def __init__(self, maxsize: int = 32):
+        if maxsize < 1:
+            raise ValueError(f"cache maxsize must be >= 1, got {maxsize}")
+        self.maxsize = maxsize
+        self._data: "collections.OrderedDict[Hashable, object]" = \
+            collections.OrderedDict()
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def get(self, key: Hashable, build: Callable[[], object]) -> object:
+        """The cached value for ``key``, building (and possibly evicting
+        the least-recently-used entry) on a miss."""
+        with self._lock:
+            if key in self._data:
+                self.hits += 1
+                self._data.move_to_end(key)
+                return self._data[key]
+            self.misses += 1
+        value = build()          # outside the lock: build may trace/compile
+        with self._lock:
+            self._data[key] = value
+            self._data.move_to_end(key)
+            while len(self._data) > self.maxsize:
+                self._data.popitem(last=False)
+                self.evictions += 1
+        return value
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._data)
+
+    def stats(self) -> Dict[str, int]:
+        """Counter snapshot: hits, misses, evictions, size, maxsize."""
+        with self._lock:
+            return dict(hits=self.hits, misses=self.misses,
+                        evictions=self.evictions, size=len(self._data),
+                        maxsize=self.maxsize)
+
+
+@dataclasses.dataclass
+class _Request:
+    """One queued stream request: the payload, its coalescing spec, and
+    the Future the caller holds."""
+    item: object
+    spec: Tuple
+    xi: float
+    future: Future
+    t_submit: float
+
+
+# ---------------------------------------------------------------------------
+# the scheduler
+# ---------------------------------------------------------------------------
+
+class _StreamBase:
+    """Shared scheduler machinery of ``CompressStream`` and
+    ``DecompressStream``: the bounded window, the coalescing queue, the
+    worker pool, and the stats. Subclasses implement ``_dispatch`` (one
+    coalesced same-spec batch) and ``_spec_of`` (the coalescing key)."""
+
+    def __init__(self, *, window: int = 8, max_batch: int = 4,
+                 linger_ms: float = 2.0,
+                 backend: BackendLike = "auto", mesh=None,
+                 device_path: pipeline.DevicePath = "auto",
+                 max_iters: int = 512,
+                 workers: Optional[int] = None,
+                 strict_uniform: bool = False,
+                 pad_pow2: bool = True,
+                 fix_batching: str = "auto",
+                 fused_fix_voxels: int = 4096,
+                 cache_size: int = 32,
+                 start: bool = True):
+        if window < 1:
+            raise ValueError(f"window must be >= 1, got {window}")
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        if fix_batching not in ("auto", "fused", "pipelined"):
+            raise ValueError(
+                'fix_batching must be "auto", "fused", or "pipelined"; '
+                f"got {fix_batching!r}")
+        self.window = window
+        self.max_batch = max_batch
+        self.linger_s = max(linger_ms, 0.0) / 1e3
+        self._backend = backend
+        self._mesh = mesh
+        self._device_path = device_path
+        self._max_iters = max_iters
+        self._strict = strict_uniform
+        self._pad_pow2 = pad_pow2
+        self._fix_batching = fix_batching
+        self._fused_fix_voxels = fused_fix_voxels
+        self.cache = SpecCache(cache_size)
+
+        self._slots = threading.Semaphore(window)
+        self._lock = threading.Lock()
+        self._wake = threading.Condition(self._lock)   # scheduler wake-ups
+        self._done = threading.Condition(self._lock)   # flush() wake-ups
+        self._pending: "collections.deque[_Request]" = collections.deque()
+        self._closed = False
+        self._spec0: Optional[Tuple] = None
+
+        # stats (guarded by self._lock)
+        self._submitted = 0
+        self._completed = 0
+        self._failed = 0
+        self._in_flight = 0
+        self._max_in_flight = 0
+        self._batches = 0
+        self._members_real = 0
+        self._members_padded = 0
+        self._nbytes_h2d = 0
+        self._nbytes_d2h = 0
+        self._t_device = 0.0
+        self._t_encode = 0.0
+        self._t_first_submit: Optional[float] = None
+        self._t_last_done: Optional[float] = None
+
+        self._pool = ThreadPoolExecutor(
+            max_workers=workers or max(2, min(8, max_batch)),
+            thread_name_prefix=type(self).__name__ + "-worker")
+        self._thread = threading.Thread(target=self._run, daemon=True,
+                                        name=type(self).__name__)
+        self._started = False
+        if start:
+            self.start()
+
+    # -- lifecycle ----------------------------------------------------
+    def start(self) -> None:
+        """Start the scheduler thread (idempotent; ``start=False``
+        constructors queue requests without draining until called)."""
+        if not self._started:
+            self._started = True
+            self._thread.start()
+
+    def close(self) -> None:
+        """Drain every in-flight request, then stop the scheduler and
+        worker pool — no Future is ever abandoned (a never-started
+        stream is started so its queue drains too). Safe to call twice;
+        submits afterwards raise ``StreamClosed``."""
+        with self._lock:
+            self._closed = True
+            self._wake.notify_all()
+        self.start()        # a start=False stream still owes its queue
+        self._thread.join()
+        self._pool.shutdown(wait=True)
+        with self._lock:
+            self._t_last_done = self._t_last_done or time.perf_counter()
+
+    def __enter__(self) -> "_StreamBase":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- submission ---------------------------------------------------
+    def _submit(self, item, xi: float, spec: Tuple, *, block: bool = True,
+                timeout: Optional[float] = None) -> Future:
+        if self._closed:
+            raise StreamClosed("stream is closed")
+        if self._strict:
+            with self._lock:
+                if self._spec0 is None:
+                    self._spec0 = spec
+                elif spec != self._spec0:
+                    raise ValueError(
+                        f"strict_uniform stream pinned to spec {self._spec0}; "
+                        f"got {spec} (submit to a second stream, or drop "
+                        "strict_uniform to batch mixed specs separately)")
+        if block:
+            ok = self._slots.acquire() if timeout is None \
+                else self._slots.acquire(timeout=timeout)
+        else:
+            ok = self._slots.acquire(blocking=False)
+        if not ok:
+            raise StreamBackpressure(
+                f"in-flight window full ({self.window} requests); "
+                "block=True waits for a slot instead")
+        fut: Future = Future()
+        req = _Request(item=item, spec=spec, xi=xi, future=fut,
+                       t_submit=time.perf_counter())
+        with self._lock:
+            if self._closed:           # closed while we held the slot
+                self._slots.release()
+                raise StreamClosed("stream is closed")
+            self._submitted += 1
+            self._in_flight += 1
+            self._max_in_flight = max(self._max_in_flight, self._in_flight)
+            if self._t_first_submit is None:
+                self._t_first_submit = req.t_submit
+            self._pending.append(req)
+            self._wake.notify()
+        return fut
+
+    def flush(self) -> None:
+        """Block until every submitted request has completed or failed."""
+        with self._lock:
+            while self._in_flight > 0:
+                self._done.wait()
+
+    # -- completion bookkeeping --------------------------------------
+    def _finish(self, req: _Request, result=None, exc=None) -> None:
+        # counters first (a caller woken by set_result must see them
+        # settled), then the result, then the flush()/slot wake-ups —
+        # so fut.done() holds by the time flush() returns
+        with self._lock:
+            if exc is not None:
+                self._failed += 1
+            else:
+                self._completed += 1
+            self._in_flight -= 1
+            self._t_last_done = time.perf_counter()
+        try:
+            if exc is not None:
+                req.future.set_exception(exc)
+            else:
+                req.future.set_result(result)
+        except Exception:       # cancelled under our feet: belt-and-braces
+            pass
+        with self._lock:
+            self._done.notify_all()
+        self._slots.release()
+
+    def _begin(self, req: _Request) -> bool:
+        """Transition a popped request's Future to RUNNING. False when
+        the caller already cancelled it — the request is dropped with
+        its slot freed, and the Future can no longer be cancelled once
+        its batch dispatches (so result delivery cannot race a
+        cancellation)."""
+        if req.future.set_running_or_notify_cancel():
+            return True
+        with self._lock:
+            self._failed += 1
+            self._in_flight -= 1
+            self._t_last_done = time.perf_counter()
+            self._done.notify_all()
+        self._slots.release()
+        return False
+
+    def _fail_batch(self, batch: List[_Request], exc: BaseException) -> None:
+        for req in batch:
+            self._finish(req, exc=exc)
+
+    # -- the scheduler loop -------------------------------------------
+    def _run(self) -> None:
+        while True:
+            batch = self._take_batch()
+            if batch is None:
+                return
+            batch = [req for req in batch if self._begin(req)]
+            if not batch:
+                continue
+            try:
+                self._dispatch(batch)
+            except BaseException as exc:            # noqa: BLE001
+                self._fail_batch(batch, exc)
+
+    def _take_batch(self) -> Optional[List[_Request]]:
+        """Pop the next coalesced same-spec batch (up to ``max_batch``
+        members), lingering ``linger_ms`` for stragglers when the queue
+        drains below a full batch. None = closed and fully drained."""
+        with self._lock:
+            while not self._pending and not self._closed:
+                self._wake.wait()
+            if not self._pending:
+                return None
+            spec = self._pending[0].spec
+            batch = self._pop_spec_locked(spec)
+            deadline = time.perf_counter() + self.linger_s
+            while (len(batch) < self.max_batch and not self._closed):
+                remaining = deadline - time.perf_counter()
+                if remaining <= 0 or not self._wake.wait(timeout=remaining):
+                    break
+                batch.extend(self._pop_spec_locked(
+                    spec, self.max_batch - len(batch)))
+            return batch
+
+    def _pop_spec_locked(self, spec: Tuple,
+                         limit: Optional[int] = None) -> List[_Request]:
+        limit = self.max_batch if limit is None else limit
+        taken: List[_Request] = []
+        rest: List[_Request] = []
+        for req in self._pending:
+            if req.spec == spec and len(taken) < limit:
+                taken.append(req)
+            else:
+                rest.append(req)
+        self._pending = collections.deque(rest)
+        return taken
+
+    # -- stats --------------------------------------------------------
+    def _note_batch(self, real: int, padded: int, nbytes_h2d: int,
+                    nbytes_d2h: int, t_device: float) -> None:
+        with self._lock:
+            self._batches += 1
+            self._members_real += real
+            self._members_padded += padded
+            self._nbytes_h2d += nbytes_h2d
+            self._nbytes_d2h += nbytes_d2h
+            self._t_device += t_device
+
+    def stats(self) -> Dict[str, object]:
+        """Live counter snapshot — the service stats endpoint surfaces
+        this dict as JSON. ``fields_per_sec`` covers first submit to last
+        completion; ``batch_occupancy`` is real members / dispatched
+        member slots (padding included in the denominator)."""
+        with self._lock:
+            elapsed = None
+            if self._t_first_submit is not None:
+                end = self._t_last_done if self._in_flight == 0 and \
+                    self._t_last_done else time.perf_counter()
+                elapsed = max(end - self._t_first_submit, 1e-9)
+            dispatched = self._members_real + self._members_padded
+            return dict(
+                submitted=self._submitted,
+                completed=self._completed,
+                failed=self._failed,
+                in_flight=self._in_flight,
+                max_in_flight=self._max_in_flight,
+                window=self.window,
+                batches=self._batches,
+                max_batch=self.max_batch,
+                mean_batch=(self._members_real / self._batches
+                            if self._batches else 0.0),
+                batch_occupancy=(self._members_real / dispatched
+                                 if dispatched else 0.0),
+                padded_members=self._members_padded,
+                nbytes_h2d=self._nbytes_h2d,
+                nbytes_d2h=self._nbytes_d2h,
+                t_device_s=self._t_device,
+                t_encode_s=self._t_encode,
+                fields_per_sec=(self._completed / elapsed
+                                if elapsed and self._completed else 0.0),
+                cache=self.cache.stats(),
+            )
+
+    # -- subclass hooks -----------------------------------------------
+    def _dispatch(self, batch: List[_Request]) -> None:
+        raise NotImplementedError
+
+    def _backend_key_part(self) -> Tuple:
+        name = self._backend if isinstance(self._backend, str) \
+            else getattr(self._backend, "name", str(self._backend))
+        n_data = 0
+        if self._mesh is not None:
+            n_data = int(np.prod([s for ax, s in zip(self._mesh.axis_names,
+                                                     self._mesh.devices.shape)
+                                  if ax == "data"], dtype=np.int64))
+        return (name, n_data)
+
+    def _resolved_backend(self, shape: Tuple[int, ...], dtype, xi: float):
+        """The mesh-bound stencil backend for one request class, through
+        the LRU ``SpecCache`` (key: shape, dtype, xi, backend, mesh)."""
+        key = (tuple(shape), str(dtype), float(xi), *self._backend_key_part())
+        return self.cache.get(key, lambda: fixes._bind(
+            resolve_backend(self._backend, tuple(shape), np.dtype(dtype),
+                            mesh=self._mesh)))
+
+
+# ---------------------------------------------------------------------------
+# write side
+# ---------------------------------------------------------------------------
+
+class CompressStream(_StreamBase):
+    """Double-buffered streaming ``compress_preserving_mss`` (DESIGN.md §6).
+
+    ``submit(field, xi)`` returns a ``concurrent.futures.Future`` that
+    resolves to the ``CompressedArtifact`` — byte-identical to the
+    one-shot call. Same-(shape, dtype, base) requests coalesce into one
+    batched device dispatch (per-request ``xi`` rides along); the batch's
+    entropy coding runs on worker threads while the scheduler dispatches
+    the next batch. ``map(fields, xis)`` is the ordered convenience
+    wrapper. See ``_StreamBase`` for window/backpressure/batching knobs.
+    """
+
+    def submit(self, field: np.ndarray, xi: float, *,
+               base: pipeline.BaseName = "szlike",
+               edit_value_dtype: str = "f4",
+               block: bool = True,
+               timeout: Optional[float] = None) -> Future:
+        """Queue one field for compression; the Future resolves to its
+        ``CompressedArtifact``. Raises ``StreamBackpressure`` when
+        ``block=False`` and the in-flight window is full."""
+        field = np.asarray(field)
+        spec = (field.shape, str(field.dtype), base, edit_value_dtype)
+        return self._submit(field, float(xi), spec, block=block,
+                            timeout=timeout)
+
+    def map(self, fields: Sequence[np.ndarray],
+            xi) -> List[pipeline.CompressedArtifact]:
+        """Compress ``fields`` through the stream; artifacts return in
+        submission order regardless of completion order. ``xi``: scalar
+        or per-field sequence."""
+        fields = list(fields)
+        xi_arr = np.broadcast_to(np.asarray(xi, np.float64), (len(fields),))
+        futs = [self.submit(f, float(x)) for f, x in zip(fields, xi_arr)]
+        return [f.result() for f in futs]
+
+    def _dispatch(self, batch: List[_Request]) -> None:
+        spec = batch[0].spec
+        _, _, base, evd = spec
+        fields = [req.item for req in batch]
+        xi_arr = np.asarray([req.xi for req in batch], np.float64)
+
+        steps: List[float] = []
+        use_dev = False
+        if self._device_path is True and base != "szlike":
+            self._fail_batch(batch, ValueError(
+                f"device_path=True but the device path serves the szlike "
+                f"base only (got {base!r})"))
+            return
+        if self._device_path is not False and base == "szlike":
+            reasons = [pipeline._device_path_reason(f, float(x), base, "fused")
+                       for f, x in zip(fields, xi_arr)]
+            use_dev = all(r is None for r, _ in reasons)
+            steps = [s for _, s in reasons]
+            if self._device_path is True and not use_dev:
+                bad = next(r for r, _ in reasons if r is not None)
+                self._fail_batch(batch, ValueError(
+                    f"device_path=True but {bad}"))
+                return
+        be = None
+        if use_dev:
+            be = self._resolved_backend(fields[0].shape, fields[0].dtype,
+                                        float(xi_arr[0]))
+            if not hasattr(be, "transform"):
+                if self._device_path is True:
+                    self._fail_batch(batch, ValueError(
+                        f"device_path=True but backend {be.name!r} implements "
+                        "no transform/reconstruct protocol entry"))
+                    return
+                be, use_dev = None, False
+        if not use_dev:
+            # host byte-codec path (zfplike base, unsupported dtype, range
+            # precondition failures, ...): one whole-batch worker job so
+            # the scheduler stays free for the next batch's device stage
+            self._pool.submit(self._host_batch, batch, fields, xi_arr,
+                              base, evd)
+            return
+
+        # pad the batch to a power-of-two member count: the vmapped
+        # dispatches then specialize on ~log2(window) batch sizes total.
+        # Distributed backends run members sequentially — padding would
+        # only add work there.
+        B = len(fields)
+        cap = pipeline._pow2_at_least(B) if (
+            self._pad_pow2 and not hasattr(be, "fix_loop")) else B
+        pad = cap - B
+        if pad:
+            fields = fields + [fields[-1]] * pad
+            xi_arr = np.concatenate([xi_arr, np.full(pad, xi_arr[-1])])
+            steps = steps + [steps[-1]] * pad
+        t0 = time.perf_counter()
+        if self._use_fused_fix(fields[0], be):
+            db = pipeline._device_batch_stage(fields, xi_arr, be,
+                                              self._max_iters, steps)
+        else:
+            db = pipeline._device_pipelined_stage(fields, xi_arr, be,
+                                                  self._max_iters, steps,
+                                                  n_real=B)
+        self._note_batch(B, pad, db.nbytes_h2d, db.nbytes_d2h,
+                         time.perf_counter() - t0)
+        for i, req in enumerate(batch):
+            self._pool.submit(self._finish_compress, db, i, evd, req)
+
+    def _use_fused_fix(self, field: np.ndarray, be) -> bool:
+        """Whether this batch's fix loops run as ONE batched while_loop
+        (``_device_batch_stage``) or as per-member solo loops behind a
+        shared vmapped transform (``_device_pipelined_stage``). The
+        batched loop amortizes dispatch overhead but computes every
+        member until the slowest converges (B x max(iters) work, and
+        vmapped interpret-mode Pallas stencils pay a further per-
+        iteration penalty), so "auto" fuses only small members — up to
+        ``fused_fix_voxels`` (default 16^3) — where dispatch overhead
+        dominates. Distributed backends always take the batch stage
+        (their fix loops run members sequentially either way)."""
+        if hasattr(be, "fix_loop"):
+            return True
+        if self._fix_batching != "auto":
+            return self._fix_batching == "fused"
+        return field.size <= self._fused_fix_voxels
+
+    def _host_batch(self, batch: List[_Request], fields, xi_arr,
+                    base: str, evd: str) -> None:
+        try:
+            arts = pipeline.compress_preserving_mss_batch(
+                fields, xi_arr, base=base, edit_value_dtype=evd,
+                max_iters=self._max_iters, backend=self._backend,
+                mesh=self._mesh, device_path=False)
+        except BaseException as exc:                # noqa: BLE001
+            self._fail_batch(batch, exc)
+            return
+        self._note_batch(len(batch), 0, 0, 0, 0.0)
+        for req, art in zip(batch, arts):
+            self._finish(req, result=art)
+
+    def _finish_compress(self, db: "pipeline._DeviceBatch", i: int,
+                         evd: str, req: _Request) -> None:
+        t0 = time.perf_counter()
+        try:
+            art = pipeline._encode_batch_member(db, i, evd)
+        except BaseException as exc:                # noqa: BLE001
+            self._finish(req, exc=exc)
+            return
+        with self._lock:
+            self._t_encode += time.perf_counter() - t0
+        self._finish(req, result=art)
+
+
+# ---------------------------------------------------------------------------
+# read side
+# ---------------------------------------------------------------------------
+
+class DecompressStream(_StreamBase):
+    """Streaming ``decompress_preserving_mss``: same scheduler, artifacts
+    in, fields out. Same-(base, shape, dtype) artifacts coalesce into one
+    ``decompress_artifact_batch`` call — which itself pipelines threaded
+    entropy decode against async per-member device dispatch (DESIGN.md
+    §5) — and whole batches run on worker threads, so batch *k+1*'s
+    entropy decode overlaps batch *k*'s device work. Because those inner
+    stages overlap inside one call, the read side cannot attribute them
+    separately: ``stats()['t_device_s']`` carries the combined batch
+    time and ``t_encode_s`` stays 0. Outputs are byte-identical to
+    one-shot calls."""
+
+    def submit(self, art: pipeline.CompressedArtifact, *,
+               block: bool = True,
+               timeout: Optional[float] = None) -> Future:
+        """Queue one artifact; the Future resolves to the decompressed
+        field g (``np.ndarray``)."""
+        spec = (art.base, tuple(art.shape), str(art.dtype))
+        return self._submit(art, float(art.xi), spec, block=block,
+                            timeout=timeout)
+
+    def map(self, arts: Sequence[pipeline.CompressedArtifact]
+            ) -> List[np.ndarray]:
+        """Decompress ``arts`` through the stream, results in submission
+        order."""
+        futs = [self.submit(a) for a in arts]
+        return [f.result() for f in futs]
+
+    def _dispatch(self, batch: List[_Request]) -> None:
+        self._pool.submit(self._decode_batch, batch)
+
+    def _decode_batch(self, batch: List[_Request]) -> None:
+        arts = [req.item for req in batch]
+        t0 = time.perf_counter()
+        try:
+            if len(arts) == 1:
+                # skip the batch machinery (pooled entropy decode, stacked
+                # d2h) for singleton batches — output is identical
+                gs = [pipeline.decompress_preserving_mss(
+                    arts[0], device_path=self._device_path,
+                    backend=self._backend, mesh=self._mesh)]
+            else:
+                gs = pipeline.decompress_artifact_batch(
+                    arts, device_path=self._device_path,
+                    backend=self._backend, mesh=self._mesh)
+        except BaseException as exc:                # noqa: BLE001
+            self._fail_batch(batch, exc)
+            return
+        nbytes = sum(g.nbytes for g in gs)
+        self._note_batch(len(batch), 0,
+                         sum(len(a.base_payload) + len(a.edit_payload)
+                             for a in arts),
+                         nbytes, time.perf_counter() - t0)
+        for req, g in zip(batch, gs):
+            self._finish(req, result=g)

@@ -312,6 +312,9 @@ def codes_fit_int32(r: np.ndarray) -> bool:
 
 
 def sz_decompress(blob: bytes) -> np.ndarray:
+    """Host-side inverse of ``sz_compress``: entropy-decode the
+    residual codes and reconstruct f_hat (d nested cumsums + dequant;
+    bitwise equal to the device path's ``backend.reconstruct``)."""
     r, shape, dtype, step = sz_decode_residuals(blob)
     q = r
     for ax in range(len(shape)):
@@ -323,5 +326,7 @@ def sz_decompress(blob: bytes) -> np.ndarray:
 
 
 def sz_roundtrip(f: np.ndarray, xi: float) -> Tuple[np.ndarray, int]:
+    """Compress + decompress in one call: (f_hat, compressed bytes) —
+    the bench/test convenience for the SZ-like base."""
     blob = sz_compress(f, xi)
     return sz_decompress(blob), len(blob)

@@ -126,6 +126,9 @@ def _unblockify(blocks: np.ndarray, padded_shape, orig_shape) -> np.ndarray:
 
 
 def zfp_compress(f: np.ndarray, xi: float) -> bytes:
+    """ZFP-like fixed-accuracy compression of a 2D/3D field to one
+    blob: 4^d block transform, per-block bit-plane truncation against
+    the error bound ``xi``, then DEFLATE."""
     f = np.asarray(f)
     if f.ndim not in (2, 3):
         raise ValueError("zfp-like supports 2D/3D fields")
@@ -183,6 +186,7 @@ def zfp_compress(f: np.ndarray, xi: float) -> bytes:
 
 
 def zfp_decompress(blob: bytes) -> np.ndarray:
+    """Inverse of ``zfp_compress``: f_hat with max|f - f_hat| <= xi."""
     magic, ndim, xi, nb = struct.unpack_from("<4sBdQ", blob, 0)
     if magic != _MAGIC:
         raise ValueError("not a ZFP-like blob")
@@ -210,5 +214,7 @@ def zfp_decompress(blob: bytes) -> np.ndarray:
 
 
 def zfp_roundtrip(f: np.ndarray, xi: float) -> Tuple[np.ndarray, int]:
+    """Compress + decompress in one call: (f_hat, compressed bytes) —
+    the bench/test convenience for the ZFP-like base."""
     blob = zfp_compress(f, xi)
     return zfp_decompress(blob), len(blob)

@@ -162,9 +162,12 @@ class ReferenceBackend:
     name: str = "reference"
 
     def supports(self, shape: Tuple[int, ...], dtype) -> bool:
+        """Any 2D/3D field (the dense stencils are shape-agnostic)."""
         return len(shape) in (2, 3)
 
     def extrema_masks(self, g: jnp.ndarray, topo) -> StencilMasks:
+        """Classification pass: direction codes + the fused fix-source
+        masks of one iteration (see StencilMasks)."""
         fm = false_critical_masks(g, topo)
         t_max, t_min = trouble_masks(fm, topo)
         return StencilMasks(
@@ -177,6 +180,8 @@ class ReferenceBackend:
         )
 
     def fix_pass(self, g: jnp.ndarray, topo, masks: StencilMasks):
+        """Conflict-free pull-based edit application (DESIGN.md §2):
+        (g_next, n_violations)."""
         target = ((masks.self_edit != 0)
                   | _pull(masks.demote_src != 0, masks.up_c_g)
                   | _pull(masks.promote_src != 0, masks.dn_c_f))
@@ -226,6 +231,7 @@ class PallasBackend:
     interpret: Optional[bool] = None
 
     def supports(self, shape: Tuple[int, ...], dtype) -> bool:
+        """Non-empty 2D/3D floating-point fields (slab kernels)."""
         return (len(shape) in (2, 3) and min(shape) >= 1
                 and jnp.issubdtype(jnp.dtype(dtype), jnp.floating))
 
@@ -239,6 +245,8 @@ class PallasBackend:
     def extrema_masks(self, g: jnp.ndarray, topo, *,
                       slab_lo: int = 0,
                       n_slabs_total: Optional[int] = None) -> StencilMasks:
+        """Classification pass via the slab kernel; ``slab_lo`` /
+        ``n_slabs_total`` place a tile in global coordinates."""
         from ..kernels.extrema import extrema_masks_pallas
         up_c, dn_c, selfe, dem, pro = extrema_masks_pallas(
             g, topo.M, topo.m,
@@ -248,6 +256,8 @@ class PallasBackend:
         return StencilMasks(up_c, dn_c, selfe, dem, pro, topo.dn_c)
 
     def fix_pass(self, g: jnp.ndarray, topo, masks: StencilMasks):
+        """Pull-based edit application via the slab kernel:
+        (g_next, n_violations)."""
         from ..kernels.fixpass import fix_pass_pallas
         g2, viol = fix_pass_pallas(
             g, topo.lower, masks.self_edit, masks.demote_src,
@@ -263,6 +273,8 @@ class PallasBackend:
             else self.vmem_slab_budget
 
     def fused_step(self, g: jnp.ndarray, topo):
+        """One fused fix iteration: (g_next, n_violations), Z-tiled
+        when the field exceeds the VMEM slab budget."""
         tile = self._pick_tile(g.shape[0])
         if tile >= g.shape[0]:
             masks = self.extrema_masks(g, topo)
@@ -357,6 +369,8 @@ def _ensure_lazy_backends() -> None:
 
 
 def available_backends() -> Tuple[str, ...]:
+    """Sorted names of every registered stencil backend (lazy
+    higher-layer backends are imported first so the list is total)."""
     _ensure_lazy_backends()
     return tuple(sorted(_REGISTRY))
 

@@ -59,6 +59,9 @@ class FieldTopo(NamedTuple):
 
 
 def field_topology(f: jnp.ndarray, xi) -> FieldTopo:
+    """Precompute everything the fix loops need from the ORIGINAL
+    field: steepest direction codes, extremum masks, ascending/
+    descending MSS labels, and the per-vertex lower bound f - xi."""
     up_c, dn_c = grid.steepest_dirs(f)
     M, m = labels_from_codes(up_c, dn_c)
     sc = grid.self_code(f.ndim)

@@ -42,6 +42,8 @@ OFFSETS_3D: Tuple[Tuple[int, ...], ...] = (
 
 
 def offsets_for(ndim: int) -> Tuple[Tuple[int, ...], ...]:
+    """The paper's neighbor stencil offsets: 8-neighborhood in 2D,
+    14-neighborhood (6 face + 8 body diagonal) in 3D."""
     if ndim == 2:
         return OFFSETS_2D
     if ndim == 3:
@@ -50,6 +52,7 @@ def offsets_for(ndim: int) -> Tuple[Tuple[int, ...], ...]:
 
 
 def n_neighbors(ndim: int) -> int:
+    """Stencil size: 8 in 2D, 14 in 3D."""
     return len(offsets_for(ndim))
 
 
@@ -67,6 +70,8 @@ def shift(x: jnp.ndarray, off: Sequence[int], fill) -> jnp.ndarray:
 
 
 def linear_index(shape: Sequence[int]) -> jnp.ndarray:
+    """Row-major flat vertex ids of a grid, shaped like the grid (the
+    SoS tie-break key: lower id wins ties)."""
     return jnp.arange(int(np.prod(shape)), dtype=jnp.int32).reshape(shape)
 
 

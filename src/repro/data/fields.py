@@ -98,6 +98,8 @@ FIELD_GENERATORS: Dict[str, Callable[..., np.ndarray]] = {
 
 def synthetic_field(name: str, shape: Tuple[int, ...] | None = None,
                     seed: int | None = None) -> np.ndarray:
+    """A procedural stand-in for one of the paper's datasets (see
+    FIELD_GENERATORS for names); deterministic per (name, shape, seed)."""
     gen = FIELD_GENERATORS[name]
     kwargs = {}
     if shape is not None:

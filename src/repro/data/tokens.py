@@ -50,6 +50,8 @@ class TokenPipeline:
             self._mm = np.memmap(self.bin_path, dtype=np.int32, mode="r")
 
     def get_batch(self, step: int) -> dict:
+        """The (tokens, labels) dict for one train step — deterministic
+        per step, memory-mapped when a corpus file is configured."""
         if self._mm is None:
             full = synthetic_tokens(self.vocab_size, self.batch, self.seq_len,
                                     step, self.seed)

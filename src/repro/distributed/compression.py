@@ -46,6 +46,8 @@ def quantize_tree(grads: Any, rel_bound: float, bits: int = 16):
 
 
 def dequantize_tree(codes: Any, steps: Any, like: Any):
+    """Inverse of ``quantize_tree``: codes * step, cast back to the
+    dtypes of ``like``."""
     return jax.tree.map(
         lambda c, s, g: (c.astype(jnp.float32) * s).astype(g.dtype),
         codes, steps, like)

@@ -354,6 +354,7 @@ class ShardedBackend:
     interpret: Optional[bool] = None
 
     def with_mesh(self, mesh: Mesh) -> "ShardedBackend":
+        """A copy of this backend bound to ``mesh``."""
         return dataclasses.replace(self, mesh=mesh)
 
     def bind(self) -> "ShardedBackend":
@@ -380,6 +381,7 @@ class ShardedBackend:
         return data_axis_size(mesh, self.axis_name)
 
     def supports(self, shape: Tuple[int, ...], dtype) -> bool:
+        """Non-empty 2D/3D floating fields, given >= 1 data device."""
         return (len(shape) in (2, 3) and min(shape) >= 1
                 and jnp.issubdtype(jnp.dtype(dtype), jnp.floating)
                 and self.n_data_devices() >= 1)
@@ -408,6 +410,9 @@ class ShardedBackend:
 
     # -- full-loop fast path consumed by fixes.fused_fix ---------------
     def fix_loop(self, g0: jnp.ndarray, topo, max_iters: int = 512):
+        """The whole fused loop inside ONE shard_map (one topology
+        halo exchange, per-iteration 1-slab g exchange): (g, iters,
+        converged), bitwise equal to the single-device loop."""
         be = self.bind()
         return sharded_fix(g0, topo, be.mesh, max_iters=max_iters,
                            axis_name=be.axis_name,
@@ -415,17 +420,24 @@ class ShardedBackend:
 
     # -- device-resident base transform (DESIGN.md §4) ------------------
     def transform(self, f: jnp.ndarray, step) -> jnp.ndarray:
+        """Quantize + Lorenzo, each device on its own Z-slab (one
+        backward halo slab exchanged)."""
         be = self.bind()
         return sharded_transform(f, step, be.mesh, axis_name=be.axis_name,
                                  interpret=be._interpret())
 
     def reconstruct(self, r: jnp.ndarray, step, dtype) -> jnp.ndarray:
+        """f_hat from residual codes: local cumsums + all_gather
+        exclusive prefix over the slab axis; bitwise equal to the
+        host codec's reconstruction."""
         be = self.bind()
         return sharded_reconstruct(r, step, dtype, be.mesh,
                                    axis_name=be.axis_name)
 
     # -- device-resident decompression path (DESIGN.md §5) --------------
     def scatter_edits(self, f_hat: jnp.ndarray, idx, val) -> jnp.ndarray:
+        """Edit scatter-add with the replicated edit stream filtered
+        to each device's slab range (zero collectives)."""
         be = self.bind()
         return sharded_scatter_edits(f_hat, idx, val, be.mesh,
                                      axis_name=be.axis_name)

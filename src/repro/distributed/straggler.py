@@ -55,4 +55,5 @@ class StepWatchdog:
             return False
 
     def timed(self) -> "_Timer":
+        """Context manager timing one step and feeding the watchdog."""
         return StepWatchdog._Timer(self)

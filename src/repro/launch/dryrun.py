@@ -1,6 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
 """Multi-pod dry-run: .lower().compile() every (architecture x input shape)
 on the production meshes, prove memory fits, and extract the roofline terms
 (FLOPs / bytes / collective bytes) from the compiled artifact.
@@ -9,9 +6,12 @@ on the production meshes, prove memory fits, and extract the roofline terms
       --shape train_4k --multi-pod
   PYTHONPATH=src python -m repro.launch.dryrun --all --out experiments/dryrun
 
-The 512 placeholder host devices exist ONLY here (the env var above must
+The 512 placeholder host devices exist ONLY here (the env var below must
 precede any jax import); smoke tests and benchmarks see 1 device.
 """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
 import argparse
 import json
 import re

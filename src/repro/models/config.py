@@ -113,6 +113,8 @@ SHAPES: Tuple[ShapeConfig, ...] = (
 
 
 def shape_by_name(name: str) -> ShapeConfig:
+    """Look up a registered input-shape bundle by name (KeyError when
+    unknown)."""
     for s in SHAPES:
         if s.name == name:
             return s

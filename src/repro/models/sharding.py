@@ -39,6 +39,8 @@ def use_mesh(mesh: jax.sharding.Mesh):
 
 
 def axes_for_mesh(mesh: jax.sharding.Mesh) -> MeshAxes:
+    """The batch/model logical-axis assignment for ``mesh`` (pods fold
+    into the batch axes when present)."""
     names = mesh.axis_names
     if "pod" in names:
         return MeshAxes(batch=("pod", "data"), model="model")
@@ -207,4 +209,5 @@ def tree_param_specs(params_shape, ax: MeshAxes, mesh_shape: dict,
 
 
 def mesh_shape_dict(mesh: jax.sharding.Mesh) -> dict:
+    """{axis name: device count} of ``mesh``."""
     return dict(zip(mesh.axis_names, mesh.devices.shape))

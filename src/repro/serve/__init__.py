@@ -1,4 +1,10 @@
-"""repro.serve — prefill/decode serving steps with KV & recurrent caches."""
+"""repro.serve — serving layers: the request-batched topology-preserving
+compression service (``repro.serve.compression``, DESIGN.md §6) and the
+LM prefill/decode serving steps with KV & recurrent caches."""
 from .step import make_serve_step, make_prefill, greedy_generate
+from .compression import (CompressionService, ServiceConfig,
+                          ServiceOverloaded, start_stats_server)
 
-__all__ = ["make_serve_step", "make_prefill", "greedy_generate"]
+__all__ = ["make_serve_step", "make_prefill", "greedy_generate",
+           "CompressionService", "ServiceConfig", "ServiceOverloaded",
+           "start_stats_server"]

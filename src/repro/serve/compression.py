@@ -1,0 +1,235 @@
+"""repro.serve.compression — the request-batched topology-preserving
+compression service (DESIGN.md §6).
+
+``CompressionService`` is the layer the ROADMAP's "serve heavy traffic"
+north star asks for on top of the streaming scheduler
+(``repro.compress.stream``): concurrent callers submit compress and
+decompress requests with per-request error bounds (``xi``) and base
+codec selection; the service coalesces same-shape/same-dtype requests
+inside a bounded window into batched device dispatches, applies
+backpressure when the window fills (block or reject, per config), and
+exposes a stats surface — fields/sec, batch occupancy, transfer bytes,
+cache hit rates — as a dict and, via ``start_stats_server``, as a
+plain-HTTP JSON endpoint.
+
+Requests are served by the same pipeline the one-shot API uses, so every
+artifact and every decompressed field is byte-identical to a solo
+``compress_preserving_mss`` / ``decompress_preserving_mss`` call; the
+service only changes *when* work runs, never *what* it computes.
+
+    service = CompressionService(ServiceConfig(window=16, max_batch=4))
+    fut = service.submit_compress(field, xi=1e-3)
+    art = fut.result()
+    g = service.decompress(art)
+    print(service.stats()["compress"]["fields_per_sec"])
+    service.close()
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import threading
+import time
+from concurrent.futures import Future
+from typing import Dict, Optional
+
+import numpy as np
+
+from ..compress import pipeline
+from ..compress.stream import (CompressStream, DecompressStream,
+                               StreamBackpressure)
+from ..core.backend import BackendLike
+
+__all__ = ["ServiceConfig", "ServiceOverloaded", "CompressionService",
+           "start_stats_server"]
+
+
+class ServiceOverloaded(RuntimeError):
+    """Raised by submit calls when the in-flight window is full and the
+    service runs with ``overload="reject"`` (the HTTP-429 analogue);
+    ``overload="block"`` applies backpressure by waiting instead."""
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    """Tuning knobs of one ``CompressionService``.
+
+    ``window``
+        In-flight request bound per direction (compress / decompress).
+        This is the backpressure contract: at most ``window`` requests
+        hold memory at once; producers beyond it block or get
+        ``ServiceOverloaded`` (see ``overload``).
+    ``max_batch``
+        Dynamic-batching limit: up to this many same-(shape, dtype,
+        codec) requests coalesce into one batched device dispatch.
+    ``coalesce_ms``
+        How long a sub-full batch lingers for stragglers before
+        dispatching — the service's latency/occupancy trade-off.
+    ``backend`` / ``mesh`` / ``device_path`` / ``max_iters``
+        Forwarded to the pipeline (see ``compress_preserving_mss``);
+        a mesh with >= 2 data-axis devices serves stream members
+        slab-sharded across the device mesh.
+    ``workers``
+        Host worker threads per stream for entropy coding/decoding
+        (default: scales with ``max_batch``).
+    ``cache_size``
+        LRU capacity of each stream's dispatch-spec cache
+        (``repro.compress.stream.SpecCache``).
+    ``pad_pow2``
+        Pad coalesced batches to power-of-two member counts so the
+        vmapped dispatches specialize on ~log2(window) batch sizes.
+    ``fix_batching``
+        ``"fused"`` runs each batch's fix loops as one batched
+        while_loop, ``"pipelined"`` as per-member solo loops behind a
+        shared vmapped transform; ``"auto"`` fuses small members only
+        (see ``CompressStream``).
+    ``overload``
+        ``"block"``: submits wait for a window slot (backpressure);
+        ``"reject"``: submits raise ``ServiceOverloaded`` immediately.
+    """
+    window: int = 16
+    max_batch: int = 4
+    coalesce_ms: float = 2.0
+    backend: BackendLike = "auto"
+    mesh: Optional[object] = None
+    device_path: pipeline.DevicePath = "auto"
+    max_iters: int = 512
+    workers: Optional[int] = None
+    cache_size: int = 32
+    pad_pow2: bool = True
+    fix_batching: str = "auto"
+    overload: str = "block"
+
+    def __post_init__(self):
+        if self.overload not in ("block", "reject"):
+            raise ValueError(
+                f'overload must be "block" or "reject", got {self.overload!r}')
+
+
+class CompressionService:
+    """Request queue + dynamic batching + backpressure around one
+    ``CompressStream`` and one ``DecompressStream`` (DESIGN.md §6).
+
+    Thread-safe: any number of producer threads may submit concurrently;
+    results arrive on ``concurrent.futures.Future``s. Close with
+    ``close()`` (or use as a context manager) to drain in-flight work.
+    """
+
+    def __init__(self, config: ServiceConfig = ServiceConfig()):
+        self.config = config
+        kw = dict(window=config.window, max_batch=config.max_batch,
+                  linger_ms=config.coalesce_ms, backend=config.backend,
+                  mesh=config.mesh, device_path=config.device_path,
+                  max_iters=config.max_iters, workers=config.workers,
+                  cache_size=config.cache_size, pad_pow2=config.pad_pow2,
+                  fix_batching=config.fix_batching)
+        self._compress = CompressStream(**kw)
+        self._decompress = DecompressStream(**kw)
+        self._t_start = time.perf_counter()
+
+    # -- submission ---------------------------------------------------
+    def _guard(self, submit, *args, **kw) -> Future:
+        try:
+            return submit(*args, block=self.config.overload == "block", **kw)
+        except StreamBackpressure as exc:
+            raise ServiceOverloaded(
+                f"service window full ({self.config.window} in-flight "
+                "requests); retry later or configure overload='block'"
+            ) from exc
+
+    def submit_compress(self, field: np.ndarray, xi: float, *,
+                        base: pipeline.BaseName = "szlike",
+                        edit_value_dtype: str = "f4") -> Future:
+        """Queue a field; the Future resolves to its
+        ``CompressedArtifact`` (byte-identical to the one-shot call).
+        ``xi`` and ``base`` are free per request — only same-(shape,
+        dtype, base) requests share a batch."""
+        return self._guard(self._compress.submit, field, xi, base=base,
+                           edit_value_dtype=edit_value_dtype)
+
+    def submit_decompress(self, art: pipeline.CompressedArtifact) -> Future:
+        """Queue an artifact; the Future resolves to the decompressed
+        field g with MSS(g) == MSS(f)."""
+        return self._guard(self._decompress.submit, art)
+
+    # -- sync conveniences --------------------------------------------
+    def compress(self, field: np.ndarray, xi: float, *,
+                 base: pipeline.BaseName = "szlike",
+                 edit_value_dtype: str = "f4"
+                 ) -> pipeline.CompressedArtifact:
+        """Blocking ``submit_compress(...).result()``."""
+        return self.submit_compress(field, xi, base=base,
+                                    edit_value_dtype=edit_value_dtype).result()
+
+    def decompress(self, art: pipeline.CompressedArtifact) -> np.ndarray:
+        """Blocking ``submit_decompress(...).result()``."""
+        return self.submit_decompress(art).result()
+
+    # -- observability ------------------------------------------------
+    def stats(self) -> Dict[str, object]:
+        """The service stats document (what the HTTP endpoint serves):
+        uptime plus one ``repro.compress.stream`` counter snapshot per
+        direction — fields/sec, batch occupancy, in-flight depth,
+        transfer bytes, and spec-cache hit/miss/eviction counts."""
+        return dict(
+            uptime_s=time.perf_counter() - self._t_start,
+            config=dict(window=self.config.window,
+                        max_batch=self.config.max_batch,
+                        coalesce_ms=self.config.coalesce_ms,
+                        overload=self.config.overload),
+            compress=self._compress.stats(),
+            decompress=self._decompress.stats(),
+        )
+
+    # -- lifecycle ----------------------------------------------------
+    def flush(self) -> None:
+        """Block until every in-flight request (both directions) has
+        completed or failed."""
+        self._compress.flush()
+        self._decompress.flush()
+
+    def close(self) -> None:
+        """Drain in-flight work and stop both streams (idempotent)."""
+        self._compress.close()
+        self._decompress.close()
+
+    def __enter__(self) -> "CompressionService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def start_stats_server(service: CompressionService, port: int = 0,
+                       host: str = "127.0.0.1"):
+    """Serve ``service.stats()`` as JSON over plain HTTP on a daemon
+    thread: ``GET /stats`` returns the live stats document,
+    ``GET /healthz`` returns ``ok``. Returns the running
+    ``ThreadingHTTPServer`` (``.server_address`` carries the bound port
+    when ``port=0``); call ``.shutdown()`` to stop it."""
+    from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+
+    class Handler(BaseHTTPRequestHandler):
+        def do_GET(self):              # noqa: N802 (http.server API)
+            if self.path == "/healthz":
+                body, ctype = b"ok\n", "text/plain"
+            elif self.path in ("/", "/stats"):
+                body = (json.dumps(service.stats(), indent=2) + "\n").encode()
+                ctype = "application/json"
+            else:
+                self.send_error(404, "unknown path (try /stats)")
+                return
+            self.send_response(200)
+            self.send_header("Content-Type", ctype)
+            self.send_header("Content-Length", str(len(body)))
+            self.end_headers()
+            self.wfile.write(body)
+
+        def log_message(self, *args):  # quiet: stats polls are chatty
+            pass
+
+    server = ThreadingHTTPServer((host, port), Handler)
+    thread = threading.Thread(target=server.serve_forever, daemon=True,
+                              name="compression-stats-http")
+    thread.start()
+    return server

@@ -32,6 +32,7 @@ class AdamWConfig:
 
 
 def cosine_schedule(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    """Linear-warmup + cosine-decay learning rate at ``step``."""
     s = step.astype(jnp.float32)
     warm = s / jnp.maximum(cfg.warmup_steps, 1)
     prog = jnp.clip((s - cfg.warmup_steps)
@@ -43,12 +44,14 @@ def cosine_schedule(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
 
 
 def adamw_init(params: Any) -> AdamWState:
+    """Fresh AdamW state (f32 zero moments) for ``params``."""
     zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
     return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros,
                       v=jax.tree.map(jnp.copy, zeros))
 
 
 def global_norm(tree: Any) -> jnp.ndarray:
+    """L2 norm over every leaf of ``tree`` (f32 accumulation)."""
     leaves = jax.tree.leaves(tree)
     return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
                         for l in leaves))

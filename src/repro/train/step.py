@@ -89,6 +89,8 @@ def chunked_cross_entropy(hidden: jnp.ndarray, unembed: jnp.ndarray,
 
 
 def make_loss_fn(cfg: ArchConfig, tcfg: TrainStepConfig) -> Callable:
+    """Build the per-batch LM loss (z-loss + label smoothing per
+    ``tcfg``; image-token positions excluded for VLM configs)."""
     def loss_fn(params, batch):
         out = model_forward(cfg, params, batch)
         logits = out.logits
@@ -171,6 +173,7 @@ def make_train_step(cfg: ArchConfig, tcfg: TrainStepConfig,
 
 
 def init_train_state(cfg: ArchConfig, key) -> TrainState:
+    """Fresh params + optimizer state for one architecture config."""
     from ..models import init_params
     params = init_params(cfg, key)
     return TrainState(params=params, opt=adamw_init(params))

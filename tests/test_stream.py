@@ -1,0 +1,334 @@
+"""Stream-scheduler suite (repro.compress.stream + repro.serve.compression,
+DESIGN.md §6).
+
+The contract under test: the stream/service layer reorders and overlaps
+work but never changes it — every artifact and decompressed field must
+be BYTE-identical to its one-shot pipeline counterpart — while honoring
+the scheduling invariants: submission-order results under out-of-order
+completion, per-spec batching of mixed traffic (or rejection under
+``strict_uniform``), the bounded in-flight window (backpressure), and
+LRU eviction in the dispatch-spec cache. Sharded parity cases need
+emulated devices (``XLA_FLAGS=--xla_force_host_platform_device_count=8``,
+the second tier-1 CI job); on a 1-device host they skip cleanly.
+"""
+import functools
+import json
+import urllib.request
+
+import numpy as np
+import pytest
+import jax
+
+from repro.compress import (CompressStream, DecompressStream, SpecCache,
+                            StreamBackpressure, StreamClosed,
+                            compress_preserving_mss,
+                            decompress_preserving_mss)
+from repro.data import synthetic_field
+from repro.launch.mesh import make_data_mesh
+from repro.serve import (CompressionService, ServiceConfig, ServiceOverloaded,
+                         start_stats_server)
+
+N_AVAIL = len(jax.devices())
+
+SHAPE_3D = (8, 8, 8)
+SHAPE_2D = (12, 10)
+
+
+def _traffic(shape, n, seed0=0, xi_rel=1e-3):
+    fields = [synthetic_field("nyx", shape=shape, seed=seed0 + s)
+              .astype(np.float32) for s in range(n)]
+    return fields, [xi_rel * float(np.ptp(f)) for f in fields]
+
+
+@functools.lru_cache(maxsize=None)
+def _solo_artifacts(shape, n, base="szlike"):
+    fields, xis = _traffic(shape, n)
+    return fields, xis, [compress_preserving_mss(f, xi, base=base)
+                         for f, xi in zip(fields, xis)]
+
+
+def _assert_identical(arts, refs):
+    assert len(arts) == len(refs)
+    for a, r in zip(arts, refs):
+        assert a.base_payload == r.base_payload
+        assert a.edit_payload == r.edit_payload
+        assert tuple(a.shape) == tuple(r.shape) and a.dtype == r.dtype
+
+
+# ---------------------------------------------------------------------------
+# byte-identity + ordering
+# ---------------------------------------------------------------------------
+
+def test_stream_matches_one_shot():
+    fields, xis, refs = _solo_artifacts(SHAPE_3D, 6)
+    with CompressStream(window=4, max_batch=4) as cs:
+        arts = cs.map(fields, xis)
+        st = cs.stats()
+    _assert_identical(arts, refs)
+    assert st["completed"] == 6 and st["failed"] == 0
+    assert st["in_flight"] == 0 and st["batches"] >= 2
+    assert 0.0 < st["batch_occupancy"] <= 1.0
+    assert st["nbytes_h2d"] > 0 and st["nbytes_d2h"] > 0
+
+
+def test_ordering_under_out_of_order_completion():
+    """Interleaved specs form separate batches that complete in whatever
+    order the scheduler reaches them; per-request results must still land
+    on the right futures, i.e. map() returns submission order."""
+    f3, xi3, ref3 = _solo_artifacts(SHAPE_3D, 3)
+    f2, xi2, ref2 = _solo_artifacts(SHAPE_2D, 3)
+    fields = [x for pair in zip(f3, f2) for x in pair]
+    xis = [x for pair in zip(xi3, xi2) for x in pair]
+    refs = [x for pair in zip(ref3, ref2) for x in pair]
+    with CompressStream(window=6, max_batch=4) as cs:
+        arts = cs.map(fields, xis)
+        st = cs.stats()
+    _assert_identical(arts, refs)
+    # mixed specs may not share a batch: every dispatched batch was
+    # uniform, so at least one batch per spec
+    assert st["batches"] >= 2
+
+
+def test_mixed_shapes_batch_separately_and_xi_rides_along():
+    fields, xis, refs = _solo_artifacts(SHAPE_3D, 4)
+    # per-request xi within one batch: tighten two members' bounds
+    xis = [xi * (0.5 if i % 2 else 1.0) for i, xi in enumerate(xis)]
+    refs = [compress_preserving_mss(f, xi) for f, xi in zip(fields, xis)]
+    with CompressStream(window=4, max_batch=4) as cs:
+        arts = cs.map(fields, xis)
+    _assert_identical(arts, refs)
+
+
+def test_strict_uniform_rejects_mixed_specs():
+    fields, xis, refs = _solo_artifacts(SHAPE_3D, 2)
+    other = synthetic_field("nyx", shape=SHAPE_2D).astype(np.float32)
+    with CompressStream(window=4, strict_uniform=True) as cs:
+        fut = cs.submit(fields[0], xis[0])
+        with pytest.raises(ValueError, match="strict_uniform"):
+            cs.submit(other, 1e-3)
+        # the pinned spec still serves
+        _assert_identical([fut.result()], [refs[0]])
+
+
+def test_error_propagates_to_the_request_future():
+    fields, xis, refs = _solo_artifacts(SHAPE_3D, 2)
+    with CompressStream(window=4, device_path=True) as cs:
+        bad = cs.submit(fields[0], xis[0], base="zfplike")
+        good = cs.submit(fields[1], xis[1])
+        with pytest.raises(ValueError, match="szlike"):
+            bad.result()
+        _assert_identical([good.result()], [refs[1]])
+        st = cs.stats()
+    assert st["failed"] == 1 and st["completed"] == 1
+
+
+def test_submit_after_close_raises():
+    cs = CompressStream(window=2)
+    cs.close()
+    with pytest.raises(StreamClosed):
+        cs.submit(np.zeros(SHAPE_3D, np.float32), 1e-3)
+
+
+def test_close_drains_a_never_started_stream():
+    """close() must not abandon queued Futures even when the scheduler
+    was never started (start=False)."""
+    fields, xis, refs = _solo_artifacts(SHAPE_3D, 2)
+    cs = CompressStream(window=4, start=False)
+    futs = [cs.submit(f, xi) for f, xi in zip(fields, xis)]
+    cs.close()
+    _assert_identical([f.result(timeout=60) for f in futs], refs)
+
+
+def test_cancelled_future_does_not_kill_the_scheduler():
+    """A caller cancelling a queued request must drop it (slot freed,
+    counted as failed) without crashing the scheduler or starving the
+    other requests."""
+    fields, xis, refs = _solo_artifacts(SHAPE_3D, 3)
+    cs = CompressStream(window=3, max_batch=2, start=False)
+    futs = [cs.submit(f, xi) for f, xi in zip(fields, xis)]
+    assert futs[1].cancel()
+    cs.start()
+    _assert_identical([futs[0].result(timeout=60),
+                       futs[2].result(timeout=60)], [refs[0], refs[2]])
+    cs.flush()
+    st = cs.stats()
+    cs.close()
+    assert st["completed"] == 2 and st["failed"] == 1
+    assert st["in_flight"] == 0
+
+
+# ---------------------------------------------------------------------------
+# backpressure
+# ---------------------------------------------------------------------------
+
+def test_backpressure_window_bound_honored():
+    fields, xis, refs = _solo_artifacts(SHAPE_3D, 4)
+    cs = CompressStream(window=3, max_batch=2, start=False)
+    futs = [cs.submit(fields[i], xis[i], block=False) for i in range(3)]
+    # window full, scheduler not draining: a non-blocking submit must
+    # reject rather than grow the in-flight set
+    with pytest.raises(StreamBackpressure):
+        cs.submit(fields[3], xis[3], block=False)
+    # a blocking submit with a timeout gives up, not deadlocks
+    with pytest.raises(StreamBackpressure):
+        cs.submit(fields[3], xis[3], timeout=0.05)
+    cs.start()
+    futs.append(cs.submit(fields[3], xis[3]))   # blocks until a slot frees
+    arts = [f.result() for f in futs]
+    st = cs.stats()
+    cs.close()
+    _assert_identical(arts, refs)
+    assert st["max_in_flight"] <= 3
+
+
+def test_service_overload_reject_maps_backpressure():
+    with pytest.raises(ValueError):
+        ServiceConfig(overload="nope")
+    fields, xis, refs = _solo_artifacts(SHAPE_3D, 1)
+    svc = CompressionService(ServiceConfig(window=1, overload="reject"))
+    # saturate the single-slot window via the stream's own gate, then a
+    # service submit must surface ServiceOverloaded
+    assert svc._compress._slots.acquire(blocking=False)
+    with pytest.raises(ServiceOverloaded):
+        svc.submit_compress(fields[0], xis[0])
+    svc._compress._slots.release()
+    _assert_identical([svc.compress(fields[0], xis[0])], [refs[0]])
+    svc.close()
+
+
+# ---------------------------------------------------------------------------
+# spec cache
+# ---------------------------------------------------------------------------
+
+def test_spec_cache_lru_eviction():
+    with pytest.raises(ValueError):
+        SpecCache(maxsize=0)
+    c = SpecCache(maxsize=2)
+    assert c.get("a", lambda: 1) == 1
+    assert c.get("b", lambda: 2) == 2
+    assert c.get("a", lambda: -1) == 1          # hit: not rebuilt
+    c.get("c", lambda: 3)                        # evicts b (LRU)
+    assert c.stats()["evictions"] == 1 and len(c) == 2
+    assert c.get("b", lambda: 20) == 20          # b was evicted -> rebuilt
+    s = c.stats()
+    assert s["hits"] == 1 and s["misses"] == 4 and s["size"] == 2
+
+
+def test_stream_cache_hits_and_eviction_counters():
+    fields, xis, refs = _solo_artifacts(SHAPE_3D, 4)
+    with CompressStream(window=4, max_batch=2, cache_size=1) as cs:
+        arts = cs.map(fields, [xis[0]] * 4)      # one spec: same shape + xi
+        cache1 = cs.stats()["cache"]
+        # a second spec (different xi) with cache_size=1 must evict
+        cs.map(fields[:2], [xis[0] * 0.5] * 2)
+        cache2 = cs.stats()["cache"]
+    refs0 = [compress_preserving_mss(f, xis[0]) for f in fields]
+    _assert_identical(arts, refs0)
+    assert cache1["misses"] >= 1 and cache1["hits"] >= 1
+    assert cache2["evictions"] >= 1 and cache2["size"] == 1
+
+
+# ---------------------------------------------------------------------------
+# fix-batching policy
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["auto", "fused", "pipelined"])
+def test_fix_batching_modes_all_byte_identical(mode):
+    fields, xis, refs = _solo_artifacts(SHAPE_3D, 4)
+    with CompressStream(window=4, max_batch=4, fix_batching=mode) as cs:
+        _assert_identical(cs.map(fields, xis), refs)
+
+
+def test_fix_batching_rejects_unknown_mode():
+    with pytest.raises(ValueError, match="fix_batching"):
+        CompressStream(fix_batching="eager")
+
+
+# ---------------------------------------------------------------------------
+# decompress stream
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("base", ["szlike", "zfplike"])
+def test_decompress_stream_parity(base):
+    fields, xis, arts = _solo_artifacts(SHAPE_3D, 4, base=base)
+    want = [decompress_preserving_mss(a) for a in arts]
+    with DecompressStream(window=4, max_batch=4) as ds:
+        gs = ds.map(arts)
+        st = ds.stats()
+    for g, w in zip(gs, want):
+        np.testing.assert_array_equal(g, w)
+    assert st["completed"] == 4 and st["failed"] == 0
+
+
+def test_decompress_stream_mixed_spec_traffic():
+    _, _, a3 = _solo_artifacts(SHAPE_3D, 2)
+    _, _, a2 = _solo_artifacts(SHAPE_2D, 2)
+    arts = [a3[0], a2[0], a3[1], a2[1]]
+    want = [decompress_preserving_mss(a) for a in arts]
+    with DecompressStream(window=4, max_batch=4) as ds:
+        gs = ds.map(arts)
+    for g, w in zip(gs, want):
+        np.testing.assert_array_equal(g, w)
+
+
+# ---------------------------------------------------------------------------
+# sharded backend serving stream members across the mesh
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_dev", [1, 2, 4, 8])
+def test_sharded_stream_parity(n_dev):
+    if N_AVAIL < n_dev:
+        pytest.skip(
+            f"needs {n_dev} devices, have {N_AVAIL} (run under "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+    mesh = make_data_mesh(n_dev)
+    fields, xis, refs = _solo_artifacts(SHAPE_3D, 3)
+    with CompressStream(window=3, max_batch=2, mesh=mesh) as cs:
+        arts = cs.map(fields, xis)
+    _assert_identical(arts, refs)       # mesh changes execution, not bytes
+    want = [decompress_preserving_mss(a) for a in refs]
+    with DecompressStream(window=3, max_batch=2, mesh=mesh) as ds:
+        gs = ds.map(arts)
+    for g, w in zip(gs, want):
+        np.testing.assert_array_equal(g, w)
+
+
+# ---------------------------------------------------------------------------
+# the service layer
+# ---------------------------------------------------------------------------
+
+def test_service_roundtrip_and_stats():
+    fields, xis, refs = _solo_artifacts(SHAPE_3D, 3)
+    with CompressionService(ServiceConfig(window=4, max_batch=2)) as svc:
+        futs = [svc.submit_compress(f, xi) for f, xi in zip(fields, xis)]
+        arts = [f.result() for f in futs]
+        _assert_identical(arts, refs)
+        gs = [svc.decompress(a) for a in arts]
+        for f, xi, g in zip(fields, xis, gs):
+            assert float(np.max(np.abs(f - g))) <= xi * (1 + 1e-6)
+        svc.flush()
+        st = svc.stats()
+    assert st["compress"]["completed"] == 3
+    assert st["decompress"]["completed"] == 3
+    assert st["uptime_s"] > 0
+    assert st["config"]["window"] == 4
+
+
+def test_service_stats_http_endpoint():
+    fields, xis, _ = _solo_artifacts(SHAPE_3D, 1)
+    with CompressionService(ServiceConfig(window=2)) as svc:
+        svc.compress(fields[0], xis[0])
+        server = start_stats_server(svc, port=0)
+        try:
+            host, port = server.server_address[:2]
+            with urllib.request.urlopen(
+                    f"http://{host}:{port}/stats", timeout=5) as resp:
+                doc = json.loads(resp.read())
+            assert doc["compress"]["completed"] == 1
+            assert "fields_per_sec" in doc["compress"]
+            assert "cache" in doc["compress"]
+            with urllib.request.urlopen(
+                    f"http://{host}:{port}/healthz", timeout=5) as resp:
+                assert resp.read().strip() == b"ok"
+        finally:
+            server.shutdown()
