@@ -21,14 +21,16 @@ def main() -> None:
     quick = not args.full
 
     from . import (fig1_label_distortion, table1_components, table2_overhead,
-                   table3_decompress, table4_stream, fig7_fixed_bound,
-                   fig8_fixed_bitrate, fig9_scaling, fig11_convergence)
+                   table3_decompress, table4_stream, table5_fixloop,
+                   fig7_fixed_bound, fig8_fixed_bitrate, fig9_scaling,
+                   fig11_convergence)
     modules = {
         "fig1": fig1_label_distortion,
         "table1": table1_components,
         "table2": table2_overhead,
         "table3": table3_decompress,
         "table4": table4_stream,
+        "table5": table5_fixloop,   # also writes BENCH_fixloop.json
         "fig7": fig7_fixed_bound,
         "fig8": fig8_fixed_bitrate,
         "fig9": fig9_scaling,

@@ -1,0 +1,186 @@
+"""One-shot calibration of the stream's fused-vs-pipelined fix policy.
+
+``CompressStream`` has two ways to run a coalesced batch's fix loops:
+ONE batched while_loop over all members (``_device_batch_stage`` —
+amortizes dispatch overhead, but every member computes until the slowest
+converges, and the active-member compaction that recovers most of that
+waste still pays per-round gather/scatter), or per-member solo loops
+behind a shared vmapped transform (``_device_pipelined_stage`` — each
+member stops exactly at its own convergence, but pays a full dispatch).
+The crossover is a machine property, not a constant: it moves with
+dispatch latency, with whether the Pallas stencils interpret or lower,
+and with the platform's step throughput. Earlier revisions hardcoded it
+at 16^3 voxels; this module measures it.
+
+Cost model (per batch member with V voxels, fitted from probe runs):
+
+* pipelined:  ``O + s*V``  — per-dispatch overhead O plus the solo
+  per-voxel step cost s (two probe sizes separate O from s);
+* fused:      ``sv*V``     — the *marginal* per-voxel cost of one more
+  member inside the batched while_loop (a B=2 run minus the solo run).
+
+Fusing a member wins while ``O + s*V > sv*V``, i.e. for
+``V < O / (sv - s)``; when the batched lane is no more expensive than
+the solo step (``sv <= s``) fusing always wins. The measured threshold
+is clamped to ``CLAMP`` (2^9..2^21 voxels) so one noisy probe can never
+push the policy into a pathological regime, and cached per
+(backend name, dtype, jax platform) — calibration runs once per
+process, not once per stream.
+
+``MSZ_FUSED_FIX_VOXELS`` overrides everything (an explicit integer
+voxel threshold; useful for pinning the policy in CI or benchmarking a
+specific mode), and an explicit ``fused_fix_voxels=<int>`` stream
+argument overrides even that.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import threading
+import time
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+ENV_VAR = "MSZ_FUSED_FIX_VOXELS"
+CLAMP = (1 << 9, 1 << 21)
+#: probe fields: two sizes to separate per-dispatch overhead from
+#: per-voxel step cost (both converge in one fix iteration, so timings
+#: compare one step plus overhead, never iteration-count noise)
+PROBES = ((8, 8, 8), (16, 16, 16))
+_REPS = 3
+
+#: number of real measurements taken (not env/cache hits) — lets tests
+#: assert the cache actually short-circuits repeat calls
+measure_count = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class FixCalibration:
+    """One calibration outcome: the policy threshold plus the fitted
+    model terms behind it (zeros when ``source == "env"``)."""
+    threshold_voxels: int     # fuse members with V <= this many voxels
+    overhead_s: float         # fitted per-dispatch overhead O
+    solo_voxel_s: float       # fitted solo per-voxel step cost s
+    batched_voxel_s: float    # marginal batched per-voxel cost sv
+    source: str               # "env" | "measured"
+
+
+_cache: Dict[Tuple, FixCalibration] = {}
+_lock = threading.Lock()
+
+
+def clear_cache() -> None:
+    """Drop every cached measurement (tests; a live process never
+    needs this — the machine does not change under it)."""
+    with _lock:
+        _cache.clear()
+
+
+def _env_threshold() -> Optional[int]:
+    raw = os.environ.get(ENV_VAR, "").strip()
+    if not raw:
+        return None
+    try:
+        v = int(raw)
+    except ValueError:
+        raise ValueError(
+            f"{ENV_VAR} must be an integer voxel threshold, got {raw!r}"
+        ) from None
+    if v < 0:
+        raise ValueError(f"{ENV_VAR} must be >= 0, got {v}")
+    return v
+
+
+def _time_best(fn, reps: int = _REPS) -> float:
+    """Best-of-``reps`` wall time of ``fn`` after one untimed warm-up
+    call (the warm-up absorbs trace + compile; min-of-N is the robust
+    estimator for a fixed-work measurement under scheduler noise)."""
+    fn()
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _measure(be, dtype) -> FixCalibration:
+    global measure_count
+    import jax
+    import jax.numpy as jnp
+
+    from ..core import fixes
+
+    measure_count += 1
+    rng = np.random.default_rng(0)
+    t_solo = []
+    probes = []
+    for shape in PROBES:
+        f = jnp.asarray(rng.standard_normal(shape).astype(dtype))
+        topo = fixes.field_topology(f, 0.1)
+        probes.append((f, topo))
+
+        def run(f=f, topo=topo):
+            jax.block_until_ready(
+                fixes.fused_fix(f, topo, max_iters=8, backend=be)[0])
+
+        t_solo.append(_time_best(run))
+
+    v1, v2 = (int(np.prod(p)) for p in PROBES)
+    s = max((t_solo[1] - t_solo[0]) / (v2 - v1), 0.0)
+    overhead = max(t_solo[0] - s * v1, 0.0)
+
+    # marginal cost of a second member in the batched while_loop, at the
+    # larger probe (identical members => identical iteration counts, so
+    # the difference is pure lane cost, not straggler wait)
+    f2, topo2 = probes[1]
+    g_b = jnp.stack([f2, f2])
+    topo_b = jax.tree_util.tree_map(lambda x: jnp.stack([x, x]), topo2)
+
+    def run_b2():
+        jax.block_until_ready(
+            fixes.fused_fix_batch(g_b, topo_b, max_iters=8, backend=be,
+                                  batching="fused")[0])
+
+    sv = max((_time_best(run_b2) - t_solo[1]) / v2, 0.0)
+
+    if sv <= s:                     # batched lane free or cheaper: always fuse
+        thr = CLAMP[1]
+    else:
+        thr = int(overhead / (sv - s))
+    thr = max(CLAMP[0], min(CLAMP[1], thr))
+    return FixCalibration(threshold_voxels=thr, overhead_s=overhead,
+                          solo_voxel_s=s, batched_voxel_s=sv,
+                          source="measured")
+
+
+def fused_fix_threshold(backend, dtype=np.float32) -> FixCalibration:
+    """The fused-vs-pipelined voxel threshold for ``backend`` on this
+    machine: the ``MSZ_FUSED_FIX_VOXELS`` override when set, else the
+    cached measurement for (backend name, dtype, jax platform), else a
+    fresh probe run (see module docstring for the model).
+
+    ``backend`` is a resolved stencil backend instance (or a registry
+    name); distributed backends never reach this policy — the stream
+    always batch-dispatches them since their fix loops run members
+    sequentially either way."""
+    env = _env_threshold()
+    if env is not None:
+        return FixCalibration(threshold_voxels=env, overhead_s=0.0,
+                              solo_voxel_s=0.0, batched_voxel_s=0.0,
+                              source="env")
+    import jax
+
+    if isinstance(backend, str):
+        from ..core.backend import resolve_backend
+        backend = resolve_backend(backend, PROBES[0], np.dtype(dtype))
+    key = (getattr(backend, "name", str(backend)), np.dtype(dtype).str,
+           jax.default_backend())
+    with _lock:
+        hit = _cache.get(key)
+    if hit is not None:
+        return hit
+    cal = _measure(backend, np.dtype(dtype))
+    with _lock:
+        return _cache.setdefault(key, cal)

@@ -20,7 +20,11 @@ host (idle while the fix loop runs). This module overlaps the three:
   fix loop specializes on ~log2(window) batch sizes instead of one per
   occupancy (the PR-4 pad-to-pow2 trick applied to the batch axis).
   Mixed-spec traffic batches separately; ``strict_uniform=True`` rejects
-  it at submit instead.
+  it at submit instead. Whether a batch's fix loops then run fused
+  (one batched while_loop with active-member compaction) or pipelined
+  (per-member solo loops) is decided by a measured per-machine voxel
+  threshold (``compress.calibrate``), not a hardcoded size cutoff; the
+  decision taken per batch is visible in ``stats()['fix_modes']``.
 * **backpressure** — ``window`` bounds in-flight requests; ``submit``
   blocks (or raises ``StreamBackpressure`` with ``block=False``) until a
   slot frees, so memory stays O(window · field) however fast producers
@@ -49,7 +53,7 @@ import numpy as np
 
 from ..core import fixes
 from ..core.backend import BackendLike, resolve_backend
-from . import pipeline
+from . import calibrate, pipeline
 
 
 class StreamBackpressure(RuntimeError):
@@ -156,7 +160,7 @@ class _StreamBase:
                  strict_uniform: bool = False,
                  pad_pow2: bool = True,
                  fix_batching: str = "auto",
-                 fused_fix_voxels: int = 4096,
+                 fused_fix_voxels: Optional[int] = None,
                  cache_size: int = 32,
                  start: bool = True):
         if window < 1:
@@ -177,7 +181,10 @@ class _StreamBase:
         self._strict = strict_uniform
         self._pad_pow2 = pad_pow2
         self._fix_batching = fix_batching
+        # None => derive the fused-vs-pipelined threshold from the
+        # one-shot machine calibration (compress.calibrate) on first use
         self._fused_fix_voxels = fused_fix_voxels
+        self._fix_mode_counts: Dict[str, int] = {}
         self.cache = SpecCache(cache_size)
 
         self._slots = threading.Semaphore(window)
@@ -387,6 +394,15 @@ class _StreamBase:
             self._nbytes_d2h += nbytes_d2h
             self._t_device += t_device
 
+    def _note_fix_mode(self, mode: str) -> None:
+        """Record which fix-loop strategy one dispatched batch took
+        ("fused" / "pipelined" / "host") — surfaced per-mode in
+        ``stats()['fix_modes']`` so the service /stats endpoint exposes
+        the calibrated policy's actual decisions, not just its
+        threshold."""
+        with self._lock:
+            self._fix_mode_counts[mode] = self._fix_mode_counts.get(mode, 0) + 1
+
     def stats(self) -> Dict[str, object]:
         """Live counter snapshot — the service stats endpoint surfaces
         this dict as JSON. ``fields_per_sec`` covers first submit to last
@@ -419,6 +435,8 @@ class _StreamBase:
                 t_encode_s=self._t_encode,
                 fields_per_sec=(self._completed / elapsed
                                 if elapsed and self._completed else 0.0),
+                fix_modes=dict(self._fix_mode_counts),
+                fused_fix_voxels=self._fused_fix_voxels,
                 cache=self.cache.stats(),
             )
 
@@ -522,6 +540,7 @@ class CompressStream(_StreamBase):
             # host byte-codec path (zfplike base, unsupported dtype, range
             # precondition failures, ...): one whole-batch worker job so
             # the scheduler stays free for the next batch's device stage
+            self._note_fix_mode("host")
             self._pool.submit(self._host_batch, batch, fields, xi_arr,
                               base, evd)
             return
@@ -540,9 +559,11 @@ class CompressStream(_StreamBase):
             steps = steps + [steps[-1]] * pad
         t0 = time.perf_counter()
         if self._use_fused_fix(fields[0], be):
+            self._note_fix_mode("fused")
             db = pipeline._device_batch_stage(fields, xi_arr, be,
                                               self._max_iters, steps)
         else:
+            self._note_fix_mode("pipelined")
             db = pipeline._device_pipelined_stage(fields, xi_arr, be,
                                                   self._max_iters, steps,
                                                   n_real=B)
@@ -555,17 +576,26 @@ class CompressStream(_StreamBase):
         """Whether this batch's fix loops run as ONE batched while_loop
         (``_device_batch_stage``) or as per-member solo loops behind a
         shared vmapped transform (``_device_pipelined_stage``). The
-        batched loop amortizes dispatch overhead but computes every
-        member until the slowest converges (B x max(iters) work, and
-        vmapped interpret-mode Pallas stencils pay a further per-
-        iteration penalty), so "auto" fuses only small members — up to
-        ``fused_fix_voxels`` (default 16^3) — where dispatch overhead
-        dominates. Distributed backends always take the batch stage
-        (their fix loops run members sequentially either way)."""
+        batched loop amortizes dispatch overhead but holds every member
+        until its compaction round retires it (and vmapped interpret-
+        mode Pallas stencils pay a further per-iteration penalty), so
+        "auto" fuses only members small enough that dispatch overhead
+        dominates — up to ``fused_fix_voxels`` voxels. That threshold
+        is no longer a hardcoded constant: when the constructor leaves
+        it ``None``, the first auto decision runs the one-shot machine
+        calibration (``compress.calibrate``, cached per backend/dtype/
+        platform, ``MSZ_FUSED_FIX_VOXELS`` overrides). Distributed
+        backends always take the batch stage (their fix loops run
+        members sequentially either way)."""
         if hasattr(be, "fix_loop"):
             return True
         if self._fix_batching != "auto":
             return self._fix_batching == "fused"
+        if self._fused_fix_voxels is None:
+            # scheduler-thread only, so the lazy fill needs no lock;
+            # stats() readers see None until the first auto decision
+            self._fused_fix_voxels = calibrate.fused_fix_threshold(
+                be, field.dtype).threshold_voxels
         return field.size <= self._fused_fix_voxels
 
     def _host_batch(self, batch: List[_Request], fields, xi_arr,

@@ -11,7 +11,7 @@ from .backend import (StencilMasks, ReferenceBackend, PallasBackend,
                       resolve_backend)
 from .fixes import (FieldTopo, field_topology, false_critical_masks,
                     trouble_masks, fused_pass, fused_fix, fused_fix_batch,
-                    paper_fix)
+                    fused_fix_worklist, paper_fix)
 from .driver import (MszResult, derive_edits, derive_edits_batch, apply_edits,
                      verify_preservation)
 
@@ -23,7 +23,8 @@ __all__ = [
     "StencilMasks", "ReferenceBackend", "PallasBackend",
     "register_backend", "available_backends", "get_backend", "resolve_backend",
     "FieldTopo", "field_topology", "false_critical_masks", "trouble_masks",
-    "fused_pass", "fused_fix", "fused_fix_batch", "paper_fix",
+    "fused_pass", "fused_fix", "fused_fix_batch", "fused_fix_worklist",
+    "paper_fix",
     "MszResult", "derive_edits", "derive_edits_batch", "apply_edits",
     "verify_preservation",
 ]

@@ -223,12 +223,28 @@ class PallasBackend:
     kernels evaluate boundaries in global coordinates, and only interior
     slabs are kept.
 
-    ``interpret``: None = auto (interpret off-TPU, compiled on TPU).
+    ``interpret``: None = auto (lowered on TPU/GPU, interpreted
+    elsewhere; ``MSZ_PALLAS_INTERPRET`` overrides — see
+    ``kernels.extrema.default_interpret``).
+
+    ``worklist`` / ``worklist_group`` / ``worklist_min_slabs``: the
+    dirty-slab worklist loop (DESIGN.md §7). ``None`` engages it
+    automatically for solo fix loops on fields of at least
+    ``worklist_min_slabs`` slabs; True/False force it. The slab axis is
+    split into groups of ``worklist_group`` slabs, and each iteration
+    re-runs the stencils only on groups within 2 slabs of an edit target
+    of the previous iteration (``lax.cond`` keeps the skip inside jit) —
+    bitwise identical to the dense loop, because a slab's fresh masks are
+    a function of g on its 2-slab neighborhood and untouched
+    neighborhoods reproduce last iteration's masks exactly.
     """
     name: str = "pallas"
     z_tile: Optional[int] = None
     vmem_slab_budget: int = 256
     interpret: Optional[bool] = None
+    worklist: Optional[bool] = None
+    worklist_group: int = 8
+    worklist_min_slabs: int = 64
 
     def supports(self, shape: Tuple[int, ...], dtype) -> bool:
         """Non-empty 2D/3D floating-point fields (slab kernels)."""
@@ -259,7 +275,7 @@ class PallasBackend:
         """Pull-based edit application via the slab kernel:
         (g_next, n_violations)."""
         from ..kernels.fixpass import fix_pass_pallas
-        g2, viol = fix_pass_pallas(
+        g2, viol, _ = fix_pass_pallas(
             g, topo.lower, masks.self_edit, masks.demote_src,
             masks.promote_src, masks.up_c_g, masks.dn_c_f,
             interpret=self._interpret())
@@ -329,7 +345,7 @@ class PallasBackend:
                 slab_lo=a, n_slabs_total=n)
             c, d = max(z0 - 1, 0), min(z1 + 1, n)
             ss = slice(c - a, d - a)
-            g2, _ = fix_pass_pallas(
+            g2, _, _ = fix_pass_pallas(
                 g[c:d], topo.lower[c:d],
                 masks.self_edit[ss], masks.demote_src[ss],
                 masks.promote_src[ss], masks.up_c_g[ss], topo.dn_c[c:d],
@@ -340,6 +356,101 @@ class PallasBackend:
                            + jnp.sum(masks.demote_src[tp])
                            + jnp.sum(masks.promote_src[tp])).astype(jnp.int32)
         return jnp.concatenate(outs, axis=0), viol
+
+    # -- dirty-slab worklist loop (DESIGN.md §7) -----------------------
+    def use_worklist(self, shape: Tuple[int, ...]) -> bool:
+        """Whether a solo fix loop on ``shape`` should run through
+        ``worklist_loop``. Explicit ``worklist=True/False`` wins; auto
+        (None) engages above ``worklist_min_slabs`` slabs, where the
+        per-group ``lax.cond`` overhead is small against the stencil
+        work a converged group saves."""
+        if len(shape) not in (2, 3):
+            return False
+        if self.worklist is not None:
+            return bool(self.worklist) and shape[0] >= 2
+        return shape[0] >= self.worklist_min_slabs
+
+    def worklist_loop(self, g0: jnp.ndarray, topo, *, max_iters: int):
+        """The fused fix loop with per-slab-group early exit: returns
+        (g, iters, converged, skipped_slabs), the first three bitwise
+        equal to the dense loop's.
+
+        Iteration state carries the previous pass's per-slab fix-source
+        and edit-target counts. A group of slabs re-runs the stencils iff
+        any slab within 2 slabs of the group carried an edit target last
+        iteration; other groups reuse their g slice (unchanged by
+        construction) and their stale — still exact — source counts. The
+        2-slab radius is the stencil dependency depth: a slab's fix
+        output reads masks one slab out, and those masks read g one slab
+        further (DESIGN.md §7 gives the induction). Convergence tests the
+        summed source counts, identical to the dense loop's violation
+        count, so iteration counts match too. ``skipped_slabs``
+        accumulates slabs whose group was skipped, summed over
+        iterations (the benchmark's worklist-win metric).
+        """
+        from ..kernels.fixpass import fix_pass_pallas
+        n = g0.shape[0]
+        wg = max(int(self.worklist_group), 1)
+        groups = tuple((z0, min(z0 + wg, n)) for z0 in range(0, n, wg))
+        interp = self._interpret()
+
+        def tile_step(g, gi):
+            z0, z1 = groups[gi]
+            a, b = max(z0 - 2, 0), min(z1 + 2, n)
+            ext = slice(a, b)
+            masks = self.extrema_masks(
+                g[ext], jax.tree_util.tree_map(lambda x: x[ext], topo),
+                slab_lo=a, n_slabs_total=n)
+            c, d = max(z0 - 1, 0), min(z1 + 1, n)
+            ss = slice(c - a, d - a)
+            g2, src, tgt = fix_pass_pallas(
+                g[c:d], topo.lower[c:d],
+                masks.self_edit[ss], masks.demote_src[ss],
+                masks.promote_src[ss], masks.up_c_g[ss], topo.dn_c[c:d],
+                interpret=interp, slab_lo=c, n_slabs_total=n)
+            tp = slice(z0 - c, z0 - c + (z1 - z0))
+            return g2[tp], src[tp], tgt[tp]
+
+        def body(state):
+            g, it, src, tgt, skipped = state
+            dirty = tgt > 0
+            run_slab = dirty
+            for s in (1, 2):        # dilate by the 2-slab stencil radius
+                run_slab = (run_slab
+                            | jnp.pad(dirty[s:], (0, s))
+                            | jnp.pad(dirty[:-s], (s, 0)))
+            parts_g, parts_s, parts_t = [], [], []
+            for gi, (z0, z1) in enumerate(groups):
+                run = jnp.any(run_slab[z0:z1])
+
+                def compute(ops, gi=gi):
+                    return tile_step(ops[0], gi)
+
+                def reuse(ops, z0=z0, z1=z1):
+                    return (jax.lax.slice_in_dim(ops[0], z0, z1),
+                            jax.lax.slice_in_dim(ops[1], z0, z1),
+                            jnp.zeros(z1 - z0, jnp.int32))
+
+                tg, ts, tt = jax.lax.cond(run, compute, reuse, (g, src))
+                parts_g.append(tg)
+                parts_s.append(ts)
+                parts_t.append(tt)
+                skipped = skipped + jnp.where(run, 0, z1 - z0)
+            return (jnp.concatenate(parts_g, axis=0), it + 1,
+                    jnp.concatenate(parts_s, axis=0),
+                    jnp.concatenate(parts_t, axis=0), skipped)
+
+        def cond(state):
+            _, it, src, _, _ = state
+            return (jnp.sum(src) > 0) & (it < max_iters)
+
+        # first iteration unconditionally runs every group (tgt
+        # sentinel 1s), mirroring the dense loop's step-then-while shape
+        state0 = (g0, jnp.int32(0), jnp.zeros(n, jnp.int32),
+                  jnp.ones(n, jnp.int32), jnp.int32(0))
+        g, it, src, tgt, skipped = jax.lax.while_loop(cond, body,
+                                                      body(state0))
+        return g, it, jnp.sum(src) == 0, skipped
 
 
 # ---------------------------------------------------------------------------
@@ -442,3 +553,7 @@ register_backend(ReferenceBackend())
 register_backend(PallasBackend())
 # small fixed tile: exercises the halo-exchange path on modest fields
 register_backend(PallasBackend(name="pallas_tiled", z_tile=8))
+# worklist always on with small groups: exercises the dirty-slab loop
+# (and its skip path) on modest fields
+register_backend(PallasBackend(name="pallas_worklist", worklist=True,
+                               worklist_group=4))

@@ -98,15 +98,21 @@ def derive_edits(f, f_hat, xi: float, mode: Mode = "fused",
 def derive_edits_batch(f, f_hat, xi: Union[float, Sequence[float]],
                        max_iters: int = 512,
                        backend: BackendLike = "auto",
-                       mesh=None) -> List[MszResult]:
+                       mesh=None, batching: str = "auto",
+                       compact_every: int = 8) -> List[MszResult]:
     """Batched ``derive_edits`` over a leading batch axis (fused mode).
 
     ``f``/``f_hat``: (B, *spatial) with spatial rank 2 or 3; ``xi`` is a
-    scalar shared by every member or a per-member sequence of length B.
-    The fix loops of all members run in one vmapped while_loop
-    (fixes.fused_fix_batch), so many small fields pipeline through the
-    stencil backend together instead of paying B sequential dispatches.
-    Per-member results are bitwise identical to solo derive_edits calls.
+    scalar shared by every member or a per-member sequence of length B
+    (each member's topology, and so its compaction trajectory, honors its
+    own bound). The fix loops of all members run through the vmapped
+    batch driver (fixes.fused_fix_batch), so many small fields pipeline
+    through the stencil backend together instead of paying B sequential
+    dispatches; ``batching``/``compact_every`` select its early-exit
+    strategy — by default still-active members are compacted into
+    power-of-two buckets every ``compact_every`` iterations, so members
+    that converge early stop costing vmap lanes. Per-member results are
+    bitwise identical to solo derive_edits calls under every strategy.
     """
     f = jnp.asarray(f)
     f_hat = jnp.asarray(f_hat, f.dtype)
@@ -125,7 +131,9 @@ def derive_edits_batch(f, f_hat, xi: Union[float, Sequence[float]],
     topo_b = jax.tree_util.tree_map(lambda *leaves: jnp.stack(leaves), *topos)
     be = resolve_backend(backend, f.shape[1:], f.dtype, mesh=mesh)
     g_b, iters_b, ok_b = fixes.fused_fix_batch(f_hat, topo_b,
-                                               max_iters=max_iters, backend=be)
+                                               max_iters=max_iters, backend=be,
+                                               batching=batching,
+                                               compact_every=compact_every)
     g_b = np.asarray(g_b)
     return [_package_result(f[i], f_hat[i], g_b[i], iters_b[i], ok_b[i],
                             be.name)

@@ -98,6 +98,11 @@ def _fused_fix_impl(g0: jnp.ndarray, topo: FieldTopo, max_iters: int,
         # distributed backends run the whole loop inside one shard_map
         # (topology halos exchanged once); trajectory is bitwise equal
         return be.fix_loop(g0, topo, max_iters=max_iters)
+    if hasattr(be, "worklist_loop") and be.use_worklist(g0.shape):
+        # dirty-slab worklist: re-runs the stencils only near last
+        # iteration's edit targets; bitwise equal to the dense loop
+        g, iters, ok, _ = be.worklist_loop(g0, topo, max_iters=max_iters)
+        return g, iters, ok
 
     def cond(state):
         g, it, viol = state
@@ -128,6 +133,30 @@ def fused_fix(g0: jnp.ndarray, topo: FieldTopo, max_iters: int = 512,
 
 
 @functools.partial(jax.jit, static_argnames=("max_iters", "backend"))
+def _worklist_fix_impl(g0: jnp.ndarray, topo: FieldTopo, max_iters: int,
+                       backend):
+    return backend.worklist_loop(g0, topo, max_iters=max_iters)
+
+
+def fused_fix_worklist(g0: jnp.ndarray, topo: FieldTopo,
+                       max_iters: int = 512,
+                       backend: BackendLike = "pallas_worklist", mesh=None):
+    """Run the fused loop through a backend's dirty-slab worklist driver
+    (DESIGN.md §7), regardless of its auto-engage threshold. Returns
+    (g, iters, converged, skipped_slabs) with the first three bitwise
+    equal to ``fused_fix``; ``skipped_slabs`` counts slabs whose group
+    was skipped, summed over iterations — the worklist's win metric,
+    nonzero whenever violations stay localized for an iteration or more.
+    """
+    be = _bind(resolve_backend(backend, g0.shape, g0.dtype, mesh=mesh))
+    if not hasattr(be, "worklist_loop"):
+        raise ValueError(
+            f"backend {be.name!r} has no dirty-slab worklist driver; "
+            "use the pallas backend family")
+    return _worklist_fix_impl(g0, topo, max_iters=max_iters, backend=be)
+
+
+@functools.partial(jax.jit, static_argnames=("max_iters", "backend"))
 def _fused_fix_batch_impl(g0: jnp.ndarray, topo: FieldTopo, max_iters: int,
                           backend):
     be = backend
@@ -155,23 +184,123 @@ def _fused_fix_batch_impl(g0: jnp.ndarray, topo: FieldTopo, max_iters: int,
     return g, iters_b, viol == 0
 
 
+def _pow2_at_least(n: int) -> int:
+    """Smallest power of two >= n (compaction bucket sizes; twin of
+    compress.pipeline's helper, duplicated to keep core below compress)."""
+    return 1 << max(int(n) - 1, 0).bit_length()
+
+
+@functools.partial(jax.jit, static_argnames=("k", "backend"))
+def _fused_fix_round_impl(g0: jnp.ndarray, topo: FieldTopo,
+                          viol0: jnp.ndarray, k: int, backend):
+    """Up to ``k`` iterations of the vmapped fused loop on one compaction
+    bucket. ``viol0`` is each member's violation count entering the round
+    (the first round passes a 1-sentinel so every member takes the dense
+    loop's unconditional first step); members whose count hits 0 freeze,
+    exactly as in ``_fused_fix_batch_impl``, so per-member trajectories
+    stay bitwise equal to solo runs. Returns (g, iters_this_round, viol).
+    """
+    be = backend
+    step = jax.vmap(be.fused_step, in_axes=(0, 0))
+
+    def cond(state):
+        _, it, _, viol = state
+        return jnp.any(viol > 0) & (it < k)
+
+    def body(state):
+        g, it, iters_b, viol = state
+        g2, viol2 = step(g, topo)
+        active = viol > 0
+        keep = active.reshape((-1,) + (1,) * (g.ndim - 1))
+        return (jnp.where(keep, g2, g), it + 1,
+                iters_b + active.astype(jnp.int32),
+                jnp.where(active, viol2, viol))
+
+    iters0 = jnp.zeros(g0.shape[0], jnp.int32)
+    g, _, iters_b, viol = jax.lax.while_loop(
+        cond, body, (g0, jnp.int32(0), iters0, viol0))
+    return g, iters_b, viol
+
+
+def _fused_fix_batch_compact(g0: jnp.ndarray, topo: FieldTopo,
+                             max_iters: int, be, every: int):
+    """Active-member compaction driver: the batched loop in host-driven
+    rounds of ``every`` iterations, with still-active members gathered
+    into a dense prefix between rounds so converged members stop costing
+    vmap lanes. Buckets are padded to power-of-two sizes (repeating an
+    active member; its result is discarded) so jit specializes on
+    ~log2(B) bucket shapes, not one per occupancy. Per-member results are
+    bitwise equal to ``_fused_fix_batch_impl``'s: gather/scatter move
+    exact copies, the vmapped step is elementwise per member, and every
+    member still in a bucket has run exactly the global iteration count.
+    """
+    B = g0.shape[0]
+    g = g0
+    viol = np.ones(B, np.int32)        # 1-sentinel: everyone steps once
+    iters = np.zeros(B, np.int32)
+    active = np.arange(B)
+    it_done = 0
+    while active.size and it_done < max_iters:
+        k = min(every, max_iters - it_done)
+        cap = _pow2_at_least(active.size)
+        sel = np.concatenate(
+            [active, np.full(cap - active.size, active[0], active.dtype)])
+        sel_j = jnp.asarray(sel)
+        g_a = jnp.take(g, sel_j, axis=0)
+        topo_a = jax.tree_util.tree_map(
+            lambda x: jnp.take(x, sel_j, axis=0), topo)
+        viol_a = jnp.asarray(np.concatenate(
+            [viol[active], np.zeros(cap - active.size, np.int32)]))
+        g_a, dit_a, viol_a = _fused_fix_round_impl(g_a, topo_a, viol_a,
+                                                   k=k, backend=be)
+        n = active.size
+        g = g.at[jnp.asarray(active)].set(g_a[:n])
+        dit = np.asarray(dit_a[:n])    # host sync: one small pull per round
+        viol_n = np.asarray(viol_a[:n])
+        iters[active] += dit
+        viol[active] = viol_n
+        it_done += k
+        active = active[viol_n > 0]
+    return g, jnp.asarray(iters), jnp.asarray(viol == 0)
+
+
 def fused_fix_batch(g0: jnp.ndarray, topo: FieldTopo, max_iters: int = 512,
-                    backend: BackendLike = "auto", mesh=None):
+                    backend: BackendLike = "auto", mesh=None,
+                    batching: str = "auto", compact_every: int = 8):
     """Batched fused loop over a leading batch axis (many-field workloads:
     timestep series, ensemble members).
 
     ``g0``: (B, *spatial); every FieldTopo leaf carries the same leading
-    batch axis. The per-iteration pass is vmapped across the batch and the
-    loop runs until every member converges; members that converge early
-    are frozen, so each member's (g, iters) is bitwise identical to a solo
-    ``fused_fix`` run. Returns (g (B, *spatial), iters (B,), converged
-    (B,) bool).
+    batch axis. The per-iteration pass is vmapped across the batch and
+    members that converge early stop costing work, so each member's
+    (g, iters) is bitwise identical to a solo ``fused_fix`` run. Returns
+    (g (B, *spatial), iters (B,), converged (B,) bool).
+
+    ``batching`` picks the early-exit mechanism — the choice never
+    changes results, only cost:
+
+    * ``"compact"`` — active-member compaction (DESIGN.md §7): every
+      ``compact_every`` iterations the still-active members are gathered
+      into a power-of-two bucket and only that bucket runs the next
+      round, so batch cost approaches sum(iters) instead of
+      B x max(iters).
+    * ``"fused"`` — the legacy single vmapped while_loop: converged
+      members are frozen by a ``where`` but still occupy vmap lanes
+      until the slowest member converges.
+    * ``"auto"`` — compaction for B > 1, the plain loop for B == 1
+      (a single member has nothing to compact away).
 
     With a sharded backend (``mesh`` with >= 2 data-axis devices, or
     backend="sharded") the members run sequentially through the mesh —
     each member still bitwise equal to its solo run; vmap over shard_map
-    is not attempted.
+    is not attempted and ``batching`` is ignored.
     """
+    if batching not in ("auto", "compact", "fused"):
+        raise ValueError(
+            'batching must be "auto", "compact", or "fused"; '
+            f"got {batching!r}")
+    if compact_every < 1:
+        raise ValueError(f"compact_every must be >= 1, got {compact_every}")
     be = _bind(resolve_backend(backend, g0.shape[1:], g0.dtype, mesh=mesh))
     if hasattr(be, "fix_loop"):
         outs = [_fused_fix_impl(g0[i],
@@ -181,6 +310,11 @@ def fused_fix_batch(g0: jnp.ndarray, topo: FieldTopo, max_iters: int = 512,
         return (jnp.stack([g for g, _, _ in outs]),
                 jnp.stack([it for _, it, _ in outs]),
                 jnp.stack([ok for _, _, ok in outs]))
+    if batching == "auto":
+        batching = "compact" if g0.shape[0] > 1 else "fused"
+    if batching == "compact":
+        return _fused_fix_batch_compact(jnp.asarray(g0), topo, max_iters,
+                                        be, compact_every)
     return _fused_fix_batch_impl(g0, topo, max_iters=max_iters, backend=be)
 
 

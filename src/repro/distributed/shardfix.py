@@ -152,7 +152,7 @@ def _spmd_step(g_loc: jnp.ndarray, topo_ext, *, N: int, L: int, n_dev: int,
     self_e, dem_e, pro_e, upc_e = jnp.concatenate([m_lo, stacked, m_hi],
                                                   axis=1)
 
-    g2_ext, _ = fix_pass_pallas(
+    g2_ext, _, _ = fix_pass_pallas(
         g_ext, topo_ext.lower, self_e, dem_e, pro_e, upc_e, topo_ext.dn_c,
         interpret=interpret, slab_lo=slab_lo, n_slabs_total=N)
 
@@ -188,9 +188,90 @@ def _shard_args(g, topo, mesh, axis_name):
 # full distributed loop (one shard_map around the whole while_loop)
 # ---------------------------------------------------------------------------
 
+def _spmd_step_worklist(g_loc, run, src_loc, cache, topo_ext, *, N, L, n_dev,
+                        axis_name, interpret):
+    """One worklist fix iteration on a local (L, ...) slab block.
+
+    ``run``: this device's kernel predicate — False means no edit target
+    landed within 2 slabs of this block last iteration, so its masks and
+    its g block are unchanged by construction and both kernels sit under
+    an untaken ``lax.cond``. The collectives stay UNCONDITIONAL on every
+    device (SPMD programs must keep collectives aligned): a skipped
+    device re-sends its ``cache`` — the interior-edge mask slabs of the
+    last iteration it ran, still exact — so running neighbors see the
+    same halos a dense iteration would deliver. ``src_loc`` carries the
+    device's fix-source count; stale counts of skipped devices remain
+    valid (nothing in their 2-slab dependency radius changed), so the
+    psummed convergence predicate — and the iteration count — matches
+    the dense loop exactly.
+
+    Returns (g_next, viol_global, src_next, cache_next, run_next);
+    ``run_next`` folds this device's own edit targets with the 2-edge
+    target flags ppermuted from its chain neighbors.
+    """
+    z0 = jax.lax.axis_index(axis_name).astype(jnp.int32) * L
+    slab_lo = z0 - 1
+    plane = g_loc.shape[1:]
+    interior = slice(1, L + 1)
+    fwd = [(d, d + 1) for d in range(n_dev - 1)]
+    bwd = [(d + 1, d) for d in range(n_dev - 1)]
+
+    g_ext = with_halo(g_loc, axis_name, n_dev)
+
+    def do_masks(_):
+        up_c, _, selfe, dem, pro = extrema_masks_pallas(
+            g_ext, topo_ext.M, topo_ext.m,
+            topo_ext.is_max.astype(jnp.int32),
+            topo_ext.is_min.astype(jnp.int32),
+            interpret=interpret, slab_lo=slab_lo, n_slabs_total=N)
+        return jnp.stack([selfe[interior], dem[interior], pro[interior],
+                          up_c[interior]])
+
+    stacked = jax.lax.cond(
+        run, do_masks, lambda _: jnp.zeros((4, L) + plane, jnp.int32), None)
+
+    # mask halo exchange: fresh interior edges when this device ran,
+    # cached ones when it skipped (they are identical by the skip rule)
+    send_first = jnp.where(run, stacked[:, :1], cache[:, :1])
+    send_last = jnp.where(run, stacked[:, -1:], cache[:, 1:])
+    cache2 = jnp.concatenate([send_first, send_last], axis=1)
+    m_lo = jax.lax.ppermute(send_last, axis_name, fwd)
+    m_hi = jax.lax.ppermute(send_first, axis_name, bwd)
+    ext = jnp.concatenate([m_lo, stacked, m_hi], axis=1)
+    self_e, dem_e, pro_e, upc_e = ext
+
+    real = ((z0 + jnp.arange(L, dtype=jnp.int32)) < N)
+    real_b = real.reshape((-1,) + (1,) * (g_loc.ndim - 1)).astype(jnp.int32)
+
+    def do_fix(_):
+        g2_ext, _, tgt = fix_pass_pallas(
+            g_ext, topo_ext.lower, self_e, dem_e, pro_e, upc_e,
+            topo_ext.dn_c, interpret=interpret,
+            slab_lo=slab_lo, n_slabs_total=N)
+        return g2_ext[interior], tgt[interior] * real.astype(jnp.int32)
+
+    g2_loc, tgt_loc = jax.lax.cond(
+        run, do_fix, lambda _: (g_loc, jnp.zeros(L, jnp.int32)), None)
+
+    src_fresh = jnp.sum((stacked[0] + stacked[1] + stacked[2])
+                        * real_b).astype(jnp.int32)
+    src2 = jnp.where(run, src_fresh, src_loc)
+    viol = jax.lax.psum(src2, axis_name)
+
+    # 2-edge target flags to the chain neighbors: a neighbor must re-run
+    # next iteration iff a target landed within 2 slabs of its block
+    hi_edge = jnp.any(tgt_loc[-2:] > 0)
+    lo_edge = jnp.any(tgt_loc[:2] > 0)
+    dirt_lo = jax.lax.ppermute(hi_edge, axis_name, fwd)
+    dirt_hi = jax.lax.ppermute(lo_edge, axis_name, bwd)
+    run2 = jnp.any(tgt_loc > 0) | dirt_lo | dirt_hi
+    return g2_loc, viol, src2, cache2, run2
+
+
 def sharded_fix(g0: jnp.ndarray, topo, mesh: Mesh, *, max_iters: int = 512,
                 axis_name: str = DATA_AXIS,
-                interpret: Optional[bool] = None):
+                interpret: Optional[bool] = None,
+                worklist: Optional[bool] = None):
     """Run the fused fix loop to convergence, distributed over ``mesh``'s
     ``axis_name`` devices. Returns (g, iters, converged), bitwise equal to
     ``fused_fix(..., backend="pallas")``.
@@ -200,14 +281,49 @@ def sharded_fix(g0: jnp.ndarray, topo, mesh: Mesh, *, max_iters: int = 512,
     iteration, and the convergence predicate is the psummed violation
     count carried in the loop state — replicated, so every device decides
     identically.
+
+    ``worklist`` (default on for >= 2 devices with >= 2 slabs each)
+    engages the per-device dirty-slab skip (DESIGN.md §7): a device whose
+    block saw no edit target within 2 slabs last iteration skips both
+    kernels under a device-local ``lax.cond`` and re-sends cached mask
+    edges, while every collective stays unconditional — so fields whose
+    remaining violations cluster on a few devices stop paying for the
+    converged ones, with a bitwise-identical trajectory. Padding devices
+    (all-pad blocks of a non-divisible field) skip from iteration 2 on
+    for free.
     """
     if interpret is None:
         interpret = default_interpret()
     g_p, topo_p, n_dev, N, L = _shard_args(g0, topo, mesh, axis_name)
+    # L >= 2 keeps the 2-slab dirt radius within the two edge flags one
+    # ppermute hop delivers; below that every device borders everything
+    use_wl = (worklist if worklist is not None else True) \
+        and n_dev >= 2 and L >= 2
 
     def spmd(g_loc, topo_loc):
         topo_ext = jax.tree_util.tree_map(
             lambda x: with_halo(x, axis_name, n_dev), topo_loc)
+
+        if use_wl:
+            step = functools.partial(
+                _spmd_step_worklist, topo_ext=topo_ext, N=N, L=L,
+                n_dev=n_dev, axis_name=axis_name, interpret=interpret)
+
+            def cond(state):
+                return (state[2] > 0) & (state[1] < max_iters)
+
+            def body(state):
+                g, it, _, src, cache, run = state
+                g2, viol2, src2, cache2, run2 = step(g, run, src, cache)
+                return g2, it + 1, viol2, src2, cache2, run2
+
+            cache0 = jnp.zeros((4, 2) + g_loc.shape[1:], jnp.int32)
+            g1, viol1, src1, cache1, run1 = step(
+                g_loc, jnp.bool_(True), jnp.int32(0), cache0)
+            out = jax.lax.while_loop(
+                cond, body, (g1, jnp.int32(1), viol1, src1, cache1, run1))
+            return out[0], out[1], out[2]
+
         step = functools.partial(_spmd_step, topo_ext=topo_ext, N=N, L=L,
                                  n_dev=n_dev, axis_name=axis_name,
                                  interpret=interpret)
@@ -347,11 +463,17 @@ class ShardedBackend:
     ``mesh=None`` (the registry instance) resolves the active mesh at
     call time; ``resolve_backend``/``fused_fix`` bind it into a concrete
     instance before jit so compilation caches key on the actual mesh.
+
+    ``worklist``: per-device dirty-slab skipping inside ``fix_loop``
+    (None = on whenever the decomposition leaves >= 2 slabs per device;
+    see ``sharded_fix``). Never changes results — devices whose
+    neighborhood is converged merely stop running kernels.
     """
     name: str = "sharded"
     mesh: Optional[Mesh] = None
     axis_name: str = DATA_AXIS
     interpret: Optional[bool] = None
+    worklist: Optional[bool] = None
 
     def with_mesh(self, mesh: Mesh) -> "ShardedBackend":
         """A copy of this backend bound to ``mesh``."""
@@ -416,7 +538,8 @@ class ShardedBackend:
         be = self.bind()
         return sharded_fix(g0, topo, be.mesh, max_iters=max_iters,
                            axis_name=be.axis_name,
-                           interpret=be._interpret())
+                           interpret=be._interpret(),
+                           worklist=be.worklist)
 
     # -- device-resident base transform (DESIGN.md §4) ------------------
     def transform(self, f: jnp.ndarray, step) -> jnp.ndarray:

@@ -28,6 +28,7 @@ fits v5e VMEM; larger XY planes would tile Y as well.
 from __future__ import annotations
 
 import functools
+import os
 from typing import Tuple
 
 import jax
@@ -37,9 +38,35 @@ from jax.experimental import pallas as pl
 from ..core.grid import OFFSETS_2D, OFFSETS_3D, _sos_argbest
 
 
+# platforms with a native Pallas lowering (Mosaic on TPU, Triton on GPU);
+# everything else — notably XLA:CPU — must run the kernels interpreted
+_LOWERED_PLATFORMS = ("tpu", "gpu", "cuda", "rocm")
+
+
 def default_interpret() -> bool:
-    """Pallas interpret mode is required everywhere but real TPUs."""
-    return jax.default_backend() != "tpu"
+    """Whether Pallas kernels should run in interpret mode by default.
+
+    Auto-detects the platform: TPUs lower through Mosaic and GPUs through
+    Triton, so both take the compiled path; every other backend (XLA:CPU
+    in particular) has no Pallas lowering and interprets. The
+    ``MSZ_PALLAS_INTERPRET`` environment variable overrides the detection
+    in both directions (``1``/``true``/``yes``/``on`` forces interpret
+    mode, ``0``/``false``/``no``/``off`` forces the lowered path) — the
+    escape hatch for debugging a kernel on an accelerator, or for
+    asserting lowered-vs-interpret bitwise identity in tests. Every
+    kernel entry point (extrema, fix pass, Lorenzo) and every backend
+    with ``interpret=None`` routes through this policy.
+    """
+    env = os.environ.get("MSZ_PALLAS_INTERPRET", "").strip().lower()
+    if env in ("1", "true", "yes", "on"):
+        return True
+    if env in ("0", "false", "no", "off"):
+        return False
+    if env:
+        raise ValueError(
+            f"MSZ_PALLAS_INTERPRET={env!r} not understood; use one of "
+            "1/true/yes/on (interpret) or 0/false/no/off (lowered)")
+    return jax.default_backend() not in _LOWERED_PLATFORMS
 
 
 def slab_offsets(ndim: int) -> Tuple[Tuple[int, int, int], ...]:

@@ -9,8 +9,11 @@ Each vertex j decreases to (g_j + lower_j)/2 iff
 
 Same slab halo layout as the extrema kernel (3D: z-slabs; 2D: y-rows),
 including the global-coordinate ``slab_lo``/``n_slabs_total`` placement
-for tiled execution. Also emits the per-slab violation count (the paper's
-lock-free work-queue height becomes a reduction)."""
+for tiled execution. Also emits per-slab violation (fix-source) and
+edit-target counts: the source counts are the paper's lock-free
+work-queue height turned into a reduction, and the target counts are the
+dirty-slab bitmap the worklist drivers (DESIGN.md §7) use to skip slabs
+whose neighborhood did not change last pass."""
 from __future__ import annotations
 
 import functools
@@ -29,7 +32,7 @@ from .extrema import (_shift2d, default_interpret, slab_block_specs,
 def _kernel(slab_lo_c, g_c, low_c, self_c,
             dem_m, dem_c, dem_p, pro_m, pro_c, pro_p,
             upg_m, upg_c, upg_p, dnf_m, dnf_c, dnf_p,
-            g_out, viol_out, *, N, P, X, offs):
+            g_out, viol_out, tgt_out, *, N, P, X, offs):
     z = slab_lo_c[0, 0] + pl.program_id(0)
 
     def plane(ref):
@@ -65,6 +68,7 @@ def _kernel(slab_lo_c, g_c, low_c, self_c,
     g_out[...] = jnp.where(target, new, g).reshape(g_out.shape)
     viol = jnp.sum(self_p) + jnp.sum(dem[1]) + jnp.sum(pro[1])
     viol_out[0, 0] = viol.astype(jnp.int32)
+    tgt_out[0, 0] = jnp.sum(target).astype(jnp.int32)
 
 
 def fix_pass_pallas(g, lower, self_edit, demote_src, promote_src,
@@ -72,8 +76,13 @@ def fix_pass_pallas(g, lower, self_edit, demote_src, promote_src,
                     slab_lo=0, n_slabs_total: int | None = None):
     """Apply one fused fix pass. All inputs (Z,Y,X) or (Y,X); masks int32
     0/1. Returns (g_next of g's shape/dtype, viol (n_slabs,) int32
-    per-slab counts). ``slab_lo``/``n_slabs_total`` as in the extrema
-    kernel (``slab_lo`` may be traced; ``n_slabs_total`` then required)."""
+    per-slab fix-SOURCE counts, tgt (n_slabs,) int32 per-slab edit-TARGET
+    counts). ``viol`` drives convergence (0 sources everywhere == done);
+    ``tgt`` feeds the dirty-slab worklists (DESIGN.md §7): a slab whose
+    targets were 0 last pass — and whose 2-slab neighborhood's were too —
+    produces bitwise-identical masks this pass and can be skipped.
+    ``slab_lo``/``n_slabs_total`` as in the extrema kernel (``slab_lo``
+    may be traced; ``n_slabs_total`` then required)."""
     if interpret is None:
         interpret = default_interpret()
     if g.ndim == 3:
@@ -92,12 +101,14 @@ def fix_pass_pallas(g, lower, self_edit, demote_src, promote_src,
         N = int(n_slabs_total)
 
     halo, center = slab_block_specs(g.ndim, n_local, P, X)
-    out_specs = [center, pl.BlockSpec((1, 1), lambda z: (z, 0))]
+    count_spec = pl.BlockSpec((1, 1), lambda z: (z, 0))
+    count_shape = jax.ShapeDtypeStruct((n_local, 1), jnp.int32)
+    out_specs = [center, count_spec, count_spec]
     out_shape = [jax.ShapeDtypeStruct(g.shape, g.dtype),
-                 jax.ShapeDtypeStruct((n_local, 1), jnp.int32)]
+                 count_shape, count_shape]
     kern = functools.partial(_kernel, N=N, P=P, X=X,
                              offs=slab_offsets(g.ndim))
-    g2, viol = pl.pallas_call(
+    g2, viol, tgt = pl.pallas_call(
         kern,
         grid=(n_local,),
         in_specs=([slab_lo_spec(), center, center, center]
@@ -110,4 +121,4 @@ def fix_pass_pallas(g, lower, self_edit, demote_src, promote_src,
       promote_src, promote_src, promote_src,
       up_code_g, up_code_g, up_code_g,
       dn_code_f, dn_code_f, dn_code_f)
-    return g2, viol[:, 0]
+    return g2, viol[:, 0], tgt[:, 0]

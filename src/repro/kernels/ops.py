@@ -30,8 +30,8 @@ def extrema_masks(g, M_f, m_f, is_max_f, is_min_f, use_pallas: bool = False):
 def fix_pass(g, lower, self_edit, demote_src, promote_src, up_code_g,
              dn_code_f, use_pallas: bool = False):
     if use_pallas and g.ndim in (2, 3):
-        g2, viol = fix_pass_pallas(g, lower, self_edit, demote_src,
-                                   promote_src, up_code_g, dn_code_f)
+        g2, viol, _ = fix_pass_pallas(g, lower, self_edit, demote_src,
+                                      promote_src, up_code_g, dn_code_f)
         return g2, jnp.sum(viol)
     return ref.fix_pass_ref(g, lower, self_edit, demote_src, promote_src,
                             up_code_g, dn_code_f)

@@ -81,8 +81,15 @@ class ServiceConfig:
     ``fix_batching``
         ``"fused"`` runs each batch's fix loops as one batched
         while_loop, ``"pipelined"`` as per-member solo loops behind a
-        shared vmapped transform; ``"auto"`` fuses small members only
-        (see ``CompressStream``).
+        shared vmapped transform; ``"auto"`` fuses members up to a
+        voxel threshold (see ``CompressStream``).
+    ``fused_fix_voxels``
+        The "auto" policy's voxel threshold. ``None`` (default) derives
+        it from the one-shot machine calibration in
+        ``repro.compress.calibrate`` (cached per backend/dtype/platform;
+        ``MSZ_FUSED_FIX_VOXELS`` overrides); an explicit integer pins
+        it. The per-batch decisions appear under ``fix_modes`` in
+        ``stats()``.
     ``overload``
         ``"block"``: submits wait for a window slot (backpressure);
         ``"reject"``: submits raise ``ServiceOverloaded`` immediately.
@@ -98,6 +105,7 @@ class ServiceConfig:
     cache_size: int = 32
     pad_pow2: bool = True
     fix_batching: str = "auto"
+    fused_fix_voxels: Optional[int] = None
     overload: str = "block"
 
     def __post_init__(self):
@@ -122,7 +130,8 @@ class CompressionService:
                   mesh=config.mesh, device_path=config.device_path,
                   max_iters=config.max_iters, workers=config.workers,
                   cache_size=config.cache_size, pad_pow2=config.pad_pow2,
-                  fix_batching=config.fix_batching)
+                  fix_batching=config.fix_batching,
+                  fused_fix_voxels=config.fused_fix_voxels)
         self._compress = CompressStream(**kw)
         self._decompress = DecompressStream(**kw)
         self._t_start = time.perf_counter()

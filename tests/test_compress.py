@@ -162,9 +162,14 @@ def test_varint_decode_vectorized_roundtrip_guard():
     deltas = rng.integers(0, 2 ** 40, size=1_000_000, dtype=np.int64)
     deltas[::3] = rng.integers(0, 100, size=deltas[::3].size)  # mixed widths
     buf = _varint_encode(deltas)
-    t0 = time.perf_counter()
-    got = _varint_decode(buf, deltas.size)
-    elapsed = time.perf_counter() - t0
+    # best-of-3: a single sample flakes under full-suite load (VM
+    # scheduler stalls), while the regression this guards against — the
+    # per-byte Python loop — is slow on every run
+    elapsed = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        got = _varint_decode(buf, deltas.size)
+        elapsed = min(elapsed, time.perf_counter() - t0)
     np.testing.assert_array_equal(got, deltas)
     assert elapsed < 3.0, f"varint decode regressed: {elapsed:.2f}s for 1M"
     # boundary widths: 1-byte, 2-byte, and full-uint63 values

@@ -1,0 +1,294 @@
+"""PR-6 fix-loop execution strategies: active-member compaction,
+dirty-slab worklists, the Pallas interpret policy, and the calibrated
+stream batching threshold.
+
+The invariant under test everywhere: every strategy — compacted batch,
+dirty-slab worklist, sharded worklist, fused legacy — produces fields
+AND iteration counts bitwise identical to the solo per-member loop.
+"""
+import os
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import (derive_edits, derive_edits_batch, field_topology,
+                        fused_fix, fused_fix_batch, fused_fix_worklist,
+                        get_backend)
+from repro.core.backend import PallasBackend
+from repro.compress import calibrate, compress_preserving_mss
+from repro.compress.stream import CompressStream
+from repro.kernels.extrema import default_interpret
+
+
+def _mixed_members(shape=(6, 7, 8), xi=0.3):
+    """A deliberately mixed-convergence batch: an already-converged
+    member (fh == f, 1 iteration), a constant field, a light and a heavy
+    perturbation, and an empty-ish near-zero field."""
+    rng = np.random.default_rng(11)
+    smooth = np.add.outer(np.add.outer(np.linspace(0, 1, shape[0]),
+                                       np.linspace(0, .5, shape[1])),
+                          np.linspace(0, .25, shape[2])).astype(np.float32)
+    members = [
+        smooth,                                              # converged twin
+        np.full(shape, 3.25, np.float32),                    # constant field
+        rng.normal(size=shape).astype(np.float32),           # light noise
+        rng.normal(size=shape).astype(np.float32),           # heavy noise
+        np.zeros(shape, np.float32),                         # empty field
+    ]
+    fs, fhs = [], []
+    for i, f in enumerate(members):
+        if i in (0, 1):
+            fh = f.copy()                # bitwise-exact base: 0-edit member
+        else:
+            amp = 0.2 if i == 2 else 0.999
+            fh = (f + rng.uniform(-xi, xi, shape) * amp).astype(np.float32)
+        fs.append(f)
+        fhs.append(fh)
+    return np.stack(fs), np.stack(fhs), xi
+
+
+def _solo_results(f_b, fh_b, xi):
+    out = []
+    for i in range(f_b.shape[0]):
+        topo = field_topology(jnp.asarray(f_b[i]), xi)
+        g, it, ok = fused_fix(jnp.asarray(fh_b[i]), topo)
+        out.append((np.asarray(g), int(it), bool(ok)))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# active-member compaction
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("every", [1, 3, 8])
+def test_compact_bitwise_matches_solo_mixed_convergence(every):
+    f_b, fh_b, xi = _mixed_members()
+    solo = _solo_results(f_b, fh_b, xi)
+    assert solo[0][1] == 1 and solo[1][1] == 1     # converged members
+    assert max(s[1] for s in solo) > 1             # and real stragglers
+    topos = [field_topology(jnp.asarray(f), xi) for f in f_b]
+    topo_b = jax.tree_util.tree_map(lambda *ls: jnp.stack(ls), *topos)
+    g, it, ok = fused_fix_batch(jnp.asarray(fh_b), topo_b,
+                                batching="compact", compact_every=every)
+    for i, (g_s, it_s, ok_s) in enumerate(solo):
+        np.testing.assert_array_equal(np.asarray(g)[i], g_s)
+        assert int(np.asarray(it)[i]) == it_s
+        assert bool(np.asarray(ok)[i]) == ok_s
+
+
+def test_compact_matches_fused_driver_exactly():
+    f_b, fh_b, xi = _mixed_members()
+    topos = [field_topology(jnp.asarray(f), xi) for f in f_b]
+    topo_b = jax.tree_util.tree_map(lambda *ls: jnp.stack(ls), *topos)
+    out_f = fused_fix_batch(jnp.asarray(fh_b), topo_b, batching="fused")
+    out_c = fused_fix_batch(jnp.asarray(fh_b), topo_b, batching="compact")
+    for a, b in zip(out_f, out_c):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_compact_max_iters_stragglers_not_converged():
+    f_b, fh_b, xi = _mixed_members()
+    solo_full = _solo_results(f_b, fh_b, xi)
+    cap = max(s[1] for s in solo_full) - 1      # one short of the straggler
+    topos = [field_topology(jnp.asarray(f), xi) for f in f_b]
+    topo_b = jax.tree_util.tree_map(lambda *ls: jnp.stack(ls), *topos)
+    g, it, ok = fused_fix_batch(jnp.asarray(fh_b), topo_b, max_iters=cap,
+                                batching="compact", compact_every=3)
+    ok = np.asarray(ok)
+    assert not ok.all() and ok.any()            # stragglers hit the cap...
+    for i, (_, it_s, _) in enumerate(solo_full):
+        if it_s <= cap:                         # ...converged members do not
+            assert bool(ok[i])
+            assert int(np.asarray(it)[i]) == it_s
+
+
+def test_derive_edits_batch_compact_honors_per_member_xi():
+    f_b, fh_b, _ = _mixed_members()
+    xis = [0.3, 0.3, 0.35, 0.4, 0.3]
+    res_b = derive_edits_batch(f_b, fh_b, xis, batching="compact",
+                               compact_every=2)
+    for i, r in enumerate(res_b):
+        solo = derive_edits(f_b[i], fh_b[i], xis[i])
+        np.testing.assert_array_equal(r.g, solo.g)
+        np.testing.assert_array_equal(r.edits_idx, solo.edits_idx)
+        np.testing.assert_array_equal(r.edits_val, solo.edits_val)
+        assert r.iters == solo.iters
+        assert r.max_abs_err <= xis[i] * (1 + 1e-6)
+
+
+def test_batch_batching_validation():
+    f_b, fh_b, xi = _mixed_members()
+    topos = [field_topology(jnp.asarray(f), xi) for f in f_b]
+    topo_b = jax.tree_util.tree_map(lambda *ls: jnp.stack(ls), *topos)
+    with pytest.raises(ValueError, match="batching"):
+        fused_fix_batch(jnp.asarray(fh_b), topo_b, batching="eager")
+    with pytest.raises(ValueError, match="compact_every"):
+        fused_fix_batch(jnp.asarray(fh_b), topo_b, compact_every=0)
+
+
+# ---------------------------------------------------------------------------
+# dirty-slab worklist
+# ---------------------------------------------------------------------------
+
+def _localized_pair(shape=(40, 6, 7), xi=0.25):
+    """Violations confined to a few interior slabs — the case the
+    worklist exists for."""
+    rng = np.random.default_rng(5)
+    f = np.linspace(0, 1, int(np.prod(shape)), dtype=np.float32) \
+        .reshape(shape)
+    fh = f.copy()
+    lo, hi = shape[0] // 2 - 3, shape[0] // 2 + 3
+    fh[lo:hi] += (0.9 * xi * rng.uniform(-1, 1, (hi - lo,) + shape[1:])) \
+        .astype(np.float32)
+    return f, fh, xi
+
+
+def test_worklist_bitwise_and_skips_slabs():
+    f, fh, xi = _localized_pair()
+    topo = field_topology(jnp.asarray(f), xi)
+    g_d, it_d, ok_d = fused_fix(jnp.asarray(fh), topo, backend="pallas")
+    g_w, it_w, ok_w, skipped = fused_fix_worklist(jnp.asarray(fh), topo)
+    np.testing.assert_array_equal(np.asarray(g_w), np.asarray(g_d))
+    assert int(it_w) == int(it_d) and bool(ok_w) == bool(ok_d)
+    assert int(skipped) > 0      # the acceptance criterion: real skips
+
+
+def test_worklist_dense_noise_still_bitwise():
+    f, fh, xi = (lambda s: ( (x := np.random.default_rng(9)
+                              .normal(size=s).astype(np.float32)),
+                             (x + np.random.default_rng(10)
+                              .uniform(-0.3, 0.3, s) * 0.999)
+                             .astype(np.float32), 0.3))((24, 6, 7))
+    topo = field_topology(jnp.asarray(f), xi)
+    g_d, it_d, _ = fused_fix(jnp.asarray(fh), topo, backend="pallas")
+    g_w, it_w, _, _ = fused_fix_worklist(jnp.asarray(fh), topo)
+    np.testing.assert_array_equal(np.asarray(g_w), np.asarray(g_d))
+    assert int(it_w) == int(it_d)
+
+
+def test_use_worklist_policy():
+    be_auto = get_backend("pallas")
+    assert not be_auto.use_worklist((8, 8, 8))          # under the floor
+    assert be_auto.use_worklist((be_auto.worklist_min_slabs, 8, 8))
+    be_on = PallasBackend(worklist=True)
+    assert be_on.use_worklist((4, 8, 8))
+    assert not be_on.use_worklist((1, 8, 8))            # degenerate depth
+    be_off = PallasBackend(worklist=False)
+    assert not be_off.use_worklist((256, 8, 8))
+
+
+def test_fused_fix_worklist_rejects_plain_backends():
+    f, fh, xi = _localized_pair((12, 6, 7))
+    topo = field_topology(jnp.asarray(f), xi)
+    with pytest.raises(ValueError, match="worklist"):
+        fused_fix_worklist(jnp.asarray(fh), topo, backend="reference")
+
+
+# ---------------------------------------------------------------------------
+# Pallas interpret policy
+# ---------------------------------------------------------------------------
+
+def test_interpret_env_override(monkeypatch):
+    monkeypatch.setenv("MSZ_PALLAS_INTERPRET", "1")
+    assert default_interpret() is True
+    monkeypatch.setenv("MSZ_PALLAS_INTERPRET", "off")
+    assert default_interpret() is False
+    monkeypatch.setenv("MSZ_PALLAS_INTERPRET", "maybe")
+    with pytest.raises(ValueError, match="MSZ_PALLAS_INTERPRET"):
+        default_interpret()
+    monkeypatch.delenv("MSZ_PALLAS_INTERPRET")
+    expect = jax.default_backend() not in ("tpu", "gpu", "cuda", "rocm")
+    assert default_interpret() is expect
+
+
+def test_interpret_forced_on_still_bitwise(monkeypatch):
+    # forcing interpret mode through the env must not change results
+    monkeypatch.setenv("MSZ_PALLAS_INTERPRET", "true")
+    f, fh, xi = _localized_pair((12, 6, 7))
+    topo = field_topology(jnp.asarray(f), xi)
+    g_r, it_r, _ = fused_fix(jnp.asarray(fh), topo, backend="reference")
+    g_p, it_p, _ = fused_fix(jnp.asarray(fh), topo, backend="pallas")
+    np.testing.assert_array_equal(np.asarray(g_p), np.asarray(g_r))
+    assert int(it_p) == int(it_r)
+
+
+@pytest.mark.skipif(jax.default_backend() in ("cpu",),
+                    reason="lowered-vs-interpret identity needs a GPU/TPU "
+                           "runtime that can actually lower Pallas kernels")
+def test_lowered_vs_interpret_bitwise():
+    from repro.kernels.extrema import extrema_masks_pallas
+    f, fh, xi = _localized_pair((16, 8, 8))
+    topo = field_topology(jnp.asarray(f), xi)
+    g_i, it_i, _ = fused_fix(jnp.asarray(fh), topo,
+                             backend=PallasBackend(interpret=True))
+    g_l, it_l, _ = fused_fix(jnp.asarray(fh), topo,
+                             backend=PallasBackend(interpret=False))
+    np.testing.assert_array_equal(np.asarray(g_l), np.asarray(g_i))
+    assert int(it_l) == int(it_i)
+    del extrema_masks_pallas
+
+
+# ---------------------------------------------------------------------------
+# calibration + stream policy
+# ---------------------------------------------------------------------------
+
+def test_calibration_env_override(monkeypatch):
+    monkeypatch.setenv(calibrate.ENV_VAR, "12345")
+    cal = calibrate.fused_fix_threshold("pallas")
+    assert cal.threshold_voxels == 12345 and cal.source == "env"
+    monkeypatch.setenv(calibrate.ENV_VAR, "many")
+    with pytest.raises(ValueError, match=calibrate.ENV_VAR):
+        calibrate.fused_fix_threshold("pallas")
+    monkeypatch.setenv(calibrate.ENV_VAR, "-3")
+    with pytest.raises(ValueError, match=calibrate.ENV_VAR):
+        calibrate.fused_fix_threshold("pallas")
+
+
+def test_calibration_measures_clamps_and_caches(monkeypatch):
+    monkeypatch.delenv(calibrate.ENV_VAR, raising=False)
+    cal = calibrate.fused_fix_threshold("reference")
+    assert cal.source == "measured"
+    assert isinstance(cal.threshold_voxels, int)
+    assert calibrate.CLAMP[0] <= cal.threshold_voxels <= calibrate.CLAMP[1]
+    before = calibrate.measure_count
+    again = calibrate.fused_fix_threshold("reference")
+    assert again is cal                       # cache hit, no re-measure
+    assert calibrate.measure_count == before
+
+
+def test_stream_mixed_convergence_bitwise_and_mode_stats(monkeypatch):
+    # pin the policy via the env override: exercises the stream's lazy
+    # threshold fill without paying a measurement in the test suite
+    monkeypatch.setenv(calibrate.ENV_VAR, "100000")
+    f_b, fh_b, xi = _mixed_members()
+    del fh_b   # the stream compresses f from scratch; fh was solo-only
+    fields = list(f_b)
+    with CompressStream(window=8, max_batch=8) as cs:
+        arts = cs.map(fields, xi)
+        st = cs.stats()
+    assert st["fused_fix_voxels"] == 100000
+    assert sum(st["fix_modes"].values()) == st["batches"] >= 1
+    assert st["fix_modes"].get("fused", 0) >= 1     # 6*7*8 << the override
+    for f, a in zip(fields, arts):
+        solo = compress_preserving_mss(f, xi)
+        assert a.base_payload == solo.base_payload
+        assert a.edit_payload == solo.edit_payload
+
+
+def test_stream_forced_pipelined_mode_counted(monkeypatch):
+    monkeypatch.delenv(calibrate.ENV_VAR, raising=False)
+    rng = np.random.default_rng(2)
+    fields = [rng.normal(size=(5, 6, 7)).astype(np.float32)
+              for _ in range(4)]
+    with CompressStream(window=4, max_batch=4,
+                        fix_batching="pipelined") as cs:
+        arts = cs.map(fields, 0.3)
+        st = cs.stats()
+    assert st["fix_modes"] == {"pipelined": st["batches"]}
+    assert st["fused_fix_voxels"] is None   # forced mode never calibrates
+    for f, a in zip(fields, arts):
+        solo = compress_preserving_mss(f, 0.3)
+        assert a.base_payload == solo.base_payload
+        assert a.edit_payload == solo.edit_payload

@@ -58,11 +58,17 @@ def test_fixpass_kernel_matches_ref(shape, seed):
     xi = 0.3
     lower = f - xi
     up_c, dn_c, selfe, dem, pro = kref.extrema_masks_ref(g, Mf, mf, maxf, minf)
-    g2k, violk = fix_pass_pallas(g, lower, selfe, dem, pro, up_c, dnf,
-                                 interpret=True)
+    g2k, violk, tgtk = fix_pass_pallas(g, lower, selfe, dem, pro, up_c, dnf,
+                                       interpret=True)
     g2r, violr = kref.fix_pass_ref(g, lower, selfe, dem, pro, up_c, dnf)
     np.testing.assert_array_equal(np.asarray(g2k), np.asarray(g2r))
     assert int(jnp.sum(violk)) == int(violr)
+    # per-slab target counts (the dirty-slab bitmap input): one count per
+    # slab, consistent with where the pass actually edited g
+    assert tgtk.shape == (g.shape[0],)
+    edited = np.any(np.asarray(g2k) != np.asarray(g),
+                    axis=tuple(range(1, g.ndim)))
+    assert np.all((np.asarray(tgtk) > 0) >= edited)
 
 
 @pytest.mark.parametrize("shape", SHAPES_3D)
@@ -114,8 +120,8 @@ def test_kernel_fix_loop_end_to_end():
     for _ in range(200):
         up_c, dn_c, selfe, dem, pro = extrema_masks_pallas(
             g, Mf, mf, maxf, minf, interpret=True)
-        g2, viol = fix_pass_pallas(g, lower, selfe, dem, pro, up_c, dnf,
-                                   interpret=True)
+        g2, viol, _ = fix_pass_pallas(g, lower, selfe, dem, pro, up_c, dnf,
+                                      interpret=True)
         if int(jnp.sum(viol)) == 0:
             break
         g = g2
