@@ -175,8 +175,16 @@ def fused_fix_threshold(backend, dtype=np.float32) -> FixCalibration:
     if isinstance(backend, str):
         from ..core.backend import resolve_backend
         backend = resolve_backend(backend, PROBES[0], np.dtype(dtype))
+    # the resolved Pallas interpret decision is part of the key: a
+    # Pallas backend running interpreted (CPU, or MSZ_PALLAS_INTERPRET=1)
+    # is orders of magnitude slower per iteration than the same backend
+    # compiled, so a threshold measured under one policy is wrong for
+    # the other — and both can occur in one process when the policy env
+    # var changes between calls
+    interp = bool(backend._interpret()) if hasattr(backend, "_interpret") \
+        else None
     key = (getattr(backend, "name", str(backend)), np.dtype(dtype).str,
-           jax.default_backend())
+           jax.default_backend(), interp)
     with _lock:
         hit = _cache.get(key)
     if hit is not None:

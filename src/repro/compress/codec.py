@@ -52,8 +52,19 @@ def _varint_decode(buf: bytes, count: int) -> np.ndarray:
     loop cost O(stream bytes) interpreter time, seconds on million-edit
     blobs). Value boundaries come from the continuation bits; each byte's
     7-bit group is shifted by 7x its position within its value and the
-    groups are summed per value with one ``np.add.reduceat``."""
+    groups are summed per value with one ``np.add.reduceat``.
+
+    The stream must hold EXACTLY ``count`` values: a short stream is
+    truncation, and trailing bytes beyond value ``count`` mean the
+    caller's framing disagrees with the payload — both are corruption,
+    and both raise instead of decoding what happens to fit (the old
+    behavior, which let a mis-framed blob decode to plausible-looking
+    indices)."""
     if count == 0:
+        if len(buf):
+            raise ValueError(
+                f"varint stream carries {len(buf)} bytes but 0 values "
+                "were promised")
         return np.zeros(0, np.int64)
     data = np.frombuffer(buf, np.uint8)
     ends = np.flatnonzero((data & 0x80) == 0)      # last byte of each value
@@ -61,7 +72,11 @@ def _varint_decode(buf: bytes, count: int) -> np.ndarray:
         raise ValueError(
             f"truncated varint stream: {ends.size} terminated values, "
             f"expected {count}")
-    ends = ends[:count]
+    if ends.size > count or int(ends[-1]) != data.size - 1:
+        raise ValueError(
+            f"over-long varint stream: {ends.size} terminated values and "
+            f"{data.size - 1 - int(ends[-1])} dangling bytes, expected "
+            f"exactly {count} values")
     starts = np.empty(count, np.int64)
     starts[0] = 0
     starts[1:] = ends[:-1] + 1
@@ -72,6 +87,29 @@ def _varint_decode(buf: bytes, count: int) -> np.ndarray:
     pos = (np.arange(n_bytes) - starts[owner]).astype(np.uint64)
     contrib = (data & np.uint8(0x7F)).astype(np.uint64) << (np.uint64(7) * pos)
     return np.add.reduceat(contrib, starts).astype(np.int64)
+
+
+def _f32_to_bf16(val: np.ndarray) -> np.ndarray:
+    """f32 -> bf16 (top 16 bits) with IEEE round-to-nearest-even.
+
+    The former ``(v32 + 0x8000) >> 16`` rounded halfway cases away from
+    zero (a systematic up-bias on tie points like 1.0 + 2^-8), promoted
+    NaNs with small payloads to Inf (the +0x8000 carry rippled into the
+    exponent), and wrapped sign-bit-set NaNs to +0 via uint32 overflow.
+    RNE adds ``0x7FFF + lsb-of-result`` instead (carry in uint64 so it
+    cannot wrap), and non-finite values bypass rounding entirely: Inf
+    truncates to Inf, NaN truncates with the quiet bit forced so a
+    payload living only in the dropped low mantissa bits cannot decay
+    to Inf."""
+    v32 = val.view(np.uint32).astype(np.uint64)
+    bias = np.uint64(0x7FFF) + ((v32 >> np.uint64(16)) & np.uint64(1))
+    rounded = ((v32 + bias) >> np.uint64(16)).astype(np.uint16)
+    top = (v32 >> np.uint64(16)).astype(np.uint16)
+    special = (v32 & np.uint64(0x7F800000)) == np.uint64(0x7F800000)
+    is_nan = special & ((v32 & np.uint64(0x007FFFFF)) != 0)
+    return np.where(special,
+                    np.where(is_nan, top | np.uint16(0x0040), top),
+                    rounded)
 
 
 def encode_edits(idx: np.ndarray, val: np.ndarray, value_dtype="f4") -> bytes:
@@ -99,8 +137,7 @@ def encode_edits(idx: np.ndarray, val: np.ndarray, value_dtype="f4") -> bytes:
     deltas = np.diff(idx, prepend=np.int64(0))
     key_stream = zlib.compress(_varint_encode(deltas), 9)
     if value_dtype == "bf16":
-        v32 = val.view(np.uint32)
-        vb = ((v32 + 0x8000) >> 16).astype(np.uint16)  # round-to-nearest bf16
+        vb = _f32_to_bf16(val)
         val_stream = zlib.compress(vb.tobytes(), 9)
         dt = 1
     else:
@@ -113,19 +150,42 @@ def encode_edits(idx: np.ndarray, val: np.ndarray, value_dtype="f4") -> bytes:
 
 def decode_edits(blob: bytes) -> Tuple[np.ndarray, np.ndarray]:
     """Inverse of ``encode_edits``: (sorted int64 indices, f32 values)
-    of one edit blob (bf16-coded values widen back to f32)."""
+    of one edit blob (bf16-coded values widen back to f32).
+
+    The header's stream lengths are validated against ``len(blob)``
+    before any slice: Python slicing silently clips, so a truncated
+    blob used to flow into ``zlib.decompress`` (surfacing, at best, as
+    a confusing zlib error — or decoding a prefix that happens to be
+    well-formed), and trailing garbage after the promised streams was
+    silently ignored. Both now raise ``ValueError`` here."""
+    hdr = struct.calcsize("<4sBQQQ")
+    if len(blob) < hdr:
+        raise ValueError(
+            f"truncated edit blob: {len(blob)} bytes, header needs {hdr}")
     magic, dt, n, lk, lv = struct.unpack_from("<4sBQQQ", blob, 0)
     if magic != _MAGIC:
         raise ValueError("not an MSz edit blob")
-    off = struct.calcsize("<4sBQQQ")
+    if len(blob) != hdr + lk + lv:
+        raise ValueError(
+            f"edit blob length mismatch: header promises {hdr + lk + lv} "
+            f"bytes ({lk} key + {lv} value), got {len(blob)}")
+    off = hdr
     keys = zlib.decompress(blob[off:off + lk]); off += lk
     vals = zlib.decompress(blob[off:off + lv])
     deltas = _varint_decode(keys, n)
     idx = np.cumsum(deltas, dtype=np.int64)
     if dt == 1:
+        if len(vals) != 2 * n:
+            raise ValueError(
+                f"edit value stream decodes to {len(vals)} bytes, "
+                f"expected {2 * n} (bf16 x {n})")
         v16 = np.frombuffer(vals, np.uint16).astype(np.uint32) << 16
         val = v16.view(np.float32)
     else:
+        if len(vals) != 4 * n:
+            raise ValueError(
+                f"edit value stream decodes to {len(vals)} bytes, "
+                f"expected {4 * n} (f32 x {n})")
         val = np.frombuffer(vals, np.float32)
     return idx, val.copy()
 

@@ -36,6 +36,7 @@ per-member async device dispatch, one d2h of the stacked batch.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from typing import Callable, Dict, List, Literal, Optional, Sequence, Tuple, Union
 
@@ -58,7 +59,7 @@ _BASES: Dict[str, Tuple[Callable, Callable]] = {
     "zfplike": (zfplike.zfp_compress, zfplike.zfp_decompress),
 }
 
-ARTIFACT_VERSION = 2
+ARTIFACT_VERSION = 3
 
 
 # test seam: when set, called as hook(direction, nbytes) for every
@@ -99,6 +100,10 @@ class CompressedArtifact:
     version: int = ARTIFACT_VERSION
     path: str = "host"           # "host" | "device"
     t_transform: float = 0.0     # device quantize+Lorenzo+reconstruct secs
+    # v3: which residual entropy codec the base payload carries
+    # (szlike.ENTROPIES; redundant with the blob magic but lets readers
+    # route without touching the byte stream)
+    entropy: str = "deflate"     # "deflate" | "device-pack"
 
     @property
     def nbytes(self) -> int:
@@ -206,12 +211,32 @@ def _resolve_device_path(device_path: DevicePath, f: np.ndarray, xi: float,
 # the device-resident path (DESIGN.md §4)
 # ---------------------------------------------------------------------------
 
+def _device_pack_ok(be, entropy: str) -> bool:
+    """Whether ``entropy`` coding itself can run on device: device-pack
+    selected and the backend implements the pack protocol entries."""
+    return entropy == "device-pack" and hasattr(be, "pack_codes")
+
+
+def _pull_packed(be, r) -> Tuple[np.ndarray, np.ndarray]:
+    """Entropy-code one member's int32 residual codes on device and pull
+    ``(words, bits)``: the chunked-bitplane stream replaces the full
+    code array on the d2h hop, and no host entropy work remains — the
+    blob assembly in ``sz_encode_packed`` is pure byte copying. The
+    ``int(n_words)`` sync is a scalar (exempt from the transfer-hook
+    array accounting), needed to slice the jit-static capacity buffer to
+    the true stream before it crosses."""
+    w, bts, n_words = be.pack_codes(r)
+    nw = int(n_words)
+    return _d2h(np.asarray(w[:nw])), _d2h(np.asarray(bts))
+
+
 def _device_compress(f: np.ndarray, xi: float, be, max_iters: int,
-                     edit_value_dtype: str, step: float
-                     ) -> CompressedArtifact:
+                     edit_value_dtype: str, step: float,
+                     entropy: str = "deflate") -> CompressedArtifact:
     """Single host->device transfer of f; transform, reconstruction, fix
     loop, and edit extraction stay on-device; single device->host
-    transfer of the residual codes for entropy coding. ``step`` comes
+    transfer of the residual codes — entropy-coded on device first when
+    ``entropy="device-pack"`` — for blob assembly. ``step`` comes
     pre-validated from _device_path_reason."""
     t0 = time.perf_counter()
     fj = _h2d(f)
@@ -232,8 +257,14 @@ def _device_compress(f: np.ndarray, xi: float, be, max_iters: int,
     idx_d, val_d = extract_edits(f_hat, g)
     t2 = time.perf_counter()
 
-    # ---- the only host-side stages left: entropy coding ----
-    payload = szlike.sz_encode_residuals(_d2h(r), f.shape, f.dtype, step)
+    # ---- residual entropy coding: on device (pack) or host (DEFLATE) ----
+    if _device_pack_ok(be, entropy):
+        words, bits = _pull_packed(be, r)
+        payload = szlike.sz_encode_packed(words, bits, f.shape, f.dtype,
+                                          step)
+    else:
+        payload = szlike.sz_encode_residuals(_d2h(r), f.shape, f.dtype,
+                                             step, entropy=entropy)
     idx = _d2h(idx_d).astype(np.int64)
     val = _d2h(val_d)
     blob = _encode_edits_checked_dev(fj, f_hat, idx, val, xi,
@@ -245,7 +276,7 @@ def _device_compress(f: np.ndarray, xi: float, be, max_iters: int,
         t_base=(t1 - t0) + (t3 - t2), t_fix=t2 - t1,
         edit_ratio=float(idx.size) / float(f.size),
         fix_iters=int(iters), backend=be.name,
-        path="device", t_transform=t1 - t0,
+        path="device", t_transform=t1 - t0, entropy=entropy,
     )
 
 
@@ -263,7 +294,7 @@ class _DeviceBatch:
     steps: List[float]
     f_b: jnp.ndarray             # device-resident originals (bf16 re-verify)
     fhat_b: jnp.ndarray          # device-resident reconstructions
-    r_host: np.ndarray           # residual codes, already pulled to host
+    r_host: Optional[np.ndarray]  # residual codes pulled to host (DEFLATE)
     edits: List[Tuple[jnp.ndarray, jnp.ndarray]]  # device (idx, val) pairs
     iters_b: np.ndarray
     backend_name: str
@@ -272,6 +303,11 @@ class _DeviceBatch:
     t_pull_each: float
     nbytes_h2d: int = 0          # array bytes crossed host->device
     nbytes_d2h: int = 0          # array bytes crossed device->host
+    # device-pack batches carry per-member (words, bits) pulled off the
+    # device instead of r_host; _encode_batch_member then only assembles
+    # bytes — zero host entropy work
+    entropy: str = "deflate"
+    packed: Optional[List[Tuple[np.ndarray, np.ndarray]]] = None
 
 
 def _batch_transform(fields: List[np.ndarray], xi_arr: np.ndarray, be,
@@ -305,13 +341,26 @@ def _batch_transform(fields: List[np.ndarray], xi_arr: np.ndarray, be,
     return f_stack, f_b, step_b, r_b, fhat_b, base_errs
 
 
+def _pull_batch_codes(be, r_b, B: int, entropy: str):
+    """The batch's residual-code d2h hop: per-member device-packed
+    streams for ``entropy="device-pack"`` (the words replace the full
+    codes on the wire and no host entropy stage remains), else the raw
+    stacked codes for host DEFLATE. Returns (r_host, packed, nbytes)."""
+    if _device_pack_ok(be, entropy):
+        packed = [_pull_packed(be, r_b[i]) for i in range(B)]
+        return None, packed, sum(w.nbytes + b.nbytes for w, b in packed)
+    r_host = _d2h(r_b)
+    return r_host, None, r_host.nbytes
+
+
 def _device_batch_stage(fields: List[np.ndarray], xi_arr: np.ndarray,
-                        be, max_iters: int,
-                        steps: List[float]) -> _DeviceBatch:
+                        be, max_iters: int, steps: List[float],
+                        entropy: str = "deflate") -> _DeviceBatch:
     """The device-resident half of a compress batch: ONE h2d of the
     stacked fields, ONE vmapped transform + ONE batched fix loop +
-    on-device edit extraction, ONE d2h of the residual codes. ``steps``
-    come pre-validated from the caller's _device_path_reason sweep."""
+    on-device edit extraction, ONE d2h of the residual codes (device-
+    packed first under ``entropy="device-pack"``). ``steps`` come
+    pre-validated from the caller's _device_path_reason sweep."""
     B = len(fields)
     t0 = time.perf_counter()
     f_stack, f_b, step_b, r_b, fhat_b, base_errs = _batch_transform(
@@ -327,7 +376,7 @@ def _device_batch_stage(fields: List[np.ndarray], xi_arr: np.ndarray,
     edits = [extract_edits(fhat_b[i], g_b[i]) for i in range(B)]
     t2 = time.perf_counter()
 
-    r_host = _d2h(r_b)
+    r_host, packed, nbytes_codes = _pull_batch_codes(be, r_b, B, entropy)
     t_pull = time.perf_counter() - t2
     return _DeviceBatch(
         fields=fields, xi_arr=xi_arr, steps=steps,
@@ -336,22 +385,31 @@ def _device_batch_stage(fields: List[np.ndarray], xi_arr: np.ndarray,
         t_transform_each=(t1 - t0) / B, t_fix_each=(t2 - t1) / B,
         t_pull_each=t_pull / B,
         nbytes_h2d=f_stack.nbytes + step_b.nbytes,
-        nbytes_d2h=r_host.nbytes + base_errs.nbytes,
+        nbytes_d2h=nbytes_codes + base_errs.nbytes,
+        entropy=entropy, packed=packed,
     )
 
 
 def _encode_batch_member(db: _DeviceBatch, i: int,
                          edit_value_dtype: str) -> CompressedArtifact:
-    """Host-only entropy coding of batch member ``i`` (thread-safe: zlib
-    and the edit-sized d2h pulls release the GIL, so the stream runs many
-    members through worker threads while the scheduler dispatches the
-    next batch's device stage)."""
+    """Per-member tail of a device batch. DEFLATE batches entropy-code
+    here (thread-safe: zlib and the edit-sized d2h pulls release the
+    GIL, so the stream runs many members through worker threads while
+    the scheduler dispatches the next batch's device stage); device-pack
+    batches arrive already entropy-coded and only assemble bytes — cheap
+    enough that the stream runs them inline on the scheduler thread."""
     fi = db.fields[i]
     # per-member entropy-coding time joins t_base so batch artifacts
     # report the same cost split as solo device-path calls
     te0 = time.perf_counter()
-    payload = szlike.sz_encode_residuals(db.r_host[i], fi.shape, fi.dtype,
-                                         db.steps[i])
+    if db.packed is not None:
+        words, bits = db.packed[i]
+        payload = szlike.sz_encode_packed(words, bits, fi.shape, fi.dtype,
+                                          db.steps[i])
+    else:
+        payload = szlike.sz_encode_residuals(db.r_host[i], fi.shape,
+                                             fi.dtype, db.steps[i],
+                                             entropy=db.entropy)
     idx = _d2h(db.edits[i][0]).astype(np.int64)
     val = _d2h(db.edits[i][1])
     blob = _encode_edits_checked_dev(db.f_b[i], db.fhat_b[i], idx, val,
@@ -365,12 +423,14 @@ def _encode_batch_member(db: _DeviceBatch, i: int,
         edit_ratio=float(idx.size) / float(fi.size),
         fix_iters=int(db.iters_b[i]), backend=db.backend_name,
         path="device", t_transform=db.t_transform_each,
+        entropy=db.entropy,
     )
 
 
 def _device_pipelined_stage(fields: List[np.ndarray], xi_arr: np.ndarray,
                             be, max_iters: int, steps: List[float],
-                            n_real: Optional[int] = None) -> _DeviceBatch:
+                            n_real: Optional[int] = None,
+                            entropy: str = "deflate") -> _DeviceBatch:
     """The stream scheduler's large-member alternative to
     ``_device_batch_stage`` (DESIGN.md §6): ONE h2d + ONE vmapped
     transform/reconstruct dispatch for the whole batch (elementwise —
@@ -403,7 +463,7 @@ def _device_pipelined_stage(fields: List[np.ndarray], xi_arr: np.ndarray,
         iters_list.append(int(iters))
     t2 = time.perf_counter()
 
-    r_host = _d2h(r_b)
+    r_host, packed, nbytes_codes = _pull_batch_codes(be, r_b, B, entropy)
     t_pull = time.perf_counter() - t2
     empty = (jnp.zeros(0, jnp.int32), jnp.zeros(0, f_b.dtype))
     return _DeviceBatch(
@@ -416,18 +476,22 @@ def _device_pipelined_stage(fields: List[np.ndarray], xi_arr: np.ndarray,
         t_fix_each=(t2 - t1) / max(n_real, 1),
         t_pull_each=t_pull / B,
         nbytes_h2d=f_stack.nbytes + step_b.nbytes,
-        nbytes_d2h=r_host.nbytes + base_errs.nbytes,
+        nbytes_d2h=nbytes_codes + base_errs.nbytes,
+        entropy=entropy, packed=packed,
     )
 
 
 def _device_compress_batch(fields: List[np.ndarray], xi_arr: np.ndarray,
                            be, max_iters: int, edit_value_dtype: str,
-                           steps: List[float]) -> List[CompressedArtifact]:
+                           steps: List[float],
+                           entropy: str = "deflate"
+                           ) -> List[CompressedArtifact]:
     """Batch device path: ONE vmapped transform + ONE batched fix loop;
-    per-member entropy coding afterwards. Artifacts are bitwise identical
-    to solo device-path calls (the batched loop freezes early-converged
-    members, fixes.fused_fix_batch)."""
-    db = _device_batch_stage(fields, xi_arr, be, max_iters, steps)
+    per-member entropy coding afterwards (on device under device-pack).
+    Artifacts are bitwise identical to solo device-path calls (the
+    batched loop freezes early-converged members, fixes.fused_fix_batch)."""
+    db = _device_batch_stage(fields, xi_arr, be, max_iters, steps,
+                             entropy=entropy)
     return [_encode_batch_member(db, i, edit_value_dtype)
             for i in range(len(fields))]
 
@@ -436,32 +500,58 @@ def _device_compress_batch(fields: List[np.ndarray], xi_arr: np.ndarray,
 # public entry points
 # ---------------------------------------------------------------------------
 
+def _check_base_entropy(base: str, entropy: str) -> None:
+    """Validate the (base, entropy) combination: the residual entropy
+    codec choice exists for the szlike residual stream only."""
+    szlike.check_entropy(entropy)
+    if entropy != "deflate" and base != "szlike":
+        raise ValueError(
+            f"entropy={entropy!r} applies to the szlike base only "
+            f"(got base={base!r})")
+
+
+def _host_base_codec(base: str, entropy: str) -> Tuple[Callable, Callable]:
+    """The (compress, decompress) pair of ``base`` with ``entropy``
+    bound in (szlike's compressor takes the codec as a keyword; the
+    decoders dispatch on the blob magic, so no binding needed there)."""
+    comp, decomp = _BASES[base]
+    if base == "szlike" and entropy != "deflate":
+        comp = functools.partial(comp, entropy=entropy)
+    return comp, decomp
+
+
 def compress_preserving_mss(f: np.ndarray, xi: float, base: BaseName = "szlike",
                             mode: str = "fused",
                             edit_value_dtype: str = "f4",
                             max_iters: int = 512,
                             backend: BackendLike = "auto",
                             mesh=None,
-                            device_path: DevicePath = "auto"
+                            device_path: DevicePath = "auto",
+                            entropy: str = "deflate"
                             ) -> CompressedArtifact:
     """``mesh``: route the fix loop through the slab-sharded SPMD backend
     when the mesh has >= 2 ``data``-axis devices. ``device_path``: run
     the whole compress stage device-resident ("auto" = whenever the
-    preconditions hold, see module docstring). Artifacts are byte-for-
-    byte identical across paths, backends, and meshes."""
+    preconditions hold, see module docstring). ``entropy``: the szlike
+    residual codec — "deflate" (host zlib, the compatibility default) or
+    "device-pack" (the chunked-bitplane codec; on the device path it
+    runs on device and the compress stage performs zero host entropy
+    work). Artifacts are byte-for-byte identical across paths, backends,
+    and meshes."""
     f = np.asarray(f)
+    _check_base_entropy(base, entropy)
     step = _resolve_device_path(device_path, f, xi, base, mode)
     if step is not None:
         be = resolve_backend(backend, f.shape, f.dtype, mesh=mesh)
         if hasattr(be, "transform"):
             return _device_compress(f, xi, be, max_iters, edit_value_dtype,
-                                    step)
+                                    step, entropy=entropy)
         if device_path is True:
             raise ValueError(
                 f"device_path=True but backend {be.name!r} implements no "
                 "transform/reconstruct protocol entry")
 
-    comp, decomp = _BASES[base]
+    comp, decomp = _host_base_codec(base, entropy)
     t0 = time.perf_counter()
     payload = comp(f, xi)
     f_hat = decomp(payload)
@@ -473,7 +563,9 @@ def compress_preserving_mss(f: np.ndarray, xi: float, base: BaseName = "szlike",
     t2 = time.perf_counter()
 
     blob = _encode_edits_checked(f, f_hat, res, xi, edit_value_dtype)
-    return _make_artifact(f, payload, blob, xi, base, res, t1 - t0, t2 - t1)
+    art = _make_artifact(f, payload, blob, xi, base, res, t1 - t0, t2 - t1)
+    art.entropy = entropy
+    return art
 
 
 def compress_preserving_mss_batch(
@@ -484,17 +576,20 @@ def compress_preserving_mss_batch(
         max_iters: int = 512,
         backend: BackendLike = "auto",
         mesh=None,
-        device_path: DevicePath = "auto") -> List[CompressedArtifact]:
+        device_path: DevicePath = "auto",
+        entropy: str = "deflate") -> List[CompressedArtifact]:
     """Batch variant of compress_preserving_mss for many same-shape fields.
 
     On the device path the base transform of ALL members runs as one
     vmapped dispatch and the fix loops as one batched while_loop
     (derive_edits_batch's machinery); host-side only the entropy coders
-    run per member. Each member's artifact is bitwise identical to a solo
-    compress_preserving_mss call; t_base/t_fix report the batch time
-    split evenly across members.
+    run per member — and under ``entropy="device-pack"`` even those move
+    on device, leaving pure byte assembly. Each member's artifact is
+    bitwise identical to a solo compress_preserving_mss call; t_base /
+    t_fix report the batch time split evenly across members.
     """
     fields = [np.asarray(fi) for fi in fields]
+    _check_base_entropy(base, entropy)
     if not fields:
         return []
     if any(fi.shape != fields[0].shape for fi in fields):
@@ -518,13 +613,14 @@ def compress_preserving_mss_batch(
         if hasattr(be, "transform"):
             be = fixes._bind(be)
             return _device_compress_batch(fields, xi_arr, be, max_iters,
-                                          edit_value_dtype, steps)
+                                          edit_value_dtype, steps,
+                                          entropy=entropy)
         if device_path is True:
             raise ValueError(
                 f"device_path=True but backend {be.name!r} implements no "
                 "transform/reconstruct protocol entry")
 
-    comp, decomp = _BASES[base]
+    comp, decomp = _host_base_codec(base, entropy)
     payloads, fhats, t_bases = [], [], []
     for fi, xi_i in zip(fields, xi_arr):
         t0 = time.perf_counter()
@@ -547,8 +643,10 @@ def compress_preserving_mss_batch(
                 "MSz fix loops did not converge within max_iters")
         blob = _encode_edits_checked(fi, f_hat, res, float(xi_i),
                                      edit_value_dtype)
-        arts.append(_make_artifact(fi, payload, blob, float(xi_i), base, res,
-                                   t_base, t_fix_each))
+        art = _make_artifact(fi, payload, blob, float(xi_i), base, res,
+                             t_base, t_fix_each)
+        art.entropy = entropy
+        arts.append(art)
     return arts
 
 
@@ -624,6 +722,34 @@ def _codes_reason(art: CompressedArtifact, r: np.ndarray) -> Optional[str]:
     return None
 
 
+def _device_unpack_decompress(art: CompressedArtifact,
+                              backend: BackendLike, mesh,
+                              device_path: DevicePath
+                              ) -> Optional[np.ndarray]:
+    """The zero-host-entropy read fast path (DESIGN.md §8) for device-
+    path SZP1 artifacts: split the blob into (words, bits) by pointer
+    arithmetic, ship them to the device, and run unpack -> reconstruct
+    -> edit scatter there. Device-path artifacts were range-checked at
+    compress time, so no host-side code inspection is needed. Returns
+    None when it cannot serve (backend without ``unpack_codes``, or a
+    non-default chunk size — the host decoder handles both)."""
+    from ..kernels.pack import CHUNK
+    words, bits, shape, dtype, step, chunk = \
+        szlike.sz_parse_packed(art.base_payload)
+    if chunk != CHUNK:
+        return None
+    be = _decode_backend(backend, shape, dtype, mesh, device_path)
+    if be is None or not hasattr(be, "unpack_codes"):
+        return None
+    idx, val = codec.decode_edits(art.edit_payload)
+    idx, val = _pad_pow2(idx, val, _size_of(shape))
+    w_j = _h2d(np.ascontiguousarray(words))
+    b_j = _h2d(np.ascontiguousarray(bits))
+    f_hat = be.reconstruct(be.unpack_codes(w_j, b_j, shape), step, dtype)
+    g = be.scatter_edits(f_hat, _h2d(idx.astype(np.int32)), _h2d(val))
+    return _d2h(g)
+
+
 def decompress_preserving_mss(art: CompressedArtifact,
                               device_path: DevicePath = "auto",
                               backend: BackendLike = "auto",
@@ -645,6 +771,11 @@ def decompress_preserving_mss(art: CompressedArtifact,
     if device_path is False:
         return decompress_artifact(art)
     reason = _device_decode_reason(art)
+    if reason is None and getattr(art, "path", "host") == "device" \
+            and szlike.sz_blob_entropy(art.base_payload) == "device-pack":
+        g = _device_unpack_decompress(art, backend, mesh, device_path)
+        if g is not None:
+            return g
     decoded = None
     if reason is None:
         decoded = _checked_codes(art)
@@ -730,6 +861,25 @@ def decompress_artifact_batch(arts: Sequence[CompressedArtifact],
     idx_b, val_b = _pad_pow2(idx_b, val_b, V)
     idx_j = _h2d(idx_b.astype(np.int32))
     val_j = _h2d(val_b)
+    # zero-host-entropy batch fast path (DESIGN.md §8): an all-device-
+    # pack device-path batch ships each member's (words, bits) straight
+    # to the device — no threaded host inflate stage to pipeline at all
+    from ..kernels.pack import CHUNK
+    if hasattr(be, "unpack_codes") and all(
+            getattr(a, "path", "host") == "device"
+            and szlike.sz_blob_entropy(a.base_payload) == "device-pack"
+            for a in arts):
+        parsed = [szlike.sz_parse_packed(a.base_payload) for a in arts]
+        if all(p[5] == CHUNK for p in parsed):
+            gs = []
+            for i, (words, bits, _, _, step, _) in enumerate(parsed):
+                w_j = _h2d(np.ascontiguousarray(words))
+                b_j = _h2d(np.ascontiguousarray(bits))
+                f_hat = be.reconstruct(
+                    be.unpack_codes(w_j, b_j, shape), step, dtype)
+                gs.append(be.scatter_edits(f_hat, idx_j[i], val_j[i]))
+            g_host = _d2h(jnp.stack(gs))
+            return [g_host[i] for i in range(len(arts))]
     gs = []
     for i, (r, _, _, step) in enumerate(codec.iter_decode_blobs(
             szlike.sz_decode_residuals, [a.base_payload for a in arts])):

@@ -53,7 +53,7 @@ import numpy as np
 
 from ..core import fixes
 from ..core.backend import BackendLike, resolve_backend
-from . import calibrate, pipeline
+from . import calibrate, pipeline, szlike
 
 
 class StreamBackpressure(RuntimeError):
@@ -102,7 +102,15 @@ class SpecCache:
 
     def get(self, key: Hashable, build: Callable[[], object]) -> object:
         """The cached value for ``key``, building (and possibly evicting
-        the least-recently-used entry) on a miss."""
+        the least-recently-used entry) on a miss.
+
+        Concurrent misses of one key both ``build()`` (the lock is
+        released around the build, which may trace/compile), but exactly
+        ONE winner's instance is kept and returned to every racer — a
+        loser inserting its own copy would hand callers two distinct
+        backend instances for one spec and silently churn jit's
+        static-argument cache keys. The losing thread's call is
+        reclassified as a hit (it returns the cached winner)."""
         with self._lock:
             if key in self._data:
                 self.hits += 1
@@ -111,6 +119,11 @@ class SpecCache:
             self.misses += 1
         value = build()          # outside the lock: build may trace/compile
         with self._lock:
+            if key in self._data:        # lost a build race: keep the winner
+                self.hits += 1
+                self.misses -= 1
+                self._data.move_to_end(key)
+                return self._data[key]
             self._data[key] = value
             self._data.move_to_end(key)
             while len(self._data) > self.maxsize:
@@ -185,6 +198,7 @@ class _StreamBase:
         # one-shot machine calibration (compress.calibrate) on first use
         self._fused_fix_voxels = fused_fix_voxels
         self._fix_mode_counts: Dict[str, int] = {}
+        self._codec_stats: Dict[str, List[int]] = {}   # name -> [count, bytes]
         self.cache = SpecCache(cache_size)
 
         self._slots = threading.Semaphore(window)
@@ -403,6 +417,15 @@ class _StreamBase:
         with self._lock:
             self._fix_mode_counts[mode] = self._fix_mode_counts.get(mode, 0) + 1
 
+    def _note_codec(self, name: str, nbytes: int) -> None:
+        """Record one member's entropy codec and base-payload size —
+        surfaced per-codec in ``stats()['entropy_codecs']`` so mixed
+        deflate / device-pack traffic stays attributable."""
+        with self._lock:
+            ent = self._codec_stats.setdefault(name, [0, 0])
+            ent[0] += 1
+            ent[1] += nbytes
+
     def stats(self) -> Dict[str, object]:
         """Live counter snapshot — the service stats endpoint surfaces
         this dict as JSON. ``fields_per_sec`` covers first submit to last
@@ -436,6 +459,8 @@ class _StreamBase:
                 fields_per_sec=(self._completed / elapsed
                                 if elapsed and self._completed else 0.0),
                 fix_modes=dict(self._fix_mode_counts),
+                entropy_codecs={k: dict(count=v[0], bytes=v[1])
+                                for k, v in self._codec_stats.items()},
                 fused_fix_voxels=self._fused_fix_voxels,
                 cache=self.cache.stats(),
             )
@@ -472,23 +497,33 @@ class CompressStream(_StreamBase):
 
     ``submit(field, xi)`` returns a ``concurrent.futures.Future`` that
     resolves to the ``CompressedArtifact`` — byte-identical to the
-    one-shot call. Same-(shape, dtype, base) requests coalesce into one
-    batched device dispatch (per-request ``xi`` rides along); the batch's
-    entropy coding runs on worker threads while the scheduler dispatches
-    the next batch. ``map(fields, xis)`` is the ordered convenience
-    wrapper. See ``_StreamBase`` for window/backpressure/batching knobs.
+    one-shot call. Same-(shape, dtype, base, entropy) requests coalesce
+    into one batched device dispatch (per-request ``xi`` rides along);
+    a deflate batch's entropy coding runs on worker threads while the
+    scheduler dispatches the next batch, while a device-pack batch
+    (DESIGN.md §8) finishes inline on the scheduler thread — its entropy
+    stream was built on the device, so no worker-pool entropy work
+    exists. ``map(fields, xis)`` is the ordered convenience wrapper.
+    See ``_StreamBase`` for window/backpressure/batching knobs.
     """
 
     def submit(self, field: np.ndarray, xi: float, *,
                base: pipeline.BaseName = "szlike",
                edit_value_dtype: str = "f4",
+               entropy: str = "deflate",
                block: bool = True,
                timeout: Optional[float] = None) -> Future:
         """Queue one field for compression; the Future resolves to its
-        ``CompressedArtifact``. Raises ``StreamBackpressure`` when
-        ``block=False`` and the in-flight window is full."""
+        ``CompressedArtifact``. ``entropy`` picks the residual byte
+        codec ("deflate" | "device-pack", DESIGN.md §8) and is part of
+        the coalescing spec: device-pack batches finish entirely on the
+        scheduler thread with zero worker-pool entropy work. Raises
+        ``StreamBackpressure`` when ``block=False`` and the in-flight
+        window is full."""
         field = np.asarray(field)
-        spec = (field.shape, str(field.dtype), base, edit_value_dtype)
+        pipeline._check_base_entropy(base, entropy)
+        spec = (field.shape, str(field.dtype), base, edit_value_dtype,
+                entropy)
         return self._submit(field, float(xi), spec, block=block,
                             timeout=timeout)
 
@@ -504,7 +539,7 @@ class CompressStream(_StreamBase):
 
     def _dispatch(self, batch: List[_Request]) -> None:
         spec = batch[0].spec
-        _, _, base, evd = spec
+        _, _, base, evd, entropy = spec
         fields = [req.item for req in batch]
         xi_arr = np.asarray([req.xi for req in batch], np.float64)
 
@@ -542,7 +577,7 @@ class CompressStream(_StreamBase):
             # the scheduler stays free for the next batch's device stage
             self._note_fix_mode("host")
             self._pool.submit(self._host_batch, batch, fields, xi_arr,
-                              base, evd)
+                              base, evd, entropy)
             return
 
         # pad the batch to a power-of-two member count: the vmapped
@@ -561,16 +596,24 @@ class CompressStream(_StreamBase):
         if self._use_fused_fix(fields[0], be):
             self._note_fix_mode("fused")
             db = pipeline._device_batch_stage(fields, xi_arr, be,
-                                              self._max_iters, steps)
+                                              self._max_iters, steps,
+                                              entropy=entropy)
         else:
             self._note_fix_mode("pipelined")
             db = pipeline._device_pipelined_stage(fields, xi_arr, be,
                                                   self._max_iters, steps,
-                                                  n_real=B)
+                                                  n_real=B, entropy=entropy)
         self._note_batch(B, pad, db.nbytes_h2d, db.nbytes_d2h,
                          time.perf_counter() - t0)
         for i, req in enumerate(batch):
-            self._pool.submit(self._finish_compress, db, i, evd, req)
+            if db.packed is not None:
+                # device-pack: the entropy stream already left the device
+                # as framed words — member finish is pure header assembly,
+                # so it runs inline and the worker pool sees no entropy
+                # work at all (DESIGN.md §8)
+                self._finish_compress(db, i, evd, req)
+            else:
+                self._pool.submit(self._finish_compress, db, i, evd, req)
 
     def _use_fused_fix(self, field: np.ndarray, be) -> bool:
         """Whether this batch's fix loops run as ONE batched while_loop
@@ -599,17 +642,19 @@ class CompressStream(_StreamBase):
         return field.size <= self._fused_fix_voxels
 
     def _host_batch(self, batch: List[_Request], fields, xi_arr,
-                    base: str, evd: str) -> None:
+                    base: str, evd: str, entropy: str = "deflate") -> None:
         try:
             arts = pipeline.compress_preserving_mss_batch(
                 fields, xi_arr, base=base, edit_value_dtype=evd,
                 max_iters=self._max_iters, backend=self._backend,
-                mesh=self._mesh, device_path=False)
+                mesh=self._mesh, device_path=False, entropy=entropy)
         except BaseException as exc:                # noqa: BLE001
             self._fail_batch(batch, exc)
             return
         self._note_batch(len(batch), 0, 0, 0, 0.0)
         for req, art in zip(batch, arts):
+            self._note_codec(getattr(art, "entropy", "deflate"),
+                             len(art.base_payload))
             self._finish(req, result=art)
 
     def _finish_compress(self, db: "pipeline._DeviceBatch", i: int,
@@ -622,6 +667,8 @@ class CompressStream(_StreamBase):
             return
         with self._lock:
             self._t_encode += time.perf_counter() - t0
+        self._note_codec(getattr(art, "entropy", "deflate"),
+                         len(art.base_payload))
         self._finish(req, result=art)
 
 
@@ -658,7 +705,27 @@ class DecompressStream(_StreamBase):
         return [f.result() for f in futs]
 
     def _dispatch(self, batch: List[_Request]) -> None:
-        self._pool.submit(self._decode_batch, batch)
+        if self._device_path is not False and all(
+                self._art_codec(req.item) == "device-pack" and
+                getattr(req.item, "path", "host") == "device"
+                for req in batch):
+            # device-pack device-path batch: residual decode is a device
+            # unpack, so there is no host entropy work to overlap — run
+            # inline rather than paying a worker-pool hop (DESIGN.md §8)
+            self._decode_batch(batch)
+        else:
+            self._pool.submit(self._decode_batch, batch)
+
+    @staticmethod
+    def _art_codec(art: pipeline.CompressedArtifact) -> str:
+        """The artifact's residual entropy codec, trusting the payload
+        magic over the (v3+) artifact field when the base is szlike."""
+        if art.base == "szlike":
+            try:
+                return szlike.sz_blob_entropy(art.base_payload)
+            except ValueError:
+                pass
+        return getattr(art, "entropy", "deflate")
 
     def _decode_batch(self, batch: List[_Request]) -> None:
         arts = [req.item for req in batch]
@@ -682,5 +749,7 @@ class DecompressStream(_StreamBase):
                          sum(len(a.base_payload) + len(a.edit_payload)
                              for a in arts),
                          nbytes, time.perf_counter() - t0)
+        for a in arts:
+            self._note_codec(self._art_codec(a), len(a.base_payload))
         for req, g in zip(batch, gs):
             self._finish(req, result=g)

@@ -52,6 +52,15 @@ import numpy as np
 # shared host/device contract above). SZJ1 blobs used f64-multiply-then-
 # cast and would silently reconstruct a different f_hat — refuse them.
 _MAGIC = b"SZJ2"
+# SZP1: same header, residuals carried as the chunked-bitplane device
+# codec's (bits table, uint32 word stream) instead of DEFLATE chunks
+# (repro.kernels.pack; DESIGN.md §8)
+_MAGIC_PACK = b"SZP1"
+
+#: residual entropy codecs a blob can carry: "deflate" (SZJ2, host
+#: zlib — the compatibility default) and "device-pack" (SZP1, the
+#: chunked-bitplane codec that also runs fully on device)
+ENTROPIES = ("deflate", "device-pack")
 
 # intermediate cumsums of the int32 inverse reach 2^d * max|q| (d <= 3),
 # so max|q| < 2^27  <=>  max|f|/xi < 2^28 keeps everything inside int32
@@ -231,24 +240,138 @@ def _unpack_residuals(buf: bytes, n: int) -> np.ndarray:
     return out[:n]
 
 
+def check_entropy(entropy: str) -> None:
+    """Validate a residual entropy codec name against ``ENTROPIES``."""
+    if entropy not in ENTROPIES:
+        raise ValueError(
+            f"unknown entropy codec {entropy!r}; expected one of "
+            f"{ENTROPIES}")
+
+
+def _szlike_header(magic: bytes, shape: Tuple[int, ...], dtype,
+                   step: float) -> bytes:
+    dtype = np.dtype(dtype)
+    ndim = len(shape)
+    size = int(np.prod(shape, dtype=np.int64)) if shape else 1
+    hdr = struct.pack("<4sBBdQ", magic, ndim,
+                      0 if dtype == np.float32 else 1, float(step), size)
+    return hdr + struct.pack(f"<{ndim}Q", *shape)
+
+
 def sz_encode_residuals(r: np.ndarray, shape: Tuple[int, ...],
-                        dtype, step: float) -> bytes:
+                        dtype, step: float, *,
+                        entropy: str = "deflate") -> bytes:
     """Serialize Lorenzo residual codes into the self-describing SZ-like
     blob. The single entropy-coding entry point for BOTH paths: the host
     codec packs its own int64 residuals, the device pipeline packs the
     int32 codes pulled off the device — identical codes give identical
-    bytes."""
-    dtype = np.dtype(dtype)
-    ndim = len(shape)
-    size = int(np.prod(shape, dtype=np.int64)) if shape else 1
-    hdr = struct.pack("<4sBBdQ", _MAGIC, ndim,
-                      0 if dtype == np.float32 else 1, float(step), size)
-    dims = struct.pack(f"<{ndim}Q", *shape)
-    return hdr + dims + _pack_residuals(np.asarray(r))
+    bytes. ``entropy`` picks the residual codec (``ENTROPIES``);
+    "device-pack" runs the chunked-bitplane packer's numpy mirror here
+    (the device pipeline hands its already-packed stream to
+    ``sz_encode_packed`` directly and skips this)."""
+    check_entropy(entropy)
+    if entropy == "device-pack":
+        from ..kernels import pack
+        words, bits = pack.pack_codes_host(np.asarray(r))
+        return sz_encode_packed(words, bits, shape, dtype, step)
+    return _szlike_header(_MAGIC, shape, dtype, step) \
+        + _pack_residuals(np.asarray(r))
 
 
-def sz_compress(f: np.ndarray, xi: float) -> bytes:
-    """Compress with absolute error bound xi. Self-describing blob."""
+def sz_encode_packed(words: np.ndarray, bits: np.ndarray,
+                     shape: Tuple[int, ...], dtype, step: float, *,
+                     chunk: Optional[int] = None) -> bytes:
+    """Serialize an already-packed chunked-bitplane stream (from any of
+    the ``repro.kernels.pack`` codecs — all bitwise identical) into the
+    SZP1 blob: the SZJ2-shaped header, then ``<IIQ`` (chunk size, chunk
+    count, word count), the per-chunk bit widths as uint8, and the
+    little-endian uint32 word stream. Pure byte assembly — the entropy
+    work already happened wherever the stream was packed."""
+    from ..kernels import pack
+    if chunk is None:
+        chunk = pack.CHUNK
+    words = np.ascontiguousarray(np.asarray(words, np.uint32))
+    bits = np.asarray(bits)
+    n = int(np.prod(shape, dtype=np.int64)) if shape else 1
+    n_chunks = -(-n // chunk) if n else 0
+    if bits.size != n_chunks:
+        raise ValueError(
+            f"bit-width table has {bits.size} chunks, expected "
+            f"{n_chunks} for shape {shape} at chunk={chunk}")
+    sub = struct.pack("<IIQ", chunk, n_chunks, words.size)
+    return _szlike_header(_MAGIC_PACK, shape, dtype, step) + sub \
+        + bits.astype(np.uint8).tobytes() \
+        + words.astype("<u4").tobytes()
+
+
+def _parse_header(blob: bytes):
+    hdr = struct.calcsize("<4sBBdQ")
+    if len(blob) < hdr:
+        raise ValueError(
+            f"truncated SZ-like blob: {len(blob)} bytes, header needs {hdr}")
+    magic, ndim, dt, step, size = struct.unpack_from("<4sBBdQ", blob, 0)
+    off = hdr
+    if len(blob) < off + 8 * ndim:
+        raise ValueError(
+            f"truncated SZ-like blob: {len(blob)} bytes, {ndim}-d header "
+            f"needs {off + 8 * ndim}")
+    shape = struct.unpack_from(f"<{ndim}Q", blob, off)
+    return magic, tuple(int(s) for s in shape), \
+        np.dtype(np.float32 if dt == 0 else np.float64), float(step), \
+        int(size), off + 8 * ndim
+
+
+def sz_blob_entropy(blob: bytes) -> str:
+    """Which residual entropy codec an SZ-like blob carries ("deflate"
+    or "device-pack") — the read side's codec negotiation hook: callers
+    route SZP1 payloads to the on-device unpacker without touching the
+    byte stream."""
+    magic = bytes(blob[:4])
+    if magic == _MAGIC:
+        return "deflate"
+    if magic == _MAGIC_PACK:
+        return "device-pack"
+    raise ValueError("not an SZ-like blob")
+
+
+def sz_parse_packed(blob: bytes
+                    ) -> Tuple[np.ndarray, np.ndarray, Tuple[int, ...],
+                               np.dtype, float, int]:
+    """Split an SZP1 blob into ``(words, bits, shape, dtype, step,
+    chunk)`` WITHOUT unpacking codes — pure pointer arithmetic, so the
+    device read path can ship words/bits to the accelerator with zero
+    host entropy work. Header lengths are validated against
+    ``len(blob)``: truncated or over-long blobs are hard errors."""
+    magic, shape, dtype, step, size, off = _parse_header(blob)
+    if magic != _MAGIC_PACK:
+        raise ValueError("not a packed (SZP1) SZ-like blob")
+    sub = struct.calcsize("<IIQ")
+    if len(blob) < off + sub:
+        raise ValueError(
+            f"SZP1 blob is {len(blob)} bytes, too short for its "
+            "pack sub-header (truncated blob)")
+    chunk, n_chunks, n_words = struct.unpack_from("<IIQ", blob, off)
+    off += sub
+    expect_chunks = (-(-size // chunk) if size else 0) if chunk else -1
+    if n_chunks != expect_chunks:
+        raise ValueError(
+            f"SZP1 header: {n_chunks} chunks inconsistent with "
+            f"{size} codes at chunk={chunk}")
+    end = off + n_chunks + 4 * n_words
+    if end != len(blob):
+        raise ValueError(
+            f"SZP1 blob is {len(blob)} bytes, header demands {end} "
+            "(truncated or over-long blob)")
+    bits = np.frombuffer(blob, np.uint8, n_chunks, off).astype(np.int32)
+    words = np.frombuffer(blob, "<u4", n_words, off + n_chunks)
+    words = words.astype(np.uint32, copy=False)
+    return words, bits, shape, dtype, step, int(chunk)
+
+
+def sz_compress(f: np.ndarray, xi: float, *,
+                entropy: str = "deflate") -> bytes:
+    """Compress with absolute error bound xi. Self-describing blob;
+    ``entropy`` picks the residual codec (see ``ENTROPIES``)."""
     f = np.asarray(f)
     if f.dtype not in (np.float32, np.float64):
         raise TypeError(f"float field expected, got {f.dtype}")
@@ -259,7 +382,7 @@ def sz_compress(f: np.ndarray, xi: float) -> bytes:
     else:
         q = np.round(f.astype(np.float64) / step).astype(np.int64)
     r = _lorenzo_residual_np(q)
-    return sz_encode_residuals(r, f.shape, f.dtype, step)
+    return sz_encode_residuals(r, f.shape, f.dtype, step, entropy=entropy)
 
 
 def sz_decode_residuals(blob: bytes
@@ -270,16 +393,21 @@ def sz_decode_residuals(blob: bytes
     array. This is the host half of the device decompression path
     (DESIGN.md §5) — the byte-stream-sequential DEFLATE decode runs once
     on the host, and everything downstream (cumsum reconstruction,
-    dequantization, edit scatter) can stay on device."""
-    magic, ndim, dt, step, size = struct.unpack_from("<4sBBdQ", blob, 0)
+    dequantization, edit scatter) can stay on device. Dispatches on the
+    blob magic: SZP1 (device-pack) payloads decode through the packer's
+    numpy mirror, so every consumer of this function reads both codecs
+    transparently."""
+    magic, shape, dtype, step, size, off = _parse_header(blob)
+    if magic == _MAGIC_PACK:
+        from ..kernels import pack
+        words, bits, shape, dtype, step, chunk = sz_parse_packed(blob)
+        r = pack.unpack_codes_host(words, bits, size, chunk) \
+            .astype(np.int64).reshape(shape)
+        return r, shape, dtype, step
     if magic != _MAGIC:
         raise ValueError("not an SZ-like blob")
-    off = struct.calcsize("<4sBBdQ")
-    shape = struct.unpack_from(f"<{ndim}Q", blob, off)
-    off += 8 * ndim
     r = _unpack_residuals(blob[off:], size).reshape(shape)
-    return r, tuple(int(s) for s in shape), \
-        np.dtype(np.float32 if dt == 0 else np.float64), float(step)
+    return r, shape, dtype, step
 
 
 def codes_fit_int32(r: np.ndarray) -> bool:

@@ -211,6 +211,21 @@ class ReferenceBackend:
         from .driver import apply_edits_device
         return apply_edits_device(f_hat, idx, val)
 
+    # -- on-device entropy codec (DESIGN.md §8) ------------------------
+    def pack_codes(self, r: jnp.ndarray):
+        """int32 residual codes -> chunked-bitplane stream
+        ``(words, bits, n_words)`` (pure-jnp codec; see
+        ``repro.kernels.pack``)."""
+        from ..kernels.pack import pack_codes_jnp
+        return pack_codes_jnp(r)
+
+    def unpack_codes(self, words, bits, shape: Tuple[int, ...]
+                     ) -> jnp.ndarray:
+        """Inverse of ``pack_codes``: the int32 code array of ``shape``
+        from a packed stream."""
+        from ..kernels.pack import unpack_codes_jnp
+        return unpack_codes_jnp(words, bits, tuple(shape))
+
 
 @dataclasses.dataclass(frozen=True)
 class PallasBackend:
@@ -318,6 +333,21 @@ class PallasBackend:
         irregular scatter has no slab structure to exploit)."""
         from .driver import apply_edits_device
         return apply_edits_device(f_hat, idx, val)
+
+    # -- on-device entropy codec (DESIGN.md §8) ------------------------
+    def pack_codes(self, r: jnp.ndarray):
+        """int32 residual codes -> chunked-bitplane stream
+        ``(words, bits, n_words)`` via the per-chunk Pallas transpose
+        kernel (bitwise identical to the jnp and host codecs)."""
+        from ..kernels.pack import pack_codes_pallas
+        return pack_codes_pallas(r, interpret=self._interpret())
+
+    def unpack_codes(self, words, bits, shape: Tuple[int, ...]
+                     ) -> jnp.ndarray:
+        """Inverse of ``pack_codes`` via the Pallas unpack kernel."""
+        from ..kernels.pack import unpack_codes_pallas
+        return unpack_codes_pallas(words, bits, tuple(shape),
+                                   interpret=self._interpret())
 
     def _tiled_step(self, g: jnp.ndarray, topo, tile: int):
         """pMSz-style block-decomposed iteration over the slab axis.

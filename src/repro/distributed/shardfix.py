@@ -565,5 +565,23 @@ class ShardedBackend:
         return sharded_scatter_edits(f_hat, idx, val, be.mesh,
                                      axis_name=be.axis_name)
 
+    # -- on-device entropy codec (DESIGN.md §8) --------------------------
+    def pack_codes(self, r: jnp.ndarray):
+        """Chunked-bitplane pack on the global code array. Every
+        per-chunk stage (zigzag, plane transpose, width reduction) is
+        chunk-independent and the offset scan/compaction are one
+        XLA scan + scatter, so GSPMD partitions the jnp codec across
+        the mesh without bespoke collectives — and the packed stream
+        stays bitwise identical to every other backend's."""
+        from ..kernels.pack import pack_codes_jnp
+        return pack_codes_jnp(r)
+
+    def unpack_codes(self, words, bits, shape: Tuple[int, ...]
+                     ) -> jnp.ndarray:
+        """Inverse of ``pack_codes`` on global arrays (same GSPMD
+        argument as ``pack_codes``)."""
+        from ..kernels.pack import unpack_codes_jnp
+        return unpack_codes_jnp(words, bits, tuple(shape))
+
 
 register_backend(ShardedBackend())

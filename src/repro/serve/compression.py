@@ -71,7 +71,9 @@ class ServiceConfig:
         slab-sharded across the device mesh.
     ``workers``
         Host worker threads per stream for entropy coding/decoding
-        (default: scales with ``max_batch``).
+        (default: scales with ``max_batch``). Device-pack requests
+        (``entropy="device-pack"``) never touch these workers — their
+        entropy streams are built on the device (DESIGN.md §8).
     ``cache_size``
         LRU capacity of each stream's dispatch-spec cache
         (``repro.compress.stream.SpecCache``).
@@ -148,13 +150,19 @@ class CompressionService:
 
     def submit_compress(self, field: np.ndarray, xi: float, *,
                         base: pipeline.BaseName = "szlike",
-                        edit_value_dtype: str = "f4") -> Future:
+                        edit_value_dtype: str = "f4",
+                        entropy: str = "deflate") -> Future:
         """Queue a field; the Future resolves to its
         ``CompressedArtifact`` (byte-identical to the one-shot call).
-        ``xi`` and ``base`` are free per request — only same-(shape,
-        dtype, base) requests share a batch."""
+        ``xi``, ``base``, and ``entropy`` ("deflate" | "device-pack",
+        DESIGN.md §8) are free per request — only same-(shape, dtype,
+        base, entropy) requests share a batch. Device-pack batches do
+        their residual entropy coding on the device, bypassing the host
+        worker pool entirely; ``stats()`` breaks traffic down per codec
+        under ``entropy_codecs``."""
         return self._guard(self._compress.submit, field, xi, base=base,
-                           edit_value_dtype=edit_value_dtype)
+                           edit_value_dtype=edit_value_dtype,
+                           entropy=entropy)
 
     def submit_decompress(self, art: pipeline.CompressedArtifact) -> Future:
         """Queue an artifact; the Future resolves to the decompressed
@@ -164,11 +172,13 @@ class CompressionService:
     # -- sync conveniences --------------------------------------------
     def compress(self, field: np.ndarray, xi: float, *,
                  base: pipeline.BaseName = "szlike",
-                 edit_value_dtype: str = "f4"
+                 edit_value_dtype: str = "f4",
+                 entropy: str = "deflate"
                  ) -> pipeline.CompressedArtifact:
         """Blocking ``submit_compress(...).result()``."""
-        return self.submit_compress(field, xi, base=base,
-                                    edit_value_dtype=edit_value_dtype).result()
+        return self.submit_compress(
+            field, xi, base=base, edit_value_dtype=edit_value_dtype,
+            entropy=entropy).result()
 
     def decompress(self, art: pipeline.CompressedArtifact) -> np.ndarray:
         """Blocking ``submit_decompress(...).result()``."""

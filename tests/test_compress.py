@@ -211,3 +211,92 @@ def test_pipeline_metrics_fields():
     art = compress_preserving_mss(f, xi, base="szlike")
     assert art.t_base >= 0 and art.t_fix >= 0
     assert 0 <= art.edit_ratio < 0.5
+
+
+# ---------------------------------------------------------------------------
+# edit-codec hardening (PR 7 bugfixes)
+# ---------------------------------------------------------------------------
+
+def _f32_bits(u):
+    return np.array([u], np.uint32).view(np.float32)
+
+
+def test_bf16_rounds_ties_to_even():
+    """The old ``(v32 + 0x8000) >> 16`` rounded every halfway case up —
+    a systematic magnitude bias. IEEE round-to-nearest-even must leave
+    an even result's trailing bit clear on exact ties."""
+    # 1.0 + 2^-8: exactly halfway between bf16 0x3F80 (even) and 0x3F81
+    tie_down = _f32_bits(0x3F808000)
+    # next representable up from 0x3F81: halfway, odd lsb -> round UP to
+    # 0x3F82 (even); plain truncation would give 0x3F81
+    tie_up = _f32_bits(0x3F818000)
+    # just above a tie must still round up
+    above = _f32_bits(0x3F808001)
+    idx = np.array([1, 2, 3], np.int64)
+    blob = encode_edits(idx, np.concatenate([tie_down, tie_up, above]),
+                        value_dtype="bf16")
+    _, out = decode_edits(blob)
+    got = out.view(np.uint32) >> 16
+    assert got.tolist() == [0x3F80, 0x3F82, 0x3F81], \
+        [hex(g) for g in got]
+
+
+def test_bf16_preserves_nan_and_inf():
+    """NaN payloads in the low mantissa bits must not decay to Inf (the
+    +0x8000 carry used to ripple into the exponent), negative NaNs must
+    not wrap to +0 via uint32 overflow, and Inf stays Inf."""
+    vals = np.concatenate([
+        _f32_bits(0x7F800001),      # +NaN, payload only in dropped bits
+        _f32_bits(0xFF800001),      # -NaN (old code: uint32 wrap -> +0)
+        _f32_bits(0x7F800000),      # +Inf
+        _f32_bits(0xFF800000),      # -Inf
+        _f32_bits(0x7FC00000),      # quiet NaN with surviving payload
+    ])
+    blob = encode_edits(np.arange(5), vals, value_dtype="bf16")
+    _, out = decode_edits(blob)
+    assert np.isnan(out[0])
+    assert np.isnan(out[1]) and np.signbit(out[1])
+    assert np.isposinf(out[2])
+    assert np.isneginf(out[3])
+    assert np.isnan(out[4])
+
+
+def test_bf16_error_bound_unchanged_for_finite_values():
+    rng = np.random.default_rng(3)
+    val = rng.normal(size=256).astype(np.float32)
+    idx = np.arange(val.size, dtype=np.int64)
+    _, out = decode_edits(encode_edits(idx, val, value_dtype="bf16"))
+    # RNE halves the worst case vs truncation: <= 2^-9 relative
+    rel = np.abs(out - val) / np.maximum(np.abs(val), 1e-30)
+    assert np.max(rel) <= 2.0 ** -8
+
+
+def test_decode_edits_rejects_truncated_and_overlong_blobs():
+    idx = np.array([5, 9, 100], np.int64)
+    val = np.array([1.0, 2.0, 3.0], np.float32)
+    blob = encode_edits(idx, val)
+    i2, v2 = decode_edits(blob)                    # the intact blob is fine
+    np.testing.assert_array_equal(i2, idx)
+    with pytest.raises(ValueError, match="length mismatch"):
+        decode_edits(blob[:-1])                    # truncated value stream
+    with pytest.raises(ValueError, match="length mismatch"):
+        decode_edits(blob[:len(blob) // 2])        # truncated mid-stream
+    with pytest.raises(ValueError, match="truncated"):
+        decode_edits(blob[:10])                    # shorter than the header
+    with pytest.raises(ValueError, match="length mismatch"):
+        decode_edits(blob + b"\x00")               # trailing garbage
+
+
+def test_varint_decode_rejects_trailing_values():
+    enc = _varint_encode(np.array([1, 2, 3], np.int64))
+    np.testing.assert_array_equal(_varint_decode(enc, 3), [1, 2, 3])
+    with pytest.raises(ValueError, match="over-long"):
+        _varint_decode(enc, 2)                     # a whole extra value
+    with pytest.raises(ValueError, match="truncated"):
+        _varint_decode(enc, 4)
+    with pytest.raises(ValueError, match="over-long"):
+        _varint_decode(enc + b"\x05", 3)           # dangling terminated byte
+    with pytest.raises(ValueError, match="over-long"):
+        _varint_decode(enc + b"\x80", 3)           # dangling continuation
+    with pytest.raises(ValueError, match="0 values"):
+        _varint_decode(b"\x07", 0)

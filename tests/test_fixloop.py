@@ -292,3 +292,38 @@ def test_stream_forced_pipelined_mode_counted(monkeypatch):
         solo = compress_preserving_mss(f, 0.3)
         assert a.base_payload == solo.base_payload
         assert a.edit_payload == solo.edit_payload
+
+
+def test_calibration_cache_keyed_on_interpret_policy(monkeypatch):
+    """The cache key must include the backend's RESOLVED Pallas interpret
+    decision: an interpreted stencil is orders of magnitude slower per
+    iteration than the compiled one, so a threshold measured under one
+    policy is wrong for the other — the old key silently served the
+    stale number when ``MSZ_PALLAS_INTERPRET`` flipped mid-process."""
+    monkeypatch.delenv(calibrate.ENV_VAR, raising=False)
+    calibrate.clear_cache()
+    measured = []
+
+    def fake_measure(be, dtype):
+        measured.append(bool(be._interpret())
+                        if hasattr(be, "_interpret") else None)
+        return calibrate.FixCalibration(
+            threshold_voxels=1000 + len(measured), overhead_s=0.0,
+            solo_voxel_s=0.0, batched_voxel_s=0.0, source="measured")
+
+    monkeypatch.setattr(calibrate, "_measure", fake_measure)
+    monkeypatch.setenv("MSZ_PALLAS_INTERPRET", "1")
+    cal_on = calibrate.fused_fix_threshold("pallas")
+    monkeypatch.setenv("MSZ_PALLAS_INTERPRET", "0")
+    cal_off = calibrate.fused_fix_threshold("pallas")
+    # the policy flip re-measures under a distinct key (the old shared
+    # key returned cal_on here) ...
+    assert measured == [True, False]
+    assert cal_on.threshold_voxels != cal_off.threshold_voxels
+    # ... and each policy then hits its own cached entry
+    monkeypatch.setenv("MSZ_PALLAS_INTERPRET", "1")
+    assert calibrate.fused_fix_threshold("pallas") is cal_on
+    monkeypatch.setenv("MSZ_PALLAS_INTERPRET", "0")
+    assert calibrate.fused_fix_threshold("pallas") is cal_off
+    assert len(measured) == 2
+    calibrate.clear_cache()

@@ -332,3 +332,156 @@ def test_service_stats_http_endpoint():
                 assert resp.read().strip() == b"ok"
         finally:
             server.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# on-device entropy coding through the stream (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+def _record_pool(stream):
+    """Wrap the stream's worker-pool submit so tests can assert exactly
+    which jobs (by function name) the scheduler handed off."""
+    jobs = []
+    orig = stream._pool.submit
+
+    def recording_submit(fn, *args, **kw):
+        jobs.append(getattr(fn, "__name__", str(fn)))
+        return orig(fn, *args, **kw)
+
+    stream._pool.submit = recording_submit
+    return jobs
+
+
+def test_device_pack_compress_bypasses_worker_pool():
+    """A device-pack batch performs ZERO host entropy work: the stream
+    scheduler must never hand a device-pack member to the worker pool
+    (its entropy stream left the device fully framed), while the
+    artifacts stay byte-identical to one-shot device-pack calls."""
+    fields, xis = _traffic(SHAPE_3D, 4)
+    refs = [compress_preserving_mss(f, xi, entropy="device-pack")
+            for f, xi in zip(fields, xis)]
+    with CompressStream(window=4, max_batch=4, linger_ms=50) as cs:
+        jobs = _record_pool(cs)
+        futs = [cs.submit(f, xi, entropy="device-pack")
+                for f, xi in zip(fields, xis)]
+        arts = [f.result() for f in futs]
+        st = cs.stats()
+    assert jobs == [], f"worker pool saw {jobs} for device-pack traffic"
+    _assert_identical(arts, refs)
+    for a in arts:
+        assert a.entropy == "device-pack"
+    assert st["entropy_codecs"]["device-pack"]["count"] == 4
+    assert st["entropy_codecs"]["device-pack"]["bytes"] == \
+        sum(len(a.base_payload) for a in arts)
+
+
+def test_deflate_compress_still_uses_worker_pool():
+    fields, xis, refs = _solo_artifacts(SHAPE_3D, 3)
+    with CompressStream(window=3, max_batch=3, linger_ms=50) as cs:
+        jobs = _record_pool(cs)
+        arts = cs.map(fields, xis)
+        st = cs.stats()
+    assert "_finish_compress" in jobs   # deflate encode runs on workers
+    _assert_identical(arts, refs)
+    assert st["entropy_codecs"]["deflate"]["count"] == 3
+
+
+def test_entropy_is_part_of_the_coalescing_spec():
+    """Mixed-codec traffic of one shape must not share a batch — a
+    device-pack member inside a deflate batch (or vice versa) would
+    force a whole-batch codec decision."""
+    fields, xis = _traffic(SHAPE_3D, 4)
+    with CompressStream(window=4, max_batch=4, linger_ms=60) as cs:
+        futs = [cs.submit(f, xi, entropy=e)
+                for (f, xi, e) in zip(fields, xis,
+                                      ["deflate", "device-pack"] * 2)]
+        arts = [f.result() for f in futs]
+        st = cs.stats()
+    assert st["batches"] >= 2           # codecs split the batch
+    for a, e in zip(arts, ["deflate", "device-pack"] * 2):
+        assert a.entropy == e
+        ref = compress_preserving_mss(
+            fields[arts.index(a)], xis[arts.index(a)], entropy=e)
+        assert a.base_payload == ref.base_payload
+
+
+def test_device_pack_decompress_runs_inline():
+    fields, xis = _traffic(SHAPE_3D, 3)
+    arts = [compress_preserving_mss(f, xi, entropy="device-pack")
+            for f, xi in zip(fields, xis)]
+    want = [decompress_preserving_mss(a) for a in arts]
+    with DecompressStream(window=3, max_batch=3, linger_ms=50) as ds:
+        jobs = _record_pool(ds)
+        gs = ds.map(arts)
+        st = ds.stats()
+    assert jobs == [], f"worker pool saw {jobs} for device-pack artifacts"
+    for g, w in zip(gs, want):
+        np.testing.assert_array_equal(g, w)
+    assert st["entropy_codecs"]["device-pack"]["count"] == 3
+
+
+def test_stream_submit_rejects_bad_entropy():
+    f, xis = _traffic(SHAPE_3D, 1)
+    with CompressStream(window=1) as cs:
+        with pytest.raises(ValueError, match="entropy"):
+            cs.submit(f[0], xis[0], entropy="huffman")
+        with pytest.raises(ValueError, match="szlike"):
+            cs.submit(f[0], xis[0], base="zfplike", entropy="device-pack")
+
+
+def test_service_forwards_entropy_and_reports_codecs():
+    fields, xis = _traffic(SHAPE_3D, 2)
+    ref = compress_preserving_mss(fields[0], xis[0], entropy="device-pack")
+    with CompressionService(ServiceConfig(window=4, max_batch=2)) as svc:
+        a = svc.compress(fields[0], xis[0], entropy="device-pack")
+        b = svc.compress(fields[1], xis[1])            # default: deflate
+        g = svc.decompress(a)
+        st = svc.stats()
+    assert a.base_payload == ref.base_payload
+    assert b.entropy == "deflate"
+    np.testing.assert_array_equal(g, decompress_preserving_mss(ref))
+    assert st["compress"]["entropy_codecs"]["device-pack"]["count"] == 1
+    assert st["compress"]["entropy_codecs"]["deflate"]["count"] == 1
+    assert st["decompress"]["entropy_codecs"]["device-pack"]["count"] == 1
+
+
+# ---------------------------------------------------------------------------
+# SpecCache build race (one winner per key)
+# ---------------------------------------------------------------------------
+
+def test_spec_cache_build_race_single_winner():
+    """Concurrent misses of one key must converge on ONE cached instance:
+    the old code re-inserted every racer's build unconditionally, so the
+    loser's instance replaced the winner's and callers ended up holding
+    two distinct backends for one spec (churning jit cache keys). The
+    losing build is counted as a hit — the caller got the cached value."""
+    import threading
+
+    cache = SpecCache(8)
+    n = 6
+    barrier = threading.Barrier(n)
+    built = []
+
+    def build():
+        barrier.wait()          # every thread reaches its miss before
+        obj = object()          # anyone can insert: maximal race
+        built.append(obj)
+        return obj
+
+    results = [None] * n
+
+    def worker(i):
+        results[i] = cache.get("spec", build)
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(n)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert len(built) == n                     # everyone built (raced)...
+    assert len({id(r) for r in results}) == 1  # ...but all hold ONE winner
+    st = cache.stats()
+    assert st["misses"] == 1                   # one true miss
+    assert st["hits"] == n - 1                 # losers reclassified as hits
+    assert st["size"] == 1
+    assert cache.get("spec", lambda: object()) is results[0]
