@@ -1,17 +1,33 @@
 """Fig. 9/10 reinterpretation: the paper's strong-scaling study sweeps CPU
-threads; we sweep two axes instead:
+threads; we sweep three axes instead:
 
 * *problem size* on one device — flat vertices/s means the dense
   formulation scales linearly in V, the property the paper's
   parallelization targets;
 * *device count* over the ('data',) mesh — the slab-sharded SPMD loop
   (repro.distributed.shardfix) on 1/2/4/8 devices of one field, the
-  strong-scaling axis proper. On CPU hosts emulate devices with
-  ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (set before jax
-  initializes); with one device the sweep reports the degenerate point
-  only.
+  strong-scaling axis proper;
+* *mesh shape* — 1D slab chains vs 2D block meshes at the same device
+  count, with the compute/communication-overlap schedule on and off
+  (DESIGN.md §9). This sweep writes ``BENCH_shard.json``;
+  ``--check-regression`` fails the process when block decomposition at
+  the top device count loses to the slab chain — the CI guard for the
+  block-mesh PR's core claim.
+
+On CPU hosts emulate devices with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (set before jax
+initializes); with one device the sweeps report the degenerate point
+only.
+
+  PYTHONPATH=src python -m benchmarks.fig9_scaling --smoke --check-regression
+  PYTHONPATH=src python -m benchmarks.run --only fig9
 """
 from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+from typing import Dict
 
 import numpy as np
 import jax
@@ -21,9 +37,13 @@ from repro.compress.szlike import effective_step
 from repro.core import field_topology, fused_fix
 from repro.core.backend import get_backend
 from repro.data import synthetic_field
-from repro.launch.mesh import make_data_mesh
+from repro.distributed import halo_plan, sharded_fix
+from repro.launch.mesh import (factor_block_shape, make_block_mesh,
+                               make_data_mesh)
 
 from .common import base_transform_closure, emit, timeit
+
+OUT_JSON = "BENCH_shard.json"
 
 
 def _field_pair(shape, rng):
@@ -89,6 +109,127 @@ def run(quick: bool = True):
         emit(f"fig9/base_transform/sharded/ndev={n_dev}/V={V}", t,
              f"Mvert_s={V/t:.3f}")
 
+    # -- mesh-shape sweep: slab chain vs block mesh, overlap on/off ----
+    bench_shard(quick=quick)
+
+
+def _median_s(fn, reps: int = 3) -> float:
+    """Median wall seconds over ``reps`` calls after one warm-up (the
+    warm-up absorbs trace+compile so rows time steady-state dispatch)."""
+    fn()
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return sorted(ts)[len(ts) // 2]
+
+
+def bench_shard(quick: bool = True, check_regression: bool = False,
+                out: str = OUT_JSON) -> Dict[str, object]:
+    """Slab-vs-block mesh-shape sweep of the sharded fix loop on one
+    field: 1D ``('data',)`` chains against 2D ``('data_y','data_z')``
+    block meshes at matched device counts, the overlapped schedule on
+    and off. Writes ``out`` and returns the document; with
+    ``check_regression`` (and >= 4 devices available) the process fails
+    when either (a) the best block configuration at the top device count
+    moves MORE halo bytes per iteration than the slab chain — the
+    deterministic face-vs-plane claim block decomposition exists for —
+    or (b) it is slower beyond a generous wall-clock margin. The
+    wall-clock margin is deliberately loose (1.5x): emulated host
+    devices share cores, so smoke-sized timings jitter 30%+ run to run;
+    the byte guard carries the strict claim, the time guard only
+    catches gross scheduling regressions."""
+    n_avail = len(jax.devices())
+    shape = (16, 16, 16) if quick else (32, 32, 32)
+    rng = np.random.default_rng(1)
+    f, g, xi = _field_pair(shape, rng)
+    topo = field_topology(jnp.asarray(f), xi)
+    V = int(np.prod(shape))
+
+    n_top = max(n for n in (1, 2, 4, 8) if n <= n_avail)
+    configs = [("slab", make_data_mesh(n_top), None)]
+    if not quick:
+        for n in (2, 4):
+            if n < n_top:
+                configs.append(("slab", make_data_mesh(n), None))
+    if n_top >= 4:
+        bshape = factor_block_shape(n_top, 2)
+        bmesh = make_block_mesh(bshape)
+        configs.append(("block", bmesh, True))
+        configs.append(("block", bmesh, False))
+
+    rows = []
+    for kind, mesh, ov in configs:
+        n_dev = int(np.prod(mesh.devices.shape))
+        mesh_shape = "x".join(str(s) for s in mesh.devices.shape)
+
+        def go():
+            out_g, it, ok = sharded_fix(g, topo, mesh, overlap=ov)
+            jax.block_until_ready(out_g)
+
+        t = _median_s(go)
+        tag = f"fig9/shard/{kind}/mesh={mesh_shape}/overlap={ov}"
+        emit(tag, t, f"Mvert_s={V/t:.3f}")
+        rows.append(dict(
+            kind=kind, mesh_shape=[int(s) for s in mesh.devices.shape],
+            n_devices=n_dev, overlap=ov, median_s=t, vert_per_s=V / t,
+            halo_bytes_per_iter={k: int(v) for k, v in halo_plan(
+                shape, np.float32, mesh, overlap=ov).items()}))
+
+    doc = dict(schema="msz-bench-shard/1", quick=bool(quick),
+               jax_backend=jax.default_backend(), shape=list(shape),
+               n_devices_available=n_avail, n_devices_top=n_top,
+               max_slowdown_block_vs_slab=1.50, rows=rows)
+    Path(out).write_text(json.dumps(doc, indent=2) + "\n")
+    if check_regression:
+        slab = [r for r in rows
+                if r["kind"] == "slab" and r["n_devices"] == n_top]
+        block = [r for r in rows if r["kind"] == "block"]
+        if not block:
+            raise SystemExit(
+                f"regression guard needs >= 4 devices for a block mesh; "
+                f"have {n_avail} (set XLA_FLAGS="
+                "--xla_force_host_platform_device_count=8)")
+        slab_bytes = sum(slab[0]["halo_bytes_per_iter"].values())
+        block_bytes = min(sum(b["halo_bytes_per_iter"].values())
+                          for b in block)
+        if block_bytes >= slab_bytes:
+            raise SystemExit(
+                f"regression: block mesh at {n_top} devices moves "
+                f"{block_bytes} halo bytes/iter vs slab {slab_bytes} — "
+                f"face exchange must beat plane exchange; see {out}")
+        best_block = max(b["vert_per_s"] for b in block)
+        slab_rate = slab[0]["vert_per_s"]
+        if best_block < slab_rate / doc["max_slowdown_block_vs_slab"]:
+            raise SystemExit(
+                f"regression: block mesh at {n_top} devices runs at "
+                f"{best_block:,.0f} vert/s vs slab {slab_rate:,.0f} "
+                f"(> {doc['max_slowdown_block_vs_slab']}x slower); "
+                f"see {out}")
+    return doc
+
 
 if __name__ == "__main__":
-    run()
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny field, shard sweep only (the CI leg)")
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale shapes, all sweeps")
+    ap.add_argument("--check-regression", action="store_true",
+                    help="fail when block decomposition loses to the "
+                         "1D slab chain at the top device count")
+    ap.add_argument("--out", default=OUT_JSON)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    if args.smoke:
+        bench_shard(quick=True, check_regression=args.check_regression,
+                    out=args.out)
+    else:
+        run(quick=not args.full)
+        if args.check_regression:
+            bench_shard(quick=not args.full,
+                        check_regression=args.check_regression,
+                        out=args.out)

@@ -53,7 +53,14 @@ import numpy as np
 
 from ..core import fixes
 from ..core.backend import BackendLike, resolve_backend
+from ..distributed.straggler import StepWatchdog
 from . import calibrate, pipeline, szlike
+
+#: mesh axis names the sharded backend decomposes fields over — the
+#: stream's compile-cache key and shard stats group by these (kept in
+#: sync with distributed.shardfix.ALL_DATA_AXES without importing the
+#: heavier module at stream-import time).
+_DATA_AXIS_NAMES = ("data", "data_z", "data_y", "data_x")
 
 
 class StreamBackpressure(RuntimeError):
@@ -200,6 +207,23 @@ class _StreamBase:
         self._fix_mode_counts: Dict[str, int] = {}
         self._codec_stats: Dict[str, List[int]] = {}   # name -> [count, bytes]
         self.cache = SpecCache(cache_size)
+
+        # straggler policy (DESIGN.md §9): the dormant StepWatchdog is
+        # folded into the scheduler — a batch whose device time blows
+        # past the EWMA deadline widens the coalescing window (x2 per
+        # flag, capped) instead of stalling the service, so a slow
+        # shard amortizes its next dispatch over more members; healthy
+        # batches decay the scale back toward 1
+        self._watchdog = StepWatchdog()
+        self._linger_scale = 1.0
+        self._linger_scale_max = 8.0
+        self._watchdog_verdicts: Dict[str, int] = {}
+
+        # sharded-dispatch accounting: per-mesh-axis halo bytes moved by
+        # the fix loops (analytic halo_plan x observed iteration counts)
+        self._halo_bytes: Dict[str, int] = {}
+        self._halo_iters = 0
+        self._shard_meta: Optional[Dict[str, object]] = None
 
         self._slots = threading.Semaphore(window)
         self._lock = threading.Lock()
@@ -375,7 +399,7 @@ class _StreamBase:
                 return None
             spec = self._pending[0].spec
             batch = self._pop_spec_locked(spec)
-            deadline = time.perf_counter() + self.linger_s
+            deadline = time.perf_counter() + self.linger_s * self._linger_scale
             while (len(batch) < self.max_batch and not self._closed):
                 remaining = deadline - time.perf_counter()
                 if remaining <= 0 or not self._wake.wait(timeout=remaining):
@@ -407,6 +431,32 @@ class _StreamBase:
             self._nbytes_h2d += nbytes_h2d
             self._nbytes_d2h += nbytes_d2h
             self._t_device += t_device
+            if t_device > 0.0:
+                verdict = self._watchdog.observe(t_device)
+                self._watchdog_verdicts[verdict] = \
+                    self._watchdog_verdicts.get(verdict, 0) + 1
+                if verdict == "ok":
+                    self._linger_scale = max(1.0, self._linger_scale * 0.5)
+                else:       # 'slow' / 'rebalance': widen, don't stall
+                    self._linger_scale = min(self._linger_scale_max,
+                                             self._linger_scale * 2.0)
+
+    def _note_shard(self, be, shape, dtype, iters: int) -> None:
+        """Record one sharded dispatch: fold ``iters`` fix iterations of
+        analytic per-axis halo traffic (``be.halo_plan``) into the live
+        byte counters the service /stats endpoint surfaces."""
+        try:
+            plan = be.halo_plan(tuple(shape), dtype)
+        except Exception:       # noqa: BLE001 — stats must never fail a batch
+            return
+        with self._lock:
+            self._halo_iters += int(iters)
+            for ax, nbytes in plan.items():
+                self._halo_bytes[ax] = \
+                    self._halo_bytes.get(ax, 0) + int(nbytes) * int(iters)
+            self._shard_meta = dict(shape=tuple(int(s) for s in shape),
+                                    dtype=str(np.dtype(dtype)),
+                                    backend=getattr(be, "name", "sharded"))
 
     def _note_fix_mode(self, mode: str) -> None:
         """Record which fix-loop strategy one dispatched batch took
@@ -463,6 +513,18 @@ class _StreamBase:
                                 for k, v in self._codec_stats.items()},
                 fused_fix_voxels=self._fused_fix_voxels,
                 cache=self.cache.stats(),
+                straggler=dict(
+                    linger_scale=self._linger_scale,
+                    steps=self._watchdog.steps,
+                    flagged_steps=self._watchdog.flagged_steps,
+                    verdicts=dict(self._watchdog_verdicts),
+                ),
+                shard=dict(
+                    halo_bytes_by_axis=dict(self._halo_bytes),
+                    halo_bytes_total=sum(self._halo_bytes.values()),
+                    fix_iters=self._halo_iters,
+                    last=dict(self._shard_meta) if self._shard_meta else None,
+                ),
             )
 
     # -- subclass hooks -----------------------------------------------
@@ -472,12 +534,16 @@ class _StreamBase:
     def _backend_key_part(self) -> Tuple:
         name = self._backend if isinstance(self._backend, str) \
             else getattr(self._backend, "name", str(self._backend))
-        n_data = 0
-        if self._mesh is not None:
-            n_data = int(np.prod([s for ax, s in zip(self._mesh.axis_names,
-                                                     self._mesh.devices.shape)
-                                  if ax == "data"], dtype=np.int64))
-        return (name, n_data)
+        if self._mesh is None:
+            return (name, ())
+        # the full per-axis (name, size) layout, not just a device count:
+        # a (2, 4) block mesh and an 8-way slab chain compile different
+        # programs and must occupy different SpecCache slots
+        data_axes = tuple((ax, int(s))
+                          for ax, s in zip(self._mesh.axis_names,
+                                           self._mesh.devices.shape)
+                          if ax in _DATA_AXIS_NAMES)
+        return (name, data_axes)
 
     def _resolved_backend(self, shape: Tuple[int, ...], dtype, xi: float):
         """The mesh-bound stencil backend for one request class, through
@@ -605,6 +671,9 @@ class CompressStream(_StreamBase):
                                                   n_real=B, entropy=entropy)
         self._note_batch(B, pad, db.nbytes_h2d, db.nbytes_d2h,
                          time.perf_counter() - t0)
+        if hasattr(be, "halo_plan"):
+            self._note_shard(be, fields[0].shape, fields[0].dtype,
+                             int(np.sum(db.iters_b[:B])))
         for i, req in enumerate(batch):
             if db.packed is not None:
                 # device-pack: the entropy stream already left the device

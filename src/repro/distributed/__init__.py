@@ -1,14 +1,19 @@
-"""repro.distributed — mesh-aware distributed utilities: the slab-sharded
-SPMD MSz fix loop (shardfix), error-bounded compressed cross-pod gradient
-all-reduce (the paper's compressor applied to distributed training),
-straggler-tolerant stepping, and collective helpers."""
+"""repro.distributed — mesh-aware distributed utilities: the
+block-sharded SPMD MSz fix loop (shardfix: 1D slab chains and 2D/3D
+block meshes with overlapped halo exchange), error-bounded compressed
+cross-pod gradient all-reduce (the paper's compressor applied to
+distributed training), straggler-tolerant stepping, and collective
+helpers."""
 from .compression import (compressed_psum_tree, quantize_tree,
                           dequantize_tree, make_grad_sync)
-from .shardfix import (ShardedBackend, active_data_mesh, data_axis_size,
-                       halo_exchange, sharded_fix)
+from .shardfix import (BLOCK_AXES, BlockPlan, ShardedBackend,
+                       active_data_mesh, block_halo, data_axis_size,
+                       halo_exchange, halo_plan, plan_blocks, sharded_fix,
+                       time_step_parts)
 from .straggler import StepWatchdog
 
 __all__ = ["compressed_psum_tree", "quantize_tree", "dequantize_tree",
            "make_grad_sync", "StepWatchdog",
-           "ShardedBackend", "active_data_mesh", "data_axis_size",
-           "halo_exchange", "sharded_fix"]
+           "BLOCK_AXES", "BlockPlan", "ShardedBackend", "active_data_mesh",
+           "block_halo", "data_axis_size", "halo_exchange", "halo_plan",
+           "plan_blocks", "sharded_fix", "time_step_parts"]

@@ -13,12 +13,16 @@ plus a static in-plane shift, so the whole stencil is vector ops on
 VMEM-resident slabs; SoS tie-breaking uses arithmetic linear indices (no
 index arrays are loaded).
 
-Tiled execution (pMSz-style block decomposition, see DESIGN.md §3):
+Tiled execution (pMSz-style block decomposition, see DESIGN.md §3/§9):
 ``slab_lo`` / ``n_slabs_total`` let a caller run the kernel on a z-tile
-of a larger field. Domain-boundary handling and SoS linear indices then
-use *global* coordinates, so outputs on slabs whose 1-slab halo lies
-inside the tile are bitwise identical to an untiled run; the tile driver
-(core.backend.PallasBackend) keeps a halo margin and discards the rest.
+of a larger field, and ``row_lo``/``col_lo`` with ``n_rows_total``/
+``n_cols_total`` place the tile's *plane* inside a larger global plane
+(the 2D/3D block decomposition of the sharded backend). Domain-boundary
+handling and SoS linear indices then use *global* coordinates, so
+outputs on vertices whose 1-vertex halo lies inside the tile are bitwise
+identical to an untiled run; the tile drivers (core.backend.PallasBackend
+z-tiles, distributed.shardfix blocks) keep a halo margin and discard the
+rest.
 
 Outputs per vertex: steepest ascending/descending direction codes of g,
 and the three fix-source masks (self_edit / demote / promote) consumed by
@@ -118,50 +122,66 @@ def _shift2d(a, dy: int, dx: int, fill):
                          (max(0, dy) + Y, max(0, dx) + X))
 
 
-def _neighbor_scan(slabs, z, N, lin, offs, *, ascending: bool):
+def _neighbor_scan(slabs, z, N, yg, xg, NY, NX, lin, offs, *,
+                   ascending: bool):
     """Returns (best_code, is_extremum) for the SoS-steepest neighbor.
 
     Off-domain fills are ±inf in the slab dtype (not f32 literals), so
-    f64 fields classify boundary extrema correctly. Candidates are
-    stacked and reduced via ``grid._sos_argbest`` — a chained
-    compare-and-select scan would compile exponentially on XLA:CPU (see
-    that helper's docstring); the stacked form is bitwise identical.
+    f64 fields classify boundary extrema correctly. All three axes mask
+    in GLOBAL coordinates (z against N, the plane iotas yg/xg against
+    NY/NX): a local plane edge that is *not* a domain edge — a block
+    seam of the sharded backend — keeps the neighbor value that the
+    caller's ghost layers carried in. Candidates are stacked and reduced
+    via ``grid._sos_argbest`` — a chained compare-and-select scan would
+    compile exponentially on XLA:CPU (see that helper's docstring); the
+    stacked form is bitwise identical.
     """
-    P, X = slabs[1].shape
     fill = jnp.asarray(-jnp.inf if ascending else jnp.inf, slabs[1].dtype)
     vals = [slabs[1]]
     idxs = [lin]
     for ds, dy, dx in offs:
         v = _shift2d(slabs[ds + 1], dy, dx, fill)
-        # slab-axis domain boundary, in GLOBAL coordinates (tiled runs
-        # pass the tile's offset; clamped index_maps made slab s-1 == s)
+        # domain boundaries, in GLOBAL coordinates (tiled runs pass the
+        # tile's offset; clamped index_maps made slab s-1 == s, and
+        # _shift2d filled local plane edges — re-masking them at the
+        # true domain edge is then a no-op, while off-tile positions
+        # inside the domain were overwritten by ghost data upstream)
         if ds == -1:
             v = jnp.where(z == 0, fill, v)
         elif ds == 1:
             v = jnp.where(z == N - 1, fill, v)
-        # in-plane validity is already encoded by the fill value
+        if dy == -1:
+            v = jnp.where(yg == 0, fill, v)
+        elif dy == 1:
+            v = jnp.where(yg == NY - 1, fill, v)
+        if dx == -1:
+            v = jnp.where(xg == 0, fill, v)
+        elif dx == 1:
+            v = jnp.where(xg == NX - 1, fill, v)
         vals.append(v)
-        idxs.append(lin + (ds * P + dy) * X + dx)
+        idxs.append(lin + (ds * NY + dy) * NX + dx)
     slot = _sos_argbest(jnp.stack(vals), jnp.stack(idxs), ascending=ascending)
     best_c = jnp.where(slot == 0, jnp.int32(len(offs)), slot - 1)
     return best_c, slot == 0
 
 
-def _kernel(slab_lo_c, g_m, g_c, g_p, Mf_m, Mf_c, Mf_p, mf_m, mf_c, mf_p,
+def _kernel(origin_c, g_m, g_c, g_p, Mf_m, Mf_c, Mf_p, mf_m, mf_c, mf_p,
             maxf_c, minf_c,
             up_out, dn_out, self_out, demote_out, promote_out,
-            *, N, P, X, offs):
-    z = slab_lo_c[0, 0] + pl.program_id(0)
-    lin_px = (jax.lax.broadcasted_iota(jnp.int32, (P, X), 0) * X
-              + jax.lax.broadcasted_iota(jnp.int32, (P, X), 1))
-    lin = z * (P * X) + lin_px
+            *, N, NY, NX, P, X, offs):
+    z = origin_c[0, 0] + pl.program_id(0)
+    yg = origin_c[0, 1] + jax.lax.broadcasted_iota(jnp.int32, (P, X), 0)
+    xg = origin_c[0, 2] + jax.lax.broadcasted_iota(jnp.int32, (P, X), 1)
+    lin = z * (NY * NX) + yg * NX + xg
 
     def plane(ref):
         return ref[...].reshape(P, X)
 
     g_slabs = (plane(g_m), plane(g_c), plane(g_p))
-    up_c, is_max_g = _neighbor_scan(g_slabs, z, N, lin, offs, ascending=True)
-    dn_c, is_min_g = _neighbor_scan(g_slabs, z, N, lin, offs, ascending=False)
+    up_c, is_max_g = _neighbor_scan(g_slabs, z, N, yg, xg, NY, NX, lin,
+                                    offs, ascending=True)
+    dn_c, is_min_g = _neighbor_scan(g_slabs, z, N, yg, xg, NY, NX, lin,
+                                    offs, ascending=False)
 
     is_max_f = plane(maxf_c) != 0
     is_min_f = plane(minf_c) != 0
@@ -208,18 +228,54 @@ def slab_lo_spec() -> pl.BlockSpec:
     return pl.BlockSpec((1, 1), lambda z: (0, 0))
 
 
+def origin_operand(slab_lo, row_lo=0, col_lo=0) -> jnp.ndarray:
+    """Normalize a 3-component tile origin (slab, plane row, plane col)
+    — python ints or traced int32 scalars — to the (1, 3) operand the
+    stencil kernels read. The sharded backend passes each component as
+    ``axis_index * block - halo`` so one SPMD program serves every block
+    of a 2D/3D block mesh; static and traced origins produce bitwise
+    identical outputs, only the specialization key differs."""
+    parts = [jnp.asarray(v, jnp.int32).reshape(1) for v in
+             (slab_lo, row_lo, col_lo)]
+    return jnp.concatenate(parts).reshape(1, 3)
+
+
+def origin_spec() -> pl.BlockSpec:
+    """Every grid program sees the same (1, 3) tile-origin block."""
+    return pl.BlockSpec((1, 3), lambda z: (0, 0))
+
+
+def _axis_total(total, lo, extent: int, what: str) -> int:
+    """Resolve a global axis extent: explicit ``total`` wins; otherwise
+    the tile is assumed flush with the domain end (``lo + extent``),
+    which requires a static ``lo``."""
+    if total is None:
+        if not isinstance(lo, int):
+            raise ValueError(
+                f"a traced {what} offset needs an explicit total extent")
+        return lo + extent
+    return int(total)
+
+
 def extrema_masks_pallas(g: jnp.ndarray, M_f: jnp.ndarray, m_f: jnp.ndarray,
                          is_max_f: jnp.ndarray, is_min_f: jnp.ndarray,
                          *, interpret: bool | None = None,
-                         slab_lo=0, n_slabs_total: int | None = None):
+                         slab_lo=0, n_slabs_total: int | None = None,
+                         row_lo=0, col_lo=0,
+                         n_rows_total: int | None = None,
+                         n_cols_total: int | None = None):
     """g: (Z,Y,X) or (Y,X) float; M_f/m_f: int32 labels of the original
     field; is_max_f/min_f: int32 0/1. Returns (up_c, dn_c, self_edit,
     demote_src, promote_src), all int32 of g's shape.
 
     ``slab_lo``/``n_slabs_total`` place a z-tile inside a larger field
-    (global slab index of g[0], and the field's total slab count).
-    ``slab_lo`` may be a traced int32 scalar (one SPMD program serves
-    every shard of a sharded run); ``n_slabs_total`` is then required.
+    (global slab index of g[0], and the field's total slab count);
+    ``row_lo``/``col_lo`` with ``n_rows_total``/``n_cols_total`` do the
+    same for the plane axes, placing a 2D/3D *block* of the sharded
+    backend inside the global field (2D fields use the col pair for
+    their second axis; the row pair is unused). Offsets may be traced
+    int32 scalars (one SPMD program serves every shard of a sharded
+    run); the matching total is then required.
     """
     if interpret is None:
         interpret = default_interpret()
@@ -230,24 +286,21 @@ def extrema_masks_pallas(g: jnp.ndarray, M_f: jnp.ndarray, m_f: jnp.ndarray,
         P = 1
     else:
         raise ValueError(f"extrema kernel supports 2D/3D, got shape {g.shape}")
-    if n_slabs_total is None:
-        if not isinstance(slab_lo, int):
-            raise ValueError(
-                "a traced slab_lo needs an explicit n_slabs_total")
-        N = slab_lo + n_local
-    else:
-        N = int(n_slabs_total)
+    N = _axis_total(n_slabs_total, slab_lo, n_local, "slab")
+    NY = _axis_total(n_rows_total, row_lo, P, "row")
+    NX = _axis_total(n_cols_total, col_lo, X, "col")
 
     halo, center = slab_block_specs(g.ndim, n_local, P, X)
     out_shape = [jax.ShapeDtypeStruct(g.shape, jnp.int32)] * 5
-    kern = functools.partial(_kernel, N=N, P=P, X=X,
+    kern = functools.partial(_kernel, N=N, NY=NY, NX=NX, P=P, X=X,
                              offs=slab_offsets(g.ndim))
     return pl.pallas_call(
         kern,
         grid=(n_local,),
-        in_specs=[slab_lo_spec()] + halo + halo + halo + [center, center],
+        in_specs=[origin_spec()] + halo + halo + halo + [center, center],
         out_specs=[center] * 5,
         out_shape=out_shape,
         interpret=interpret,
-    )(slab_lo_operand(slab_lo), g, g, g, M_f, M_f, M_f, m_f, m_f, m_f,
+    )(origin_operand(slab_lo, row_lo, col_lo), g, g, g,
+      M_f, M_f, M_f, m_f, m_f, m_f,
       is_max_f.astype(jnp.int32), is_min_f.astype(jnp.int32))

@@ -22,18 +22,21 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .extrema import (_shift2d, default_interpret, slab_block_specs,
-                      slab_lo_operand, slab_lo_spec, slab_offsets)
+from .extrema import (_axis_total, _shift2d, default_interpret,
+                      origin_operand, origin_spec, slab_block_specs,
+                      slab_offsets)
 
 # code k is stored at i; i targets j = i + off_k. From j's view the source
 # sits at -off_k and must carry code k.
 
 
-def _kernel(slab_lo_c, g_c, low_c, self_c,
+def _kernel(origin_c, g_c, low_c, self_c,
             dem_m, dem_c, dem_p, pro_m, pro_c, pro_p,
             upg_m, upg_c, upg_p, dnf_m, dnf_c, dnf_p,
-            g_out, viol_out, tgt_out, *, N, P, X, offs):
-    z = slab_lo_c[0, 0] + pl.program_id(0)
+            g_out, viol_out, tgt_out, *, N, NY, NX, P, X, offs):
+    z = origin_c[0, 0] + pl.program_id(0)
+    yg = origin_c[0, 1] + jax.lax.broadcasted_iota(jnp.int32, (P, X), 0)
+    xg = origin_c[0, 2] + jax.lax.broadcasted_iota(jnp.int32, (P, X), 1)
 
     def plane(ref):
         return ref[...].reshape(P, X)
@@ -41,15 +44,28 @@ def _kernel(slab_lo_c, g_c, low_c, self_c,
     def pulled(src_slabs, code_slabs):
         out = jnp.zeros((P, X), bool)
         for k, (ds, dy, dx) in enumerate(offs):
-            sds = -ds
+            sds, sdy, sdx = -ds, -dy, -dx
             src = src_slabs[sds + 1]
             cod = code_slabs[sds + 1]
             m = _shift2d(src, -dy, -dx, 0) != 0
             c = _shift2d(cod, -dy, -dx, -1)
+            # a pull source must lie inside the real domain, checked in
+            # GLOBAL coordinates on all three axes: at a block seam the
+            # shifted value is ghost data (valid), at a true domain edge
+            # the _shift2d zero-fill already cleared m and the global
+            # mask below is a no-op — identical either way
             if sds == -1:
                 m = jnp.where(z == 0, False, m)
             elif sds == 1:
                 m = jnp.where(z == N - 1, False, m)
+            if sdy == -1:
+                m = jnp.where(yg == 0, False, m)
+            elif sdy == 1:
+                m = jnp.where(yg == NY - 1, False, m)
+            if sdx == -1:
+                m = jnp.where(xg == 0, False, m)
+            elif sdx == 1:
+                m = jnp.where(xg == NX - 1, False, m)
             out = out | (m & (c == k))
         return out
 
@@ -73,7 +89,10 @@ def _kernel(slab_lo_c, g_c, low_c, self_c,
 
 def fix_pass_pallas(g, lower, self_edit, demote_src, promote_src,
                     up_code_g, dn_code_f, *, interpret: bool | None = None,
-                    slab_lo=0, n_slabs_total: int | None = None):
+                    slab_lo=0, n_slabs_total: int | None = None,
+                    row_lo=0, col_lo=0,
+                    n_rows_total: int | None = None,
+                    n_cols_total: int | None = None):
     """Apply one fused fix pass. All inputs (Z,Y,X) or (Y,X); masks int32
     0/1. Returns (g_next of g's shape/dtype, viol (n_slabs,) int32
     per-slab fix-SOURCE counts, tgt (n_slabs,) int32 per-slab edit-TARGET
@@ -81,8 +100,9 @@ def fix_pass_pallas(g, lower, self_edit, demote_src, promote_src,
     ``tgt`` feeds the dirty-slab worklists (DESIGN.md §7): a slab whose
     targets were 0 last pass — and whose 2-slab neighborhood's were too —
     produces bitwise-identical masks this pass and can be skipped.
-    ``slab_lo``/``n_slabs_total`` as in the extrema kernel (``slab_lo``
-    may be traced; ``n_slabs_total`` then required)."""
+    ``slab_lo``/``n_slabs_total`` and ``row_lo``/``col_lo`` with
+    ``n_rows_total``/``n_cols_total`` as in the extrema kernel (offsets
+    may be traced; the matching total is then required)."""
     if interpret is None:
         interpret = default_interpret()
     if g.ndim == 3:
@@ -92,13 +112,9 @@ def fix_pass_pallas(g, lower, self_edit, demote_src, promote_src,
         P = 1
     else:
         raise ValueError(f"fix kernel supports 2D/3D, got shape {g.shape}")
-    if n_slabs_total is None:
-        if not isinstance(slab_lo, int):
-            raise ValueError(
-                "a traced slab_lo needs an explicit n_slabs_total")
-        N = slab_lo + n_local
-    else:
-        N = int(n_slabs_total)
+    N = _axis_total(n_slabs_total, slab_lo, n_local, "slab")
+    NY = _axis_total(n_rows_total, row_lo, P, "row")
+    NX = _axis_total(n_cols_total, col_lo, X, "col")
 
     halo, center = slab_block_specs(g.ndim, n_local, P, X)
     count_spec = pl.BlockSpec((1, 1), lambda z: (z, 0))
@@ -106,17 +122,17 @@ def fix_pass_pallas(g, lower, self_edit, demote_src, promote_src,
     out_specs = [center, count_spec, count_spec]
     out_shape = [jax.ShapeDtypeStruct(g.shape, g.dtype),
                  count_shape, count_shape]
-    kern = functools.partial(_kernel, N=N, P=P, X=X,
+    kern = functools.partial(_kernel, N=N, NY=NY, NX=NX, P=P, X=X,
                              offs=slab_offsets(g.ndim))
     g2, viol, tgt = pl.pallas_call(
         kern,
         grid=(n_local,),
-        in_specs=([slab_lo_spec(), center, center, center]
+        in_specs=([origin_spec(), center, center, center]
                   + halo + halo + halo + halo),
         out_specs=out_specs,
         out_shape=out_shape,
         interpret=interpret,
-    )(slab_lo_operand(slab_lo), g, lower, self_edit,
+    )(origin_operand(slab_lo, row_lo, col_lo), g, lower, self_edit,
       demote_src, demote_src, demote_src,
       promote_src, promote_src, promote_src,
       up_code_g, up_code_g, up_code_g,

@@ -33,6 +33,7 @@ import time
 from concurrent.futures import Future
 from typing import Dict, Optional
 
+import jax.numpy as jnp
 import numpy as np
 
 from ..compress import pipeline
@@ -137,6 +138,9 @@ class CompressionService:
         self._compress = CompressStream(**kw)
         self._decompress = DecompressStream(**kw)
         self._t_start = time.perf_counter()
+        # one-shot interior/boundary timing probe, keyed on the probed
+        # (shape, dtype, mesh) class; filled by shard_timings()
+        self._shard_probe: Optional[tuple] = None
 
     # -- submission ---------------------------------------------------
     def _guard(self, submit, *args, **kw) -> Future:
@@ -185,11 +189,49 @@ class CompressionService:
         return self.submit_decompress(art).result()
 
     # -- observability ------------------------------------------------
+    def shard_timings(self, *, refresh: bool = False
+                      ) -> Optional[Dict[str, object]]:
+        """Measure one sharded fix iteration's interior pass, ghost
+        exchange, and full step on the last sharded request class (the
+        compute/communication-overlap surface of DESIGN.md §9). Runs a
+        real timed probe (compiled, synthetic data of the recorded
+        shape/dtype) the first time — and again only with ``refresh`` —
+        then serves the cached result; None when no sharded dispatch has
+        happened yet or no data mesh is reachable."""
+        shard = self._compress.stats().get("shard") or {}
+        meta = shard.get("last")
+        if not meta:
+            return None
+        from ..distributed.shardfix import active_data_mesh, time_step_parts
+        mesh = self.config.mesh
+        if mesh is None:
+            mesh = active_data_mesh()
+        if mesh is None:
+            return None
+        shape = tuple(meta["shape"])
+        key = (shape, meta["dtype"], tuple(mesh.axis_names),
+               tuple(mesh.devices.shape))
+        if self._shard_probe is not None and not refresh \
+                and self._shard_probe[0] == key:
+            return self._shard_probe[1]
+        from ..core import field_topology
+        rng = np.random.default_rng(0)
+        f = rng.normal(size=shape).astype(meta["dtype"])
+        topo = field_topology(jnp.asarray(f), 0.1)
+        timings = time_step_parts(jnp.asarray(f), topo, mesh)
+        doc = dict(shape=list(shape), dtype=meta["dtype"], **timings)
+        self._shard_probe = (key, doc)
+        return doc
+
     def stats(self) -> Dict[str, object]:
         """The service stats document (what the HTTP endpoint serves):
         uptime plus one ``repro.compress.stream`` counter snapshot per
         direction — fields/sec, batch occupancy, in-flight depth,
-        transfer bytes, and spec-cache hit/miss/eviction counts."""
+        transfer bytes, spec-cache hit/miss/eviction counts, the
+        straggler policy's live coalescing scale, and per-mesh-axis
+        halo-exchange bytes for sharded dispatches. ``shard_timings``
+        carries the cached interior/boundary probe when one has run
+        (``shard_timings()`` or ``GET /stats?probe=1`` triggers it)."""
         return dict(
             uptime_s=time.perf_counter() - self._t_start,
             config=dict(window=self.config.window,
@@ -198,6 +240,8 @@ class CompressionService:
                         overload=self.config.overload),
             compress=self._compress.stats(),
             decompress=self._decompress.stats(),
+            shard_timings=(self._shard_probe[1]
+                           if self._shard_probe else None),
         )
 
     # -- lifecycle ----------------------------------------------------
@@ -232,7 +276,12 @@ def start_stats_server(service: CompressionService, port: int = 0,
         def do_GET(self):              # noqa: N802 (http.server API)
             if self.path == "/healthz":
                 body, ctype = b"ok\n", "text/plain"
-            elif self.path in ("/", "/stats"):
+            elif self.path.split("?")[0] in ("/", "/stats"):
+                if "probe=1" in (self.path.split("?") + [""])[1]:
+                    try:
+                        service.shard_timings()
+                    except Exception:   # noqa: BLE001 — stats must not 500
+                        pass
                 body = (json.dumps(service.stats(), indent=2) + "\n").encode()
                 ctype = "application/json"
             else:
