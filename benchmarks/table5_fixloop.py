@@ -81,7 +81,7 @@ def _mixed_batch(B: int, shape: Tuple[int, ...], xi: float = 0.05,
         if i < n_fast:
             fh = f.reshape(-1).copy()
             idx = rng.choice(f.size, i % 3, replace=False)   # 0-2 bumps
-            fh[idx] += 0.9 * xi * rng.choice([-1.0, 1.0], idx.size)
+            np.add.at(fh, idx, 0.9 * xi * rng.choice([-1.0, 1.0], idx.size))
             members.append(fh.reshape(shape))
         else:
             members.append(f + 0.99 * xi * rng.uniform(-1, 1, shape))

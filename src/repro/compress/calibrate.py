@@ -52,7 +52,7 @@ _REPS = 3
 
 #: number of real measurements taken (not env/cache hits) — lets tests
 #: assert the cache actually short-circuits repeat calls
-measure_count = 0
+measure_count = 0  # guarded-by: _lock
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,7 +66,7 @@ class FixCalibration:
     source: str               # "env" | "measured"
 
 
-_cache: Dict[Tuple, FixCalibration] = {}
+_cache: Dict[Tuple, FixCalibration] = {}  # guarded-by: _lock
 _lock = threading.Lock()
 
 
@@ -95,13 +95,21 @@ def _env_threshold() -> Optional[int]:
 def _time_best(fn, reps: int = _REPS) -> float:
     """Best-of-``reps`` wall time of ``fn`` after one untimed warm-up
     call (the warm-up absorbs trace + compile; min-of-N is the robust
-    estimator for a fixed-work measurement under scheduler noise)."""
+    estimator for a fixed-work measurement under scheduler noise).
+
+    The timed reps run under ``debug.no_recompiles()``: a recompile in
+    the measured region is exactly the PR 7 calibration bug (a cache
+    key missing a policy dimension makes every "warm" reconsultation
+    retrace), and it corrupts the fitted model rather than failing — so
+    the sanitizer turns it into a hard error."""
+    from ..debug import no_recompiles
     fn()
     best = float("inf")
-    for _ in range(reps):
-        t0 = time.perf_counter()
-        fn()
-        best = min(best, time.perf_counter() - t0)
+    with no_recompiles(label="calibrate._time_best"):
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            fn()
+            best = min(best, time.perf_counter() - t0)
     return best
 
 
@@ -112,7 +120,8 @@ def _measure(be, dtype) -> FixCalibration:
 
     from ..core import fixes
 
-    measure_count += 1
+    with _lock:
+        measure_count += 1
     rng = np.random.default_rng(0)
     t_solo = []
     probes = []

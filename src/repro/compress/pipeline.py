@@ -70,15 +70,22 @@ _transfer_hook: Optional[Callable[[str, int], None]] = None
 
 
 def _h2d(x: np.ndarray) -> jnp.ndarray:
+    """The audited host->device seam: every array the device path
+    uploads crosses here, counted by ``_transfer_hook`` and moved via
+    the EXPLICIT ``jax.device_put`` — so ``debug.guards.no_transfers``
+    (which disallows only implicit crossings) passes tracked uploads
+    and fails untracked ones."""
     if _transfer_hook is not None:
         _transfer_hook("h2d", x.nbytes)
-    return jnp.asarray(x)
+    return jax.device_put(x)   # mszlint: disable=transfer-discipline — the choke point itself
 
 
 def _d2h(x: jnp.ndarray) -> np.ndarray:
+    """The audited device->host seam (explicit ``jax.device_get``);
+    twin of ``_h2d``."""
     if _transfer_hook is not None:
         _transfer_hook("d2h", x.nbytes)
-    return np.asarray(x)
+    return jax.device_get(x)   # mszlint: disable=transfer-discipline — the choke point itself
 
 
 @dataclasses.dataclass
@@ -222,12 +229,31 @@ def _pull_packed(be, r) -> Tuple[np.ndarray, np.ndarray]:
     ``(words, bits)``: the chunked-bitplane stream replaces the full
     code array on the d2h hop, and no host entropy work remains — the
     blob assembly in ``sz_encode_packed`` is pure byte copying. The
-    ``int(n_words)`` sync is a scalar (exempt from the transfer-hook
-    array accounting), needed to slice the jit-static capacity buffer to
-    the true stream before it crosses."""
+    ``n_words`` sync is a scalar (exempt from the transfer-hook array
+    accounting), needed to slice the jit-static capacity buffer to the
+    true stream before it crosses; like every other crossing it routes
+    through the explicit ``_d2h`` seam so the path stays clean under
+    ``no_transfers()``."""
     w, bts, n_words = be.pack_codes(r)
-    nw = int(n_words)
-    return _d2h(np.asarray(w[:nw])), _d2h(np.asarray(bts))
+    nw = int(_d2h(n_words))
+    return _d2h(_slice_to(w, nw)), _d2h(bts)
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def _slice_to(x: jnp.ndarray, n: int) -> jnp.ndarray:
+    """``x[:n]`` jitted with a static length: an eager slice ships its
+    indices to the device per call (an implicit transfer under
+    ``debug.no_transfers()``); the jitted one bakes them in at trace
+    time, at the same one-compile-per-distinct-length cost."""
+    return x[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("i",))
+def _member(x_b: jnp.ndarray, i: int) -> jnp.ndarray:
+    """``x_b[i]`` jitted with a static index — the batch stages' member
+    extraction. Same rationale as ``_slice_to``: eager integer indexing
+    is a dynamic_slice whose index crosses host->device per call."""
+    return x_b[i]
 
 
 def _device_compress(f: np.ndarray, xi: float, be, max_iters: int,
@@ -242,7 +268,7 @@ def _device_compress(f: np.ndarray, xi: float, be, max_iters: int,
     fj = _h2d(f)
     r = be.transform(fj, step)
     f_hat = be.reconstruct(r, step, fj.dtype)
-    base_err = float(jnp.max(jnp.abs(fj - f_hat)))
+    base_err = float(_d2h(jnp.max(jnp.abs(fj - f_hat))))
     t1 = time.perf_counter()
     if base_err > xi * (1 + 1e-6):
         raise ValueError(
@@ -252,7 +278,7 @@ def _device_compress(f: np.ndarray, xi: float, be, max_iters: int,
     topo = fixes.field_topology(fj, xi)
     g, iters, ok = fixes.fused_fix(f_hat, topo, max_iters=max_iters,
                                    backend=be)
-    if not bool(ok):
+    if not bool(_d2h(ok)):
         raise RuntimeError("MSz fix loops did not converge within max_iters")
     idx_d, val_d = extract_edits(f_hat, g)
     t2 = time.perf_counter()
@@ -275,7 +301,7 @@ def _device_compress(f: np.ndarray, xi: float, be, max_iters: int,
         shape=f.shape, dtype=str(f.dtype), xi=xi,
         t_base=(t1 - t0) + (t3 - t2), t_fix=t2 - t1,
         edit_ratio=float(idx.size) / float(f.size),
-        fix_iters=int(iters), backend=be.name,
+        fix_iters=int(_d2h(iters)), backend=be.name,
         path="device", t_transform=t1 - t0, entropy=entropy,
     )
 
@@ -323,8 +349,10 @@ def _batch_transform(fields: List[np.ndarray], xi_arr: np.ndarray, be,
     f_b = _h2d(f_stack)
     step_b = _h2d(np.asarray(steps, fields[0].dtype))
     if hasattr(be, "fix_loop"):
-        r_b = jnp.stack([be.transform(f_b[i], step_b[i]) for i in range(B)])
-        fhat_b = jnp.stack([be.reconstruct(r_b[i], step_b[i], f_b.dtype)
+        r_b = jnp.stack([be.transform(_member(f_b, i), _member(step_b, i))
+                         for i in range(B)])
+        fhat_b = jnp.stack([be.reconstruct(_member(r_b, i),
+                                           _member(step_b, i), f_b.dtype)
                             for i in range(B)])
     else:
         r_b = jax.vmap(be.transform)(f_b, step_b)
@@ -347,7 +375,7 @@ def _pull_batch_codes(be, r_b, B: int, entropy: str):
     codes on the wire and no host entropy stage remains), else the raw
     stacked codes for host DEFLATE. Returns (r_host, packed, nbytes)."""
     if _device_pack_ok(be, entropy):
-        packed = [_pull_packed(be, r_b[i]) for i in range(B)]
+        packed = [_pull_packed(be, _member(r_b, i)) for i in range(B)]
         return None, packed, sum(w.nbytes + b.nbytes for w, b in packed)
     r_host = _d2h(r_b)
     return r_host, None, r_host.nbytes
@@ -367,13 +395,16 @@ def _device_batch_stage(fields: List[np.ndarray], xi_arr: np.ndarray,
         fields, xi_arr, be, steps, n_check=B)
     t1 = time.perf_counter()
 
-    topos = [fixes.field_topology(f_b[i], float(xi_arr[i])) for i in range(B)]
+    # mszlint: disable=transfer-discipline -- xi_arr is the host numpy bounds
+    topos = [fixes.field_topology(_member(f_b, i), float(xi_arr[i]))
+             for i in range(B)]
     topo_b = jax.tree_util.tree_map(lambda *leaves: jnp.stack(leaves), *topos)
     g_b, iters_b, ok_b = fixes.fused_fix_batch(fhat_b, topo_b,
                                                max_iters=max_iters, backend=be)
-    if not bool(jnp.all(ok_b)):
+    if not bool(_d2h(jnp.all(ok_b))):
         raise RuntimeError("MSz fix loops did not converge within max_iters")
-    edits = [extract_edits(fhat_b[i], g_b[i]) for i in range(B)]
+    edits = [extract_edits(_member(fhat_b, i), _member(g_b, i))
+             for i in range(B)]
     t2 = time.perf_counter()
 
     r_host, packed, nbytes_codes = _pull_batch_codes(be, r_b, B, entropy)
@@ -381,7 +412,7 @@ def _device_batch_stage(fields: List[np.ndarray], xi_arr: np.ndarray,
     return _DeviceBatch(
         fields=fields, xi_arr=xi_arr, steps=steps,
         f_b=f_b, fhat_b=fhat_b, r_host=r_host, edits=edits,
-        iters_b=np.asarray(iters_b), backend_name=be.name,
+        iters_b=_d2h(iters_b), backend_name=be.name,
         t_transform_each=(t1 - t0) / B, t_fix_each=(t2 - t1) / B,
         t_pull_each=t_pull / B,
         nbytes_h2d=f_stack.nbytes + step_b.nbytes,
@@ -412,15 +443,19 @@ def _encode_batch_member(db: _DeviceBatch, i: int,
                                              entropy=db.entropy)
     idx = _d2h(db.edits[i][0]).astype(np.int64)
     val = _d2h(db.edits[i][1])
-    blob = _encode_edits_checked_dev(db.f_b[i], db.fhat_b[i], idx, val,
-                                     float(db.xi_arr[i]), edit_value_dtype)
+    blob = _encode_edits_checked_dev(
+        _member(db.f_b, i), _member(db.fhat_b, i), idx, val,
+        # mszlint: disable=transfer-discipline -- xi_arr is host numpy
+        float(db.xi_arr[i]), edit_value_dtype)
     t_entropy = time.perf_counter() - te0
     return CompressedArtifact(
         base="szlike", base_payload=payload, edit_payload=blob,
+        # mszlint: disable=transfer-discipline -- xi_arr is host numpy
         shape=fi.shape, dtype=str(fi.dtype), xi=float(db.xi_arr[i]),
         t_base=db.t_transform_each + db.t_pull_each + t_entropy,
         t_fix=db.t_fix_each,
         edit_ratio=float(idx.size) / float(fi.size),
+        # mszlint: disable=transfer-discipline -- iters_b was pulled by _d2h
         fix_iters=int(db.iters_b[i]), backend=db.backend_name,
         path="device", t_transform=db.t_transform_each,
         entropy=db.entropy,
@@ -453,14 +488,16 @@ def _device_pipelined_stage(fields: List[np.ndarray], xi_arr: np.ndarray,
     edits: List[Tuple[jnp.ndarray, jnp.ndarray]] = []
     iters_list: List[int] = []
     for i in range(n_real):
-        topo = fixes.field_topology(f_b[i], float(xi_arr[i]))
-        g, iters, ok = fixes.fused_fix(fhat_b[i], topo, max_iters=max_iters,
+        fhat_i = _member(fhat_b, i)
+        # mszlint: disable=transfer-discipline -- xi_arr is host numpy
+        topo = fixes.field_topology(_member(f_b, i), float(xi_arr[i]))
+        g, iters, ok = fixes.fused_fix(fhat_i, topo, max_iters=max_iters,
                                        backend=be)
-        if not bool(ok):
+        if not bool(_d2h(ok)):
             raise RuntimeError(
                 "MSz fix loops did not converge within max_iters")
-        edits.append(extract_edits(fhat_b[i], g))
-        iters_list.append(int(iters))
+        edits.append(extract_edits(fhat_i, g))
+        iters_list.append(int(_d2h(iters)))
     t2 = time.perf_counter()
 
     r_host, packed, nbytes_codes = _pull_batch_codes(be, r_b, B, entropy)
@@ -470,6 +507,7 @@ def _device_pipelined_stage(fields: List[np.ndarray], xi_arr: np.ndarray,
         fields=fields, xi_arr=xi_arr, steps=steps,
         f_b=f_b, fhat_b=fhat_b, r_host=r_host,
         edits=edits + [empty] * (B - n_real),
+        # mszlint: disable=transfer-discipline -- iters_list is python ints
         iters_b=np.asarray(iters_list + [0] * (B - n_real)),
         backend_name=be.name,
         t_transform_each=(t1 - t0) / B,
@@ -877,7 +915,8 @@ def decompress_artifact_batch(arts: Sequence[CompressedArtifact],
                 b_j = _h2d(np.ascontiguousarray(bits))
                 f_hat = be.reconstruct(
                     be.unpack_codes(w_j, b_j, shape), step, dtype)
-                gs.append(be.scatter_edits(f_hat, idx_j[i], val_j[i]))
+                gs.append(be.scatter_edits(f_hat, _member(idx_j, i),
+                                           _member(val_j, i)))
             g_host = _d2h(jnp.stack(gs))
             return [g_host[i] for i in range(len(arts))]
     gs = []
@@ -890,7 +929,8 @@ def decompress_artifact_batch(arts: Sequence[CompressedArtifact],
             return [decompress_artifact(a) for a in arts]
         r_j = _h2d(np.ascontiguousarray(r, np.int32))
         f_hat = be.reconstruct(r_j, step, dtype)
-        gs.append(be.scatter_edits(f_hat, idx_j[i], val_j[i]))
+        gs.append(be.scatter_edits(f_hat, _member(idx_j, i),
+                                   _member(val_j, i)))
     g_host = _d2h(jnp.stack(gs))
     return [g_host[i] for i in range(len(arts))]
 

@@ -53,6 +53,7 @@ import numpy as np
 
 from ..core import fixes
 from ..core.backend import BackendLike, resolve_backend
+from ..debug import sanitize_transfers
 from ..distributed.straggler import StepWatchdog
 from . import calibrate, pipeline, szlike
 
@@ -100,12 +101,13 @@ class SpecCache:
         if maxsize < 1:
             raise ValueError(f"cache maxsize must be >= 1, got {maxsize}")
         self.maxsize = maxsize
+        # guarded-by: self._lock
         self._data: "collections.OrderedDict[Hashable, object]" = \
             collections.OrderedDict()
         self._lock = threading.Lock()
-        self.hits = 0
-        self.misses = 0
-        self.evictions = 0
+        self.hits = 0                        # guarded-by: self._lock
+        self.misses = 0                      # guarded-by: self._lock
+        self.evictions = 0                   # guarded-by: self._lock
 
     def get(self, key: Hashable, build: Callable[[], object]) -> object:
         """The cached value for ``key``, building (and possibly evicting
@@ -229,24 +231,28 @@ class _StreamBase:
         self._lock = threading.Lock()
         self._wake = threading.Condition(self._lock)   # scheduler wake-ups
         self._done = threading.Condition(self._lock)   # flush() wake-ups
+        # guarded-by: self._lock
         self._pending: "collections.deque[_Request]" = collections.deque()
-        self._closed = False
-        self._spec0: Optional[Tuple] = None
+        self._closed = False                 # guarded-by: self._lock
+        self._spec0: Optional[Tuple] = None  # guarded-by: self._lock
 
-        # stats (guarded by self._lock)
-        self._submitted = 0
-        self._completed = 0
-        self._failed = 0
-        self._in_flight = 0
-        self._max_in_flight = 0
-        self._batches = 0
-        self._members_real = 0
-        self._members_padded = 0
-        self._nbytes_h2d = 0
-        self._nbytes_d2h = 0
-        self._t_device = 0.0
-        self._t_encode = 0.0
+        # stats counters, each # guarded-by: self._lock (mszlint verifies
+        # every write below sits inside the critical section — PR 7 race)
+        self._submitted = 0                  # guarded-by: self._lock
+        self._completed = 0                  # guarded-by: self._lock
+        self._failed = 0                     # guarded-by: self._lock
+        self._in_flight = 0                  # guarded-by: self._lock
+        self._max_in_flight = 0              # guarded-by: self._lock
+        self._batches = 0                    # guarded-by: self._lock
+        self._members_real = 0               # guarded-by: self._lock
+        self._members_padded = 0             # guarded-by: self._lock
+        self._nbytes_h2d = 0                 # guarded-by: self._lock
+        self._nbytes_d2h = 0                 # guarded-by: self._lock
+        self._t_device = 0.0                 # guarded-by: self._lock
+        self._t_encode = 0.0                 # guarded-by: self._lock
+        # guarded-by: self._lock
         self._t_first_submit: Optional[float] = None
+        # guarded-by: self._lock
         self._t_last_done: Optional[float] = None
 
         self._pool = ThreadPoolExecutor(
@@ -408,7 +414,7 @@ class _StreamBase:
                     spec, self.max_batch - len(batch)))
             return batch
 
-    def _pop_spec_locked(self, spec: Tuple,
+    def _pop_spec_locked(self, spec: Tuple,  # guarded-by: self._lock
                          limit: Optional[int] = None) -> List[_Request]:
         limit = self.max_batch if limit is None else limit
         taken: List[_Request] = []
@@ -659,16 +665,22 @@ class CompressStream(_StreamBase):
             xi_arr = np.concatenate([xi_arr, np.full(pad, xi_arr[-1])])
             steps = steps + [steps[-1]] * pad
         t0 = time.perf_counter()
-        if self._use_fused_fix(fields[0], be):
-            self._note_fix_mode("fused")
-            db = pipeline._device_batch_stage(fields, xi_arr, be,
-                                              self._max_iters, steps,
-                                              entropy=entropy)
-        else:
-            self._note_fix_mode("pipelined")
-            db = pipeline._device_pipelined_stage(fields, xi_arr, be,
+        # under MSZ_SANITIZERS the whole device stage runs inside the
+        # transfer guard: an untracked host<->device crossing fails the
+        # batch loudly instead of silently serializing the dispatch
+        # stream (debug.guards, DESIGN.md §10)
+        with sanitize_transfers():
+            if self._use_fused_fix(fields[0], be):
+                self._note_fix_mode("fused")
+                db = pipeline._device_batch_stage(fields, xi_arr, be,
                                                   self._max_iters, steps,
-                                                  n_real=B, entropy=entropy)
+                                                  entropy=entropy)
+            else:
+                self._note_fix_mode("pipelined")
+                db = pipeline._device_pipelined_stage(fields, xi_arr, be,
+                                                      self._max_iters, steps,
+                                                      n_real=B,
+                                                      entropy=entropy)
         self._note_batch(B, pad, db.nbytes_h2d, db.nbytes_d2h,
                          time.perf_counter() - t0)
         if hasattr(be, "halo_plan"):
@@ -780,8 +792,11 @@ class DecompressStream(_StreamBase):
                 for req in batch):
             # device-pack device-path batch: residual decode is a device
             # unpack, so there is no host entropy work to overlap — run
-            # inline rather than paying a worker-pool hop (DESIGN.md §8)
-            self._decode_batch(batch)
+            # inline rather than paying a worker-pool hop (DESIGN.md §8).
+            # Under MSZ_SANITIZERS the decode also runs inside the
+            # transfer guard, asserting the no-host-entropy claim.
+            with sanitize_transfers():
+                self._decode_batch(batch)
         else:
             self._pool.submit(self._decode_batch, batch)
 

@@ -187,6 +187,8 @@ def sz_inverse(r: jnp.ndarray, step) -> jnp.ndarray:
     (weakly-typed python floats reconstruct f32)."""
     q = r
     for ax in range(r.ndim):
+        # mszlint: disable=int32-range -- every codec entry gates on
+        # codes_fit_int32/check_int32_range before reaching this decode
         q = int32_cumsum(q, ax)
     step = jnp.asarray(step)
     return q.astype(step.dtype) * step

@@ -57,6 +57,21 @@ import jax.numpy as jnp
 from . import grid
 
 
+def _device_scalar(step, dtype) -> jnp.ndarray:
+    """The quantization step as a device scalar of ``dtype``.
+
+    ``transform``/``reconstruct`` are called eagerly (outside jit) with a
+    host float, and an eager ``jnp.asarray(step, dtype)`` is an IMPLICIT
+    host->device transfer — it trips ``debug.no_transfers()``. Route the
+    host case through the explicit ``jax.device_put`` API instead
+    (identical dtype canonicalization, so the codes are bitwise
+    unchanged); values already on device just cast in place."""
+    if isinstance(step, jnp.ndarray):
+        return step.astype(dtype)
+    import numpy as _np
+    return jax.device_put(_np.asarray(step, dtype))
+
+
 # ---------------------------------------------------------------------------
 # shared stencil predicates (pure jnp — also reused by the paper-mode loops
 # in fixes.py)
@@ -196,13 +211,13 @@ class ReferenceBackend:
     def transform(self, f: jnp.ndarray, step) -> jnp.ndarray:
         """Quantize + integer Lorenzo -> int32 residual codes."""
         from ..compress.szlike import _sz_transform_jit
-        return _sz_transform_jit(f, jnp.asarray(step, f.dtype))
+        return _sz_transform_jit(f, _device_scalar(step, f.dtype))
 
     def reconstruct(self, r: jnp.ndarray, step, dtype) -> jnp.ndarray:
         """int32 residual codes -> f_hat in ``dtype`` (bitwise equal to
         the host codec's reconstruction of the same codes)."""
         from ..compress.szlike import sz_inverse
-        return sz_inverse(r, jnp.asarray(step, dtype))
+        return sz_inverse(r, _device_scalar(step, dtype))
 
     # -- device-resident decompression path (DESIGN.md §5) ------------
     def scatter_edits(self, f_hat: jnp.ndarray, idx, val) -> jnp.ndarray:
@@ -318,14 +333,14 @@ class PallasBackend:
         the pallas_call grid already streams slab pairs through VMEM, so
         the footprint is ~2 slabs regardless of field height."""
         from ..kernels.lorenzo import lorenzo_quant_pallas
-        return lorenzo_quant_pallas(f, jnp.asarray(step, f.dtype),
+        return lorenzo_quant_pallas(f, _device_scalar(step, f.dtype),
                                     interpret=self._interpret())
 
     def reconstruct(self, r: jnp.ndarray, step, dtype) -> jnp.ndarray:
         """Inverse stays XLA-level (kernels.lorenzo docstring) —
         identical arithmetic to the reference backend."""
         from ..compress.szlike import sz_inverse
-        return sz_inverse(r, jnp.asarray(step, dtype))
+        return sz_inverse(r, _device_scalar(step, dtype))
 
     # -- device-resident decompression path (DESIGN.md §5) ------------
     def scatter_edits(self, f_hat: jnp.ndarray, idx, val) -> jnp.ndarray:

@@ -155,6 +155,11 @@ def _edit_compact(delta: jnp.ndarray, size: int):
     return idx, flat[idx]
 
 
+@functools.partial(jax.jit, static_argnames=("n",))
+def _edit_slice(idx: jnp.ndarray, val: jnp.ndarray, n: int):
+    return idx[:n], val[:n]
+
+
 def extract_edits(f_hat: jnp.ndarray, g: jnp.ndarray
                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """On-device edit extraction: ``delta != 0`` mask, count, and
@@ -164,15 +169,22 @@ def extract_edits(f_hat: jnp.ndarray, g: jnp.ndarray
     to pull. Ascending flat indices — identical to the host path's
     ``np.flatnonzero`` ordering. The compaction size is rounded up to the
     next power of two (then sliced back to the true count), capping jit
-    specializations at ~log2(V) instead of one per distinct edit count."""
+    specializations at ~log2(V) instead of one per distinct edit count.
+
+    Runs eagerly, so the count sync is an explicit ``jax.device_get``
+    and the final slice runs jitted with a static length — eager
+    ``int(n)`` / ``arr[:n]`` would each be an implicit transfer under
+    ``debug.no_transfers()`` (eager slicing ships its indices to the
+    device per call; the jitted slice bakes them in at trace time, at
+    the same one-compile-per-distinct-length cost the eager op paid)."""
     delta, n = _edit_count(f_hat, g)
-    n = int(n)
+    n = int(jax.device_get(n))
     if n == 0:
         empty = jnp.zeros(0, jnp.int32)
         return empty, jnp.zeros(0, f_hat.dtype)
     cap = 1 << (n - 1).bit_length()
     idx, val = _edit_compact(delta, cap)
-    return idx[:n], val[:n]
+    return _edit_slice(idx, val, n)
 
 
 def apply_edits(f_hat, edits_idx, edits_val) -> np.ndarray:
@@ -190,6 +202,7 @@ def apply_edits(f_hat, edits_idx, edits_val) -> np.ndarray:
     if idx.size == 0:
         return g
     if idx.size == 1 or np.all(np.diff(idx) > 0):
+        # mszlint: disable=scatter-discipline -- diff>0 proves uniqueness
         flat[idx] += val            # strictly increasing => no duplicates
     else:
         np.add.at(flat, idx, val)   # unbuffered: duplicates accumulate

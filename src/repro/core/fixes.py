@@ -42,8 +42,9 @@ import numpy as np
 
 from . import grid
 from .backend import (BackendLike, FalseMasks, StencilMasks,  # noqa: F401
-                      _halve_toward_lower, _pull, false_critical_masks,
-                      get_backend, resolve_backend, trouble_masks)
+                      _halve_toward_lower, _pull, _device_scalar,
+                      false_critical_masks, get_backend, resolve_backend,
+                      trouble_masks)
 from .labels import labels_from_codes, pointer_jump
 
 
@@ -61,12 +62,16 @@ class FieldTopo(NamedTuple):
 def field_topology(f: jnp.ndarray, xi) -> FieldTopo:
     """Precompute everything the fix loops need from the ORIGINAL
     field: steepest direction codes, extremum masks, ascending/
-    descending MSS labels, and the per-vertex lower bound f - xi."""
+    descending MSS labels, and the per-vertex lower bound f - xi.
+
+    Runs eagerly, so the two host scalars it consumes (the self code and
+    ``xi``) cross via the explicit transfer seam — an implicit eager
+    promotion would trip ``debug.no_transfers()`` on every call."""
     up_c, dn_c = grid.steepest_dirs(f)
     M, m = labels_from_codes(up_c, dn_c)
-    sc = grid.self_code(f.ndim)
+    sc = _device_scalar(grid.self_code(f.ndim), up_c.dtype)
     return FieldTopo(up_c, dn_c, up_c == sc, dn_c == sc, M, m,
-                     f - jnp.asarray(xi, f.dtype))
+                     f - _device_scalar(xi, f.dtype))
 
 
 # ---------------------------------------------------------------------------
@@ -242,26 +247,44 @@ def _fused_fix_batch_compact(g0: jnp.ndarray, topo: FieldTopo,
     it_done = 0
     while active.size and it_done < max_iters:
         k = min(every, max_iters - it_done)
-        cap = _pow2_at_least(active.size)
-        sel = np.concatenate(
-            [active, np.full(cap - active.size, active[0], active.dtype)])
-        sel_j = jnp.asarray(sel)
-        g_a = jnp.take(g, sel_j, axis=0)
-        topo_a = jax.tree_util.tree_map(
-            lambda x: jnp.take(x, sel_j, axis=0), topo)
-        viol_a = jnp.asarray(np.concatenate(
-            [viol[active], np.zeros(cap - active.size, np.int32)]))
-        g_a, dit_a, viol_a = _fused_fix_round_impl(g_a, topo_a, viol_a,
-                                                   k=k, backend=be)
         n = active.size
-        g = g.at[jnp.asarray(active)].set(g_a[:n])
-        dit = np.asarray(dit_a[:n])    # host sync: one small pull per round
-        viol_n = np.asarray(viol_a[:n])
+        cap = _pow2_at_least(n)
+        # gather padding repeats active[0]; the scatter-back pads with B
+        # (out of bounds, mode="drop") so only the n real lanes land —
+        # a host-side [:n] slice would be an implicit transfer per round
+        sel = np.concatenate([active, np.full(cap - n, active[0],
+                                              active.dtype)])
+        scat = np.concatenate([active, np.full(cap - n, B, active.dtype)])
+        viol_a0 = np.concatenate([viol[active], np.zeros(cap - n, np.int32)])
+        g, dit_a, viol_a = _compact_round(
+            g, topo, jax.device_put(sel), jax.device_put(scat),
+            jax.device_put(viol_a0), k=k, backend=be)
+        # host sync: one small explicit pull per round (cap-padded)
+        dit = jax.device_get(dit_a)[:n]
+        viol_n = jax.device_get(viol_a)[:n]
+        # mszlint: disable=scatter-discipline -- active is a flatnonzero
+        # subset, unique by construction
         iters[active] += dit
         viol[active] = viol_n
         it_done += k
         active = active[viol_n > 0]
-    return g, jnp.asarray(iters), jnp.asarray(viol == 0)
+    return g, jax.device_put(iters), jax.device_put(viol == 0)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "backend"))
+def _compact_round(g: jnp.ndarray, topo: FieldTopo, sel: jnp.ndarray,
+                   scat: jnp.ndarray, viol_a: jnp.ndarray, k: int, backend):
+    """One compaction round, fully jitted: gather the padded active
+    bucket, run up to ``k`` iterations, scatter results back (padding
+    lanes carry out-of-bounds indices and drop). Keeping the gather/
+    scatter inside jit bakes every index constant in at trace time —
+    eager ``take``/``at[].set`` would ship scalars per call, tripping
+    ``debug.no_transfers()``."""
+    g_a = jnp.take(g, sel, axis=0)
+    topo_a = jax.tree_util.tree_map(lambda x: jnp.take(x, sel, axis=0), topo)
+    g_a, dit_a, viol_a = _fused_fix_round_impl(g_a, topo_a, viol_a,
+                                               k=k, backend=backend)
+    return g.at[scat].set(g_a, mode="drop"), dit_a, viol_a
 
 
 def fused_fix_batch(g0: jnp.ndarray, topo: FieldTopo, max_iters: int = 512,
@@ -313,7 +336,7 @@ def fused_fix_batch(g0: jnp.ndarray, topo: FieldTopo, max_iters: int = 512,
     if batching == "auto":
         batching = "compact" if g0.shape[0] > 1 else "fused"
     if batching == "compact":
-        return _fused_fix_batch_compact(jnp.asarray(g0), topo, max_iters,
+        return _fused_fix_batch_compact(jax.device_put(g0), topo, max_iters,
                                         be, compact_every)
     return _fused_fix_batch_impl(g0, topo, max_iters=max_iters, backend=be)
 

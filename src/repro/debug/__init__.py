@@ -1,0 +1,17 @@
+"""Runtime sanitizers (DESIGN.md §10).
+
+The static half of the repo's contract enforcement lives in
+``tools/mszlint``; this package holds the runtime half — context
+managers that turn the device-path transfer discipline ("ONE h2d / ONE
+d2h", DESIGN.md §4–§5) and the compile-cache discipline (stable jit
+keys, DESIGN.md §7) from narrated claims into assertions that fail
+loudly: ``no_transfers`` wraps ``jax.transfer_guard`` so an untracked
+host<->device crossing raises at the offending call site, and
+``no_recompiles`` wraps ``jax.log_compiles`` so a cache-key regression
+(a silent per-call retrace) raises instead of just running slow.
+"""
+from .guards import (RecompileError, no_recompiles, no_transfers,
+                     sanitize_transfers, sanitizers_enabled)
+
+__all__ = ["no_transfers", "no_recompiles", "RecompileError",
+           "sanitize_transfers", "sanitizers_enabled"]

@@ -1,0 +1,161 @@
+"""Reusable runtime-sanitizer guards (DESIGN.md §10).
+
+Two context managers back the repo's device-path contracts at runtime:
+
+* ``no_transfers()`` — inside the block, any *implicit* host<->device
+  transfer raises at the offending call site (``jax.transfer_guard``
+  under the hood). The pipeline's audited crossings
+  (``pipeline._h2d`` / ``pipeline._d2h``) use the explicit
+  ``jax.device_put`` / ``jax.device_get`` APIs, which the guard
+  deliberately permits — so the block asserts "every crossing is a
+  tracked, audited one", the mechanical form of the ONE-h2d/ONE-d2h
+  claim of DESIGN.md §4–§5. Untracked crossings the guard catches
+  include host scalars handed straight to a jitted callable (one
+  implicit h2d per dispatch) and device values scalarized mid-stage.
+
+* ``no_recompiles()`` — inside the block, more than ``max_compiles``
+  XLA compilations raise ``RecompileError`` (``jax.log_compiles``
+  under the hood, counted via a logging handler). This is the loud
+  version of the compile-cache discipline: a jit cache key that churns
+  per call (the PR 7 calibration-cache bug class) re-traces silently
+  and only shows up as a perf cliff; under the guard it fails.
+
+``sanitizers_enabled()`` reads the ``MSZ_SANITIZERS`` environment knob
+that the sanitizer tier-1 CI leg sets: production hot paths (the stream
+scheduler's device stage) wrap themselves in ``no_transfers`` when it is
+on, so the "zero host compute for device-pack batches" claim of
+DESIGN.md §8 is asserted on every dispatch, not narrated.
+
+Both guards are thread-local (jax config context managers), so a
+guarded scheduler thread never constrains worker threads running host
+entropy coding.
+"""
+from __future__ import annotations
+
+import contextlib
+import logging
+import os
+from typing import Iterator, List, Optional
+
+ENV_VAR = "MSZ_SANITIZERS"
+
+#: loggers that emit the compile/trace records ``jax.log_compiles``
+#: enables; attaching to the package root catches both via propagation
+_JAX_LOGGER = "jax"
+#: one "Compiling <name> with global shapes..." record is emitted per
+#: actual XLA compilation (re-traces that hit the lowering cache emit
+#: only "Finished tracing" records and are not counted)
+_COMPILE_PREFIX = "Compiling "
+
+
+def sanitizers_enabled() -> bool:
+    """Whether the ``MSZ_SANITIZERS`` environment knob is on (the
+    sanitizer tier-1 CI leg sets ``MSZ_SANITIZERS=1``): hot paths that
+    claim transfer discipline wrap themselves in ``no_transfers`` when
+    it is, turning the claims into per-dispatch assertions."""
+    env = os.environ.get(ENV_VAR, "").strip().lower()
+    if env in ("", "0", "false", "no", "off"):
+        return False
+    if env in ("1", "true", "yes", "on"):
+        return True
+    raise ValueError(
+        f"{ENV_VAR}={env!r} not understood; use one of 1/true/yes/on "
+        "(sanitizers on) or 0/false/no/off (off)")
+
+
+@contextlib.contextmanager
+def no_transfers(*, h2d: bool = True, d2h: bool = True) -> Iterator[None]:
+    """Assert that no *implicit* host<->device transfer happens inside
+    the block: one raises ``jaxlib...XlaRuntimeError`` at the offending
+    call site. Explicit transfers — ``jax.device_put`` /
+    ``jax.device_get``, i.e. the pipeline's audited ``_h2d`` / ``_d2h``
+    seams — stay permitted, so the device paths' ONE-h2d/ONE-d2h
+    contract can be asserted while the contracted crossings still run.
+
+    ``h2d=False`` / ``d2h=False`` narrow the guard to one direction.
+    Device->device movement (the sharded backends re-shard committed
+    inputs) is never guarded.
+
+    Notes for test authors: run one warm-up call before entering the
+    guard — compilation itself may transfer constants — and expect the
+    guard to be strictest on non-CPU backends (on CPU, zero-copy
+    host<->device aliasing means some conversions never hit the
+    transfer machinery; implicit jit-argument transfers are caught on
+    every backend). Combine with ``pipeline._transfer_hook`` counting
+    for the exact ONE-each-way assertion.
+    """
+    import jax
+
+    with contextlib.ExitStack() as stack:
+        if h2d:
+            stack.enter_context(jax.transfer_guard_host_to_device("disallow"))
+        if d2h:
+            stack.enter_context(jax.transfer_guard_device_to_host("disallow"))
+        yield
+
+
+def sanitize_transfers():
+    """``no_transfers()`` when the ``MSZ_SANITIZERS`` knob is on, else a
+    no-op context — the wrapper production device-stage code puts around
+    its dispatch region so the sanitizer CI leg asserts the transfer
+    contract on every batch without costing the default path anything."""
+    if sanitizers_enabled():
+        return no_transfers()
+    return contextlib.nullcontext()
+
+
+class RecompileError(RuntimeError):
+    """Raised by ``no_recompiles`` when a block compiled more programs
+    than its budget — the loud form of a jit cache-key regression."""
+
+
+class _RecordList(logging.Handler):
+    """Capture handler: appends every record's rendered message."""
+
+    def __init__(self, sink: List[str]):
+        super().__init__(level=logging.DEBUG)
+        self._sink = sink
+
+    def emit(self, record: logging.LogRecord) -> None:  # noqa: D102
+        try:
+            self._sink.append(record.getMessage())
+        except Exception:       # noqa: BLE001 — a guard must never crash
+            pass
+
+
+@contextlib.contextmanager
+def no_recompiles(max_compiles: int = 0, *,
+                  label: Optional[str] = None) -> Iterator[List[str]]:
+    """Assert that at most ``max_compiles`` XLA compilations happen
+    inside the block (default: none), else raise ``RecompileError``
+    naming every compiled program. Yields the live list of captured
+    jax compile-log messages for callers that want to inspect it.
+
+    Callers warm their jitted functions up *before* entering the block,
+    then run the steady-state calls inside it — a stable cache key
+    compiles nothing; a churning one (the PR 7
+    ``calibrate.fused_fix_threshold`` interpret-policy bug class)
+    re-compiles per call and fails here instead of silently re-tracing.
+
+    If the block itself raises, that exception propagates unchanged
+    (the compile budget is only checked on clean exit).
+    """
+    import jax
+
+    messages: List[str] = []
+    handler = _RecordList(messages)
+    logger = logging.getLogger(_JAX_LOGGER)
+    logger.addHandler(handler)
+    try:
+        with jax.log_compiles(True):
+            yield messages
+    finally:
+        logger.removeHandler(handler)
+    compiles = [m for m in messages if m.startswith(_COMPILE_PREFIX)]
+    if len(compiles) > max_compiles:
+        what = f" in {label}" if label else ""
+        detail = "\n  ".join(compiles)
+        raise RecompileError(
+            f"{len(compiles)} XLA compilation(s){what} where at most "
+            f"{max_compiles} were budgeted — a jit cache key is churning "
+            f"(retrace per call). Compiled programs:\n  {detail}")

@@ -26,6 +26,7 @@ def _bits_dtype(bits: int):
 
 def quantize_tree(grads: Any, rel_bound: float, bits: int = 16):
     """Per-tensor linear-scaling quantization. Returns (codes, steps)."""
+    # mszlint: disable=transfer-discipline -- bits is a python int
     qmax = float(2 ** (bits - 1) - 1)
 
     def q(g):
@@ -63,6 +64,7 @@ def compressed_psum_tree(grads: Any, axis_name: str, rel_bound: float = 1e-3,
     Steps are synchronized by a (tiny) f32 psum-max first so all shards
     use one step per tensor.
     """
+    # mszlint: disable=transfer-discipline -- bits is a python int
     qmax = float(2 ** (bits - 1) - 1) / n_shards   # headroom for the sum
     wire = _bits_dtype(bits)                       # int16 / int8 on the wire
 

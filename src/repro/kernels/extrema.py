@@ -136,6 +136,8 @@ def _neighbor_scan(slabs, z, N, yg, xg, NY, NX, lin, offs, *,
     compile exponentially on XLA:CPU (see that helper's docstring); the
     stacked form is bitwise identical.
     """
+    # mszlint: disable=transfer-discipline -- kernel-body helper, only ever
+    # called under trace where the constant folds at trace time
     fill = jnp.asarray(-jnp.inf if ascending else jnp.inf, slabs[1].dtype)
     vals = [slabs[1]]
     idxs = [lin]
@@ -215,12 +217,29 @@ def _kernel(origin_c, g_m, g_c, g_p, Mf_m, Mf_c, Mf_p, mf_m, mf_c, mf_p,
                         .reshape(promote_out.shape))
 
 
+def typed_operand(v, dtype) -> jnp.ndarray:
+    """Normalize a scalar operand — python number or traced/device
+    value — to a device scalar of ``dtype``. Host values move via the
+    EXPLICIT ``jax.device_put`` API: the kernel entry points are called
+    eagerly, where an implicit ``jnp.asarray(number)`` conversion would
+    trip ``debug.no_transfers()`` on every dispatch; device values just
+    cast in place."""
+    if isinstance(v, jnp.ndarray):
+        return v.astype(dtype)
+    import numpy as np
+    return jax.device_put(np.asarray(v, dtype))
+
+
+def _int32_operand(v) -> jnp.ndarray:
+    return typed_operand(v, jnp.int32)
+
+
 def slab_lo_operand(slab_lo) -> jnp.ndarray:
     """Normalize a slab offset — python int or traced int32 scalar (the
     sharded fix loop passes ``axis_index * block - 1``) — to the (1, 1)
     operand the kernels read. Static and traced offsets produce bitwise
     identical outputs; only the specialization key differs."""
-    return jnp.asarray(slab_lo, jnp.int32).reshape(1, 1)
+    return _int32_operand(slab_lo).reshape(1, 1)
 
 
 def slab_lo_spec() -> pl.BlockSpec:
@@ -235,7 +254,7 @@ def origin_operand(slab_lo, row_lo=0, col_lo=0) -> jnp.ndarray:
     ``axis_index * block - halo`` so one SPMD program serves every block
     of a 2D/3D block mesh; static and traced origins produce bitwise
     identical outputs, only the specialization key differs."""
-    parts = [jnp.asarray(v, jnp.int32).reshape(1) for v in
+    parts = [_int32_operand(v).reshape(1) for v in
              (slab_lo, row_lo, col_lo)]
     return jnp.concatenate(parts).reshape(1, 3)
 
@@ -254,6 +273,7 @@ def _axis_total(total, lo, extent: int, what: str) -> int:
             raise ValueError(
                 f"a traced {what} offset needs an explicit total extent")
         return lo + extent
+    # mszlint: disable=transfer-discipline -- total is a host int parameter
     return int(total)
 
 

@@ -46,7 +46,7 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32)
         if causal:
-            s = jnp.where(q_pos >= k_pos, s, -jnp.inf)
+            s = jnp.where(q_pos >= k_pos, s, jnp.asarray(-jnp.inf, s.dtype))
         m_prev = m_scr[...]
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
         m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
@@ -69,10 +69,14 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 def flash_attention_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                            *, causal: bool = True, q_block: int = 256,
                            k_block: int = 256,
-                           interpret: bool = True) -> jnp.ndarray:
+                           interpret: bool | None = None) -> jnp.ndarray:
     """q: (B, S, H, Dh); k/v: (B, T, Hk, Dh) with H = Hk*G. Returns
     (B, S, H, Dh). S % q_block == 0 and T % k_block == 0 required (the
-    ops.py wrapper picks divisors)."""
+    ops.py wrapper picks divisors). ``interpret=None`` resolves via
+    ``default_interpret()`` like every other kernel entry point."""
+    if interpret is None:
+        from .extrema import default_interpret
+        interpret = default_interpret()
     B, S, H, Dh = q.shape
     T, Hk = k.shape[1], k.shape[2]
     G = H // Hk

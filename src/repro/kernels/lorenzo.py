@@ -32,7 +32,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .extrema import _shift2d, default_interpret, slab_lo_operand, slab_lo_spec
+from .extrema import (_shift2d, default_interpret, slab_lo_operand,
+                      slab_lo_spec, typed_operand)
 
 
 def _kernel(slab_lo_c, step_c, f_m, f_c, r_out, *, ndim, P, X):
@@ -90,7 +91,7 @@ def lorenzo_quant_pallas(f: jnp.ndarray, step, *,
     else:
         raise ValueError(f"lorenzo kernel supports 2D/3D, got shape {f.shape}")
     kern = functools.partial(_kernel, ndim=f.ndim, P=P, X=X)
-    step_op = jnp.asarray(step, f.dtype).reshape(1, 1)
+    step_op = typed_operand(step, f.dtype).reshape(1, 1)
     return pl.pallas_call(
         kern,
         grid=(n_local,),

@@ -100,6 +100,9 @@ def _offsets_jnp(bits: jnp.ndarray, wpp: int):
     path's own size regime)."""
     from ..compress.szlike import int32_cumsum
     words = bits * jnp.int32(wpp)
+    # mszlint: disable=int32-range -- per-chunk word counts are bounded
+    # by the stream length (<= n_codes words), which fits int32 by the
+    # device path's own size regime
     ends = int32_cumsum(words, 0)
     return ends - words, ends[-1] if bits.size else jnp.int32(0)
 
@@ -240,9 +243,17 @@ def pack_codes_pallas(r: jnp.ndarray, chunk: int = CHUNK, *,
     a Pallas kernel (grid over chunks, (1, chunk) uint32 blocks — lane
     dimension a multiple of 128). The offset prefix scan and the
     compaction scatter stay XLA-level around the kernel. Bitwise
-    identical to the jnp and host codecs."""
+    identical to the jnp and host codecs. The whole composition runs
+    jitted so its scalar constants bake in at trace time (eager
+    execution would ship them per call — an implicit transfer under
+    ``debug.no_transfers()``)."""
     if interpret is None:
         interpret = default_interpret()
+    return _pack_codes_pallas_jit(r, chunk=chunk, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def _pack_codes_pallas_jit(r: jnp.ndarray, chunk: int, interpret: bool):
     n = r.size
     n_chunks, n_pad, wpp = _chunk_layout(n, chunk)
     if n_chunks == 0:
@@ -268,9 +279,18 @@ def unpack_codes_pallas(words: jnp.ndarray, bits: jnp.ndarray,
                         shape: Tuple[int, ...], chunk: int = CHUNK, *,
                         interpret: Optional[bool] = None) -> jnp.ndarray:
     """Inverse of ``pack_codes_pallas``: XLA-level expand gather, then
-    the per-chunk plane transpose back to codes as a Pallas kernel."""
+    the per-chunk plane transpose back to codes as a Pallas kernel.
+    Jitted end to end (see ``pack_codes_pallas``)."""
     if interpret is None:
         interpret = default_interpret()
+    return _unpack_codes_pallas_jit(words, bits, shape=tuple(shape),
+                                    chunk=chunk, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("shape", "chunk", "interpret"))
+def _unpack_codes_pallas_jit(words: jnp.ndarray, bits: jnp.ndarray,
+                             shape: Tuple[int, ...], chunk: int,
+                             interpret: bool) -> jnp.ndarray:
     n = 1
     for s in shape:
         n *= int(s)

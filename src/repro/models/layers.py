@@ -97,8 +97,7 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
         from ..kernels.flash import flash_attention_pallas
         return flash_attention_pallas(
             q, k, v, causal=causal, q_block=_pick_chunk(q.shape[1], 256),
-            k_block=_pick_chunk(k.shape[1], 256),
-            interpret=jax.default_backend() != "tpu")
+            k_block=_pick_chunk(k.shape[1], 256))
     B, S, H, D = q.shape
     T, Hk = k.shape[1], k.shape[2]
     G = H // Hk

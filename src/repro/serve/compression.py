@@ -138,9 +138,11 @@ class CompressionService:
         self._compress = CompressStream(**kw)
         self._decompress = DecompressStream(**kw)
         self._t_start = time.perf_counter()
+        self._lock = threading.Lock()
         # one-shot interior/boundary timing probe, keyed on the probed
-        # (shape, dtype, mesh) class; filled by shard_timings()
-        self._shard_probe: Optional[tuple] = None
+        # (shape, dtype, mesh) class; filled by shard_timings(), which
+        # the stats endpoint may hit from concurrent server threads
+        self._shard_probe: Optional[tuple] = None  # guarded-by: self._lock
 
     # -- submission ---------------------------------------------------
     def _guard(self, submit, *args, **kw) -> Future:
@@ -211,16 +213,18 @@ class CompressionService:
         shape = tuple(meta["shape"])
         key = (shape, meta["dtype"], tuple(mesh.axis_names),
                tuple(mesh.devices.shape))
-        if self._shard_probe is not None and not refresh \
-                and self._shard_probe[0] == key:
-            return self._shard_probe[1]
+        with self._lock:
+            probe = self._shard_probe
+        if probe is not None and not refresh and probe[0] == key:
+            return probe[1]
         from ..core import field_topology
         rng = np.random.default_rng(0)
         f = rng.normal(size=shape).astype(meta["dtype"])
         topo = field_topology(jnp.asarray(f), 0.1)
         timings = time_step_parts(jnp.asarray(f), topo, mesh)
         doc = dict(shape=list(shape), dtype=meta["dtype"], **timings)
-        self._shard_probe = (key, doc)
+        with self._lock:
+            self._shard_probe = (key, doc)
         return doc
 
     def stats(self) -> Dict[str, object]:
@@ -240,9 +244,12 @@ class CompressionService:
                         overload=self.config.overload),
             compress=self._compress.stats(),
             decompress=self._decompress.stats(),
-            shard_timings=(self._shard_probe[1]
-                           if self._shard_probe else None),
+            shard_timings=self._shard_timings_snapshot(),
         )
+
+    def _shard_timings_snapshot(self) -> Optional[Dict[str, object]]:
+        with self._lock:
+            return self._shard_probe[1] if self._shard_probe else None
 
     # -- lifecycle ----------------------------------------------------
     def flush(self) -> None:

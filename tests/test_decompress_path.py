@@ -17,6 +17,7 @@ from repro.compress import (compress_preserving_mss, decompress_artifact,
                             decompress_artifact_batch,
                             decompress_preserving_mss, encode_edits, psnr)
 from repro.compress import codec, pipeline, szlike, zfplike
+from repro import debug
 from repro.core import verify_preservation
 from repro.core.driver import apply_edits, apply_edits_device
 from repro.data import synthetic_field
@@ -164,7 +165,11 @@ def test_decode_transfer_count(shape, monkeypatch):
     log = []
     monkeypatch.setattr(pipeline, "_transfer_hook",
                         lambda d, n: log.append((d, n)))
-    decompress_preserving_mss(art, device_path=True)
+    decompress_preserving_mss(art, device_path=True)   # warm-up: compiles
+    log.clear()
+    # guard bans implicit syncs; the hook counts the explicit seams
+    with debug.no_transfers():
+        decompress_preserving_mss(art, device_path=True)
     field_sized = [(d, n) for d, n in log if n >= f.nbytes]
     assert sum(1 for d, _ in field_sized if d == "h2d") <= 1, log
     assert sum(1 for d, _ in field_sized if d == "d2h") == 1, log
@@ -180,7 +185,10 @@ def test_decode_batch_transfer_count(monkeypatch):
     log = []
     monkeypatch.setattr(pipeline, "_transfer_hook",
                         lambda d, n: log.append((d, n)))
-    decompress_artifact_batch(arts, device_path=True)
+    decompress_artifact_batch(arts, device_path=True)  # warm-up: compiles
+    log.clear()
+    with debug.no_transfers():
+        decompress_artifact_batch(arts, device_path=True)
     member_bytes = int(np.prod((10, 12, 8))) * 4
     # pipelined: one member-sized h2d per member (residual codes), ONE
     # batch-sized d2h of the stacked g — no duplicate crossings

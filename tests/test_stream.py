@@ -23,6 +23,7 @@ from repro.compress import (CompressStream, DecompressStream, SpecCache,
                             StreamBackpressure, StreamClosed,
                             compress_preserving_mss,
                             decompress_preserving_mss)
+from repro.compress import pipeline
 from repro.data import synthetic_field
 from repro.launch.mesh import make_data_mesh
 from repro.serve import (CompressionService, ServiceConfig, ServiceOverloaded,
@@ -373,6 +374,40 @@ def test_device_pack_compress_bypasses_worker_pool():
     assert st["entropy_codecs"]["device-pack"]["count"] == 4
     assert st["entropy_codecs"]["device-pack"]["bytes"] == \
         sum(len(a.base_payload) for a in arts)
+
+
+def test_device_pack_batches_sanitized_end_to_end(monkeypatch):
+    """The full DESIGN.md §8 claim in one test: a device-pack batch does
+    ZERO host entropy work (no worker-pool jobs) AND makes zero
+    unexpected host<->device crossings. With ``MSZ_SANITIZERS=1`` the
+    scheduler's device stage runs inside ``debug.no_transfers`` — any
+    implicit sync would fail the batch — and the ``_transfer_hook``
+    count proves the only crossings are the explicit batch-sized seams,
+    one each way."""
+    fields, xis = _traffic(SHAPE_3D, 4)
+    refs = [compress_preserving_mss(f, xi, entropy="device-pack")
+            for f, xi in zip(fields, xis)]
+    with CompressStream(window=4, max_batch=4, linger_ms=50) as cs:
+        # warm-up batch with sanitizers off: first dispatch compiles,
+        # and compilation itself may legitimately transfer constants
+        [f.result() for f in
+         [cs.submit(f, xi, entropy="device-pack")
+          for f, xi in zip(fields, xis)]]
+        monkeypatch.setenv("MSZ_SANITIZERS", "1")
+        log = []
+        monkeypatch.setattr(pipeline, "_transfer_hook",
+                            lambda d, n: log.append((d, n)))
+        jobs = _record_pool(cs)
+        futs = [cs.submit(f, xi, entropy="device-pack")
+                for f, xi in zip(fields, xis)]
+        arts = [f.result() for f in futs]   # raises if the guard fired
+    assert jobs == [], f"worker pool saw {jobs} for device-pack traffic"
+    _assert_identical(arts, refs)
+    batch_bytes = sum(f.nbytes for f in fields)
+    assert sum(1 for d, n in log if d == "h2d" and n >= batch_bytes) == 1, log
+    # the return traffic is the framed entropy stream, which left the
+    # device already compressed: nothing raw-batch-sized crosses back
+    assert all(n < batch_bytes for d, n in log if d == "d2h"), log
 
 
 def test_deflate_compress_still_uses_worker_pool():

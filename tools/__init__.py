@@ -1,0 +1,6 @@
+"""Repo tooling (not shipped with the ``repro`` package).
+
+``tools.mszlint`` is the repo-contract static-analysis pass
+(DESIGN.md §10); CI runs ``python -m tools.mszlint src tests
+benchmarks`` in the lint job.
+"""

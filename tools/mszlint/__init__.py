@@ -1,0 +1,39 @@
+"""mszlint: repo-contract static analysis (DESIGN.md §10).
+
+One rule module per historical bug class — each rule mechanizes a
+contract that used to be enforced by convention alone and that a past
+PR broke anyway:
+
+================== ======================================================
+rule               contract (historical bug)
+================== ======================================================
+transfer-discipline device-stage code moves data host<->device only
+                    through the audited ``_h2d``/``_d2h`` seams — no
+                    implicit ``np.asarray``/``float()``/``.item()``
+                    syncs (the DESIGN.md §4–§5 ONE-h2d/ONE-d2h claim)
+sentinel-dtype      ``jnp.inf`` sentinels in kernels must be cast to the
+                    field dtype (PR 1: f32 ±inf sentinel bug)
+scatter-discipline  no fancy-index ``+=``/``-=`` — duplicate indices
+                    silently drop; use ``.at[].add``/``np.add.at``
+                    (PR 4)
+lock-guard          writes to ``# guarded-by: <lock>`` attributes happen
+                    lexically inside ``with <lock>:`` (PR 7: SpecCache
+                    race)
+int32-range         cumsum-on-int32 call sites carry a reachable
+                    ``check_int32_range``/``codes_fit_int32`` guard
+interpret-policy    no literal ``interpret=True/False`` outside
+                    ``default_interpret`` (PR 7: stale calibration
+                    cache key)
+================== ======================================================
+
+Suppression syntax (same line or the line above; every intentional
+suppression should carry a reason after the rule list)::
+
+    x = np.asarray(v)   # mszlint: disable=transfer-discipline -- host list
+    # mszlint: disable-file=scatter-discipline -- numpy-only module
+
+Run: ``python -m tools.mszlint src tests benchmarks``. The runtime
+companions (``no_transfers``/``no_recompiles``) live in
+``repro.debug.guards``.
+"""
+from .engine import Config, Finding, lint_paths, lint_source  # noqa: F401

@@ -1,0 +1,50 @@
+"""CLI: ``python -m tools.mszlint [--rule NAME]... PATH...``
+
+Lints every ``.py`` under the given paths against the repo contract
+(``config.DEFAULT``), prints ``path:line: [rule] message`` per finding,
+and exits 1 if anything fired. CI runs::
+
+    python -m tools.mszlint src tests benchmarks
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import List, Optional
+
+from . import rules as rules_pkg
+from .config import DEFAULT
+from .engine import lint_paths
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="mszlint",
+        description="repo-contract static analysis (DESIGN.md §10)")
+    parser.add_argument("paths", nargs="+",
+                        help="files or directories to lint")
+    parser.add_argument("--rule", action="append", default=None,
+                        metavar="NAME",
+                        help="run only this rule (repeatable)")
+    args = parser.parse_args(argv)
+
+    active = None
+    if args.rule:
+        by_name = {r.RULE: r for r in rules_pkg.ALL_RULES}
+        unknown = [n for n in args.rule if n not in by_name]
+        if unknown:
+            parser.error(f"unknown rule(s): {', '.join(unknown)}; "
+                         f"known: {', '.join(sorted(by_name))}")
+        active = [by_name[n] for n in args.rule]
+
+    findings = lint_paths(args.paths, DEFAULT, rules=active)
+    for f in findings:
+        print(f.render())
+    if findings:
+        print(f"mszlint: {len(findings)} finding(s)", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,210 @@
+"""mszlint core: source model, suppression parsing, rule driver.
+
+The engine is deliberately small: it parses each file once into an
+``ast`` tree with a parent map, hands a ``SourceModule`` to every rule
+whose path globs match, and filters the returned findings through the
+inline-suppression table. Rules are pure functions ``check(module,
+config) -> list[Finding]`` — no shared state, so fixture tests can run
+a single rule against a single in-memory file.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import fnmatch
+import re
+from pathlib import Path
+from typing import Dict, Iterator, List, Optional, Sequence, Set, Tuple
+
+#: ``# mszlint: disable=rule-a,rule-b -- optional reason`` (same line or
+#: line above a finding); ``disable-file=`` scopes to the whole file
+_SUPPRESS_RE = re.compile(
+    r"#\s*mszlint:\s*disable(?P<file>-file)?\s*=\s*"
+    r"(?P<rules>[a-z0-9_-]+(?:\s*,\s*[a-z0-9_-]+)*)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at ``path:line``."""
+    rule: str
+    path: str
+    line: int
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+@dataclasses.dataclass(frozen=True)
+class Config:
+    """Which rule applies where (see ``config.DEFAULT`` for the repo's
+    contract surface; fixture tests build narrow ones).
+
+    ``rule_paths``: rule name -> path globs (fnmatch, against the
+    repo-relative posix path). A rule skips files no glob matches.
+
+    ``transfer_check_functions``: file glob -> function names whose
+    bodies the transfer rule audits (the device-stage surface). ``"*"``
+    as the name list audits every function in the file.
+
+    ``transfer_allow_calls``: call names (bare or dotted suffix) that
+    perform EXPLICIT transfers — conversions wrapping (or wrapped by)
+    these are the audited seams and pass.
+    """
+    rule_paths: Dict[str, Tuple[str, ...]]
+    transfer_check_functions: Dict[str, Tuple[str, ...]] = \
+        dataclasses.field(default_factory=dict)
+    transfer_allow_calls: Tuple[str, ...] = (
+        "_h2d", "_d2h", "device_put", "device_get",
+        # repo helpers that route host scalars through jax.device_put
+        "typed_operand", "_device_scalar")
+
+    def rule_applies(self, rule: str, relpath: str) -> bool:
+        return any(fnmatch.fnmatch(relpath, pat)
+                   for pat in self.rule_paths.get(rule, ()))
+
+    def checked_functions(self, relpath: str) -> Optional[Tuple[str, ...]]:
+        """Audited function names of ``relpath`` for the transfer rule,
+        ``("*",)`` meaning all; None when the file has no entry."""
+        for pat, names in self.transfer_check_functions.items():
+            if fnmatch.fnmatch(relpath, pat):
+                return tuple(names)
+        return None
+
+
+class SourceModule:
+    """One parsed file: tree + parent map + suppression table."""
+
+    def __init__(self, relpath: str, text: str):
+        self.relpath = relpath
+        self.text = text
+        self.lines = text.splitlines()
+        self.tree = ast.parse(text, filename=relpath)
+        self._parents: Dict[ast.AST, ast.AST] = {}
+        for parent in ast.walk(self.tree):
+            for child in ast.iter_child_nodes(parent):
+                self._parents[child] = parent
+        self._file_suppressed: Set[str] = set()
+        self._line_suppressed: Dict[int, Set[str]] = {}
+        for lineno, line in enumerate(self.lines, start=1):
+            m = _SUPPRESS_RE.search(line)
+            if not m:
+                continue
+            rules = {r.strip() for r in m.group("rules").split(",")}
+            if m.group("file"):
+                self._file_suppressed |= rules
+            else:
+                self._line_suppressed.setdefault(lineno, set()).update(rules)
+
+    # -- tree navigation ------------------------------------------------
+    def parent(self, node: ast.AST) -> Optional[ast.AST]:
+        return self._parents.get(node)
+
+    def ancestors(self, node: ast.AST) -> Iterator[ast.AST]:
+        cur = self._parents.get(node)
+        while cur is not None:
+            yield cur
+            cur = self._parents.get(cur)
+
+    def enclosing_function(self, node: ast.AST
+                           ) -> Optional[ast.FunctionDef]:
+        for anc in self.ancestors(node):
+            if isinstance(anc, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                return anc
+        return None
+
+    # -- suppressions ---------------------------------------------------
+    def suppressed(self, rule: str, line: int) -> bool:
+        """A finding of ``rule`` at ``line`` is suppressed by a disable
+        comment on the same line, in the contiguous comment block
+        directly above (multi-line reasons are encouraged), or
+        file-wide."""
+        if rule in self._file_suppressed:
+            return True
+        if rule in self._line_suppressed.get(line, set()):
+            return True
+        at = line - 1
+        while at >= 1 and self.line_text(at).lstrip().startswith("#"):
+            if rule in self._line_suppressed.get(at, set()):
+                return True
+            at -= 1
+        return False
+
+    def line_text(self, line: int) -> str:
+        return self.lines[line - 1] if 0 < line <= len(self.lines) else ""
+
+
+def call_name(node: ast.AST) -> str:
+    """Dotted name of a call's callee ('' when not a call / not a
+    name-like callee): ``np.asarray(x)`` -> ``"np.asarray"``."""
+    if not isinstance(node, ast.Call):
+        return ""
+    return dotted_name(node.func)
+
+
+def dotted_name(node: ast.AST) -> str:
+    """``a.b.c`` for Name/Attribute chains, else ''."""
+    parts: List[str] = []
+    cur = node
+    while isinstance(cur, ast.Attribute):
+        parts.append(cur.attr)
+        cur = cur.value
+    if isinstance(cur, ast.Name):
+        parts.append(cur.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def name_matches(name: str, patterns: Sequence[str]) -> bool:
+    """Whether a dotted callee name matches a pattern list: a pattern
+    hits on exact match or as the trailing component (``device_put``
+    matches ``jax.device_put``)."""
+    if not name:
+        return False
+    last = name.rsplit(".", 1)[-1]
+    return any(name == p or last == p for p in patterns)
+
+
+def iter_py_files(paths: Sequence[str]) -> Iterator[Path]:
+    for p in paths:
+        path = Path(p)
+        if path.is_file() and path.suffix == ".py":
+            yield path
+        elif path.is_dir():
+            yield from sorted(path.rglob("*.py"))
+
+
+def lint_source(relpath: str, text: str, config: Config,
+                rules: Optional[Sequence] = None) -> List[Finding]:
+    """Run every applicable rule over one in-memory file (the fixture-
+    test entry point). Returns unsuppressed findings."""
+    from . import rules as rules_pkg
+    active = rules_pkg.ALL_RULES if rules is None else list(rules)
+    relposix = Path(relpath).as_posix()
+    applicable = [r for r in active
+                  if config.rule_applies(r.RULE, relposix)]
+    if not applicable:
+        return []
+    try:
+        module = SourceModule(relposix, text)
+    except SyntaxError as e:
+        return [Finding("parse-error", relposix, e.lineno or 1,
+                        f"could not parse: {e.msg}")]
+    out: List[Finding] = []
+    for rule in applicable:
+        for f in rule.check(module, config):
+            if not module.suppressed(f.rule, f.line):
+                out.append(f)
+    out.sort(key=lambda f: (f.path, f.line, f.rule))
+    return out
+
+
+def lint_paths(paths: Sequence[str], config: Config,
+               rules: Optional[Sequence] = None) -> List[Finding]:
+    """Lint every ``.py`` file under ``paths`` (files or directories),
+    returning all unsuppressed findings."""
+    findings: List[Finding] = []
+    for path in iter_py_files(paths):
+        text = path.read_text(encoding="utf-8")
+        findings.extend(lint_source(path.as_posix(), text, config, rules))
+    return findings

@@ -1,0 +1,9 @@
+"""mszlint rule registry: one module per historical bug class."""
+from . import (int32, interpret, locks, scatter,  # noqa: F401
+               sentinel, transfer)
+
+#: every rule module exposes RULE (its name) and check(module, config)
+ALL_RULES = [transfer, sentinel, scatter, locks, int32, interpret]
+
+__all__ = ["ALL_RULES", "transfer", "sentinel", "scatter", "locks",
+           "int32", "interpret"]

@@ -1,0 +1,63 @@
+"""int32-range: cumsum-on-int32 call sites need a reachable range
+guard (DESIGN.md §10).
+
+The SZ-like reconstruct is ``d`` nested int32 cumsums; an input whose
+running sum exceeds 2^31-1 wraps silently and corrupts every downstream
+vertex. The codecs therefore gate on ``szlike.check_int32_range`` (field
+magnitude vs step) or ``szlike.codes_fit_int32`` before reconstructing.
+This rule flags every ``int32_cumsum(...)`` call — and every
+``cumsum``/``jnp.cumsum`` call with an int32 dtype argument — in a
+function that neither calls one of the guard predicates itself nor is
+one of the implementation/guard functions. Call sites whose inputs are
+bounded by construction (word counts, prefix sums over >=0 per-chunk
+sizes) suppress inline with that argument.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from ..engine import Config, Finding, SourceModule, call_name
+
+RULE = "int32-range"
+
+_GUARDS = ("check_int32_range", "codes_fit_int32")
+#: functions that ARE the implementation or the guard — exempt
+_IMPL = ("int32_cumsum",) + _GUARDS
+
+
+def _int32_cumsum_call(node: ast.Call) -> bool:
+    name = call_name(node)
+    last = name.rsplit(".", 1)[-1] if name else ""
+    if last == "int32_cumsum":
+        return True
+    if last in ("cumsum", "cumulative_sum"):
+        for kw in node.keywords:
+            if kw.arg == "dtype" and "int32" in ast.unparse(kw.value):
+                return True
+    return False
+
+
+def check(module: SourceModule, config: Config) -> List[Finding]:
+    findings: List[Finding] = []
+    for node in ast.walk(module.tree):
+        if not (isinstance(node, ast.Call) and _int32_cumsum_call(node)):
+            continue
+        fn = module.enclosing_function(node)
+        if fn is not None and fn.name in _IMPL:
+            continue
+        scope = fn if fn is not None else module.tree
+        has_guard = any(
+            isinstance(sub, ast.Call)
+            and call_name(sub).rsplit(".", 1)[-1] in _GUARDS
+            for sub in ast.walk(scope))
+        if has_guard:
+            continue
+        where = f"`{fn.name}`" if fn is not None else "module scope"
+        findings.append(Finding(
+            RULE, module.relpath, node.lineno,
+            f"int32 cumsum in {where} with no reachable "
+            f"check_int32_range/codes_fit_int32 guard — overflow wraps "
+            f"silently; add the guard or suppress with the boundedness "
+            f"argument"))
+    return findings

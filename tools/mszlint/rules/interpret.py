@@ -1,0 +1,61 @@
+"""interpret-policy: no literal ``interpret=True/False`` outside
+``default_interpret`` (DESIGN.md §10).
+
+The Pallas interpret decision is platform policy, centralized in
+``kernels.extrema.default_interpret`` (auto-detect + the
+``MSZ_PALLAS_INTERPRET`` override). A literal flag hard-wires one
+platform's answer into a call site — the PR 7 calibration bug was this
+exact shape: a cache key missing the interpret dimension because a
+literal had frozen it. The rule flags
+
+* ``interpret=True`` / ``interpret=False`` keyword literals in any
+  call (``pl.pallas_call`` sites and wrappers alike), and
+* ``interpret: bool = True/False`` literal defaults in function
+  signatures (``interpret=None`` -> resolve via ``default_interpret()``
+  is the sanctioned idiom).
+
+Tests asserting lowered-vs-interpret bitwise identity legitimately pin
+the flag — they suppress inline with that reason (the rule's default
+path config also leaves ``tests/`` out).
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from ..engine import Config, Finding, SourceModule
+
+RULE = "interpret-policy"
+
+
+def check(module: SourceModule, config: Config) -> List[Finding]:
+    findings: List[Finding] = []
+    for node in ast.walk(module.tree):
+        if isinstance(node, ast.Call):
+            for kw in node.keywords:
+                if (kw.arg == "interpret"
+                        and isinstance(kw.value, ast.Constant)
+                        and isinstance(kw.value.value, bool)):
+                    findings.append(Finding(
+                        RULE, module.relpath, kw.value.lineno,
+                        f"literal interpret={kw.value.value} hard-wires "
+                        f"one platform's Pallas mode — route through "
+                        f"default_interpret() (PR 7 cache-key bug class)"))
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if node.name == "default_interpret":
+                continue
+            args = node.args
+            all_args = args.posonlyargs + args.args + args.kwonlyargs
+            defaults = ([None] * (len(args.posonlyargs + args.args)
+                                  - len(args.defaults))
+                        + list(args.defaults) + list(args.kw_defaults))
+            for arg, default in zip(all_args, defaults):
+                if (arg.arg == "interpret" and default is not None
+                        and isinstance(default, ast.Constant)
+                        and isinstance(default.value, bool)):
+                    findings.append(Finding(
+                        RULE, module.relpath, arg.lineno,
+                        f"signature default interpret={default.value} — "
+                        f"default to None and resolve via "
+                        f"default_interpret()"))
+    return findings

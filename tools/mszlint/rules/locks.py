@@ -1,0 +1,155 @@
+"""lock-guard: writes to ``# guarded-by: <lock>`` attributes must sit
+lexically inside ``with <lock>:`` (the PR 7 race class, DESIGN.md §10).
+
+Annotation convention — the comment goes where the attribute is
+*declared* (same line or the line above)::
+
+    self._pending = {}           # guarded-by: self._lock
+    _cache = {}                  # guarded-by: _lock      (module level)
+
+Every later write (``=``, ``+=``, ...) to an annotated attribute is
+verified to be lexically inside a ``with`` statement over the named
+lock expression. Two lexical escapes exist:
+
+* writes inside the function containing the declaration are exempt
+  (``__init__`` publishes the object before any concurrency);
+* a function whose ``def`` line carries ``# guarded-by: <lock>`` is
+  exempt for that lock — the documented "caller must hold" convention
+  for helpers invoked with the lock already taken.
+
+The check is lexical, not an escape analysis: it catches the PR 7 bug
+shape (a stats counter bumped outside the critical section) while
+staying zero-false-positive enough to run on every push.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, List, Optional, Set, Tuple
+
+from ..engine import Config, Finding, SourceModule
+
+RULE = "lock-guard"
+
+_ANNOT_RE = re.compile(r"#\s*guarded-by:\s*([A-Za-z_][\w.]*)")
+
+
+def _assign_targets(node: ast.AST) -> List[ast.AST]:
+    if isinstance(node, ast.Assign):
+        return list(node.targets)
+    if isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+        return [node.target]
+    return []
+
+
+def _attr_key(target: ast.AST, in_class: Optional[str]
+              ) -> Optional[Tuple[str, str]]:
+    """(scope, name) of a guarded-able target: ``self.X`` inside a class
+    -> (class, X); a bare module-level name -> ("", X)."""
+    if (isinstance(target, ast.Attribute)
+            and isinstance(target.value, ast.Name)
+            and target.value.id == "self" and in_class):
+        return (in_class, target.attr)
+    if isinstance(target, ast.Name) and in_class is None:
+        return ("", target.id)
+    return None
+
+
+def _enclosing_class(module: SourceModule, node: ast.AST) -> Optional[str]:
+    for anc in module.ancestors(node):
+        if isinstance(anc, ast.ClassDef):
+            return anc.name
+        if isinstance(anc, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+    return None
+
+
+def _module_level(module: SourceModule, node: ast.AST) -> bool:
+    return not any(isinstance(a, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.ClassDef))
+                   for a in module.ancestors(node))
+
+
+def _lock_of_with(item: ast.withitem) -> str:
+    try:
+        return ast.unparse(item.context_expr).strip()
+    except Exception:      # pragma: no cover - unparse is total on 3.9+
+        return ""
+
+
+def check(module: SourceModule, config: Config) -> List[Finding]:
+    # pass 1: collect annotations -> {(scope, attr): (lock, decl_fn)}
+    annot_lines = {}
+    for lineno in range(1, len(module.lines) + 1):
+        m = _ANNOT_RE.search(module.line_text(lineno))
+        if m:
+            annot_lines[lineno] = m.group(1)
+
+    guarded: Dict[Tuple[str, str], str] = {}
+    decl_fn: Dict[Tuple[str, str], Optional[ast.AST]] = {}
+    fn_holds: Dict[ast.AST, Set[str]] = {}
+    def_lines: Set[int] = set()
+    for node in ast.walk(module.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            def_lines.add(node.lineno)
+            lock = annot_lines.get(node.lineno)
+            if lock:       # def-line annotation: caller must hold <lock>
+                fn_holds.setdefault(node, set()).add(lock)
+    for node in ast.walk(module.tree):
+        for target in _assign_targets(node):
+            # a def-line annotation marks the function, not the first
+            # statement of its body, as lock-related
+            lock = (annot_lines.get(node.lineno)
+                    if node.lineno not in def_lines else None)
+            if not lock and (node.lineno - 1) not in def_lines:
+                lock = annot_lines.get(node.lineno - 1)
+            if not lock:
+                continue
+            in_class = _enclosing_class(module, node)
+            if in_class is None and not _module_level(module, node):
+                continue
+            key = _attr_key(target, in_class)
+            if key and key not in guarded:      # first annotation wins
+                guarded[key] = lock
+                decl_fn[key] = module.enclosing_function(node)
+
+    if not guarded:
+        return []
+
+    # pass 2: verify every write to a guarded attribute
+    findings: List[Finding] = []
+    for node in ast.walk(module.tree):
+        targets = _assign_targets(node)
+        if not targets:
+            continue
+        for target in targets:
+            in_class = _enclosing_class(module, node)
+            key = _attr_key(target, in_class)
+            if key is None and isinstance(target, ast.Name):
+                # function-body write to an annotated module global
+                if ("", target.id) in guarded and not _module_level(
+                        module, node):
+                    key = ("", target.id)
+            if key is None or key not in guarded:
+                continue
+            lock = guarded[key]
+            fn = module.enclosing_function(node)
+            if fn is not None and fn is decl_fn[key]:
+                continue                     # the declaring function
+            if fn is None and _module_level(module, node):
+                continue                     # module import time
+            if fn is not None and lock in fn_holds.get(fn, set()):
+                continue                     # documented caller-holds fn
+            held = any(
+                isinstance(anc, ast.With)
+                and any(_lock_of_with(it) == lock for it in anc.items)
+                for anc in module.ancestors(node))
+            if held:
+                continue
+            name = f"{key[0]}.{key[1]}" if key[0] else key[1]
+            findings.append(Finding(
+                RULE, module.relpath, node.lineno,
+                f"write to `{name}` (guarded-by: {lock}) outside "
+                f"`with {lock}:` — PR 7 race class; take the lock, or "
+                f"annotate the def line if the caller must hold it"))
+    return findings

@@ -1,0 +1,64 @@
+"""scatter-discipline: no fancy-index ``+=``/``-=`` on arrays (the
+PR 4 bug class, DESIGN.md §10).
+
+``a[idx] += v`` with an array index is a buffered numpy gather-modify-
+scatter: duplicate entries in ``idx`` apply ONCE, silently dropping the
+rest. PR 4 lost accumulated edit deltas exactly this way. The
+deterministic spellings are ``np.add.at(a, idx, v)`` (host) and
+``a.at[idx].add(v)`` (jax).
+
+The rule flags augmented add/sub assignment into a subscript whose
+index is an array-like expression (a name, call, subscript, or
+comparison). Scalar subscripts — constants, attributes, arithmetic on
+them, loop scalars like ``a[i] += v`` — are fine: a scalar index cannot
+carry duplicates. Sites whose index is unique by construction keep the
+fast ``+=`` with an inline suppression stating the uniqueness argument.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from ..engine import Config, Finding, SourceModule
+
+RULE = "scatter-discipline"
+
+#: index node kinds that can hold many (possibly duplicate) positions
+_ARRAY_INDEX = (ast.Name, ast.Call, ast.Subscript, ast.Compare,
+                ast.ListComp, ast.List)
+
+
+def _scalarish(node: ast.AST) -> bool:
+    """Index expressions that denote one position (or a plain slice)."""
+    if isinstance(node, (ast.Constant, ast.Attribute)):
+        return True
+    if isinstance(node, ast.Slice):
+        return True
+    if isinstance(node, ast.UnaryOp):
+        return _scalarish(node.operand)
+    if isinstance(node, ast.BinOp):
+        return _scalarish(node.left) and _scalarish(node.right)
+    if isinstance(node, ast.Tuple):
+        return all(_scalarish(e) for e in node.elts)
+    return False
+
+
+def check(module: SourceModule, config: Config) -> List[Finding]:
+    findings: List[Finding] = []
+    for node in ast.walk(module.tree):
+        if not (isinstance(node, ast.AugAssign)
+                and isinstance(node.op, (ast.Add, ast.Sub))
+                and isinstance(node.target, ast.Subscript)):
+            continue
+        index = node.target.slice
+        if _scalarish(index):
+            continue
+        if not isinstance(index, _ARRAY_INDEX):
+            continue
+        op = "+=" if isinstance(node.op, ast.Add) else "-="
+        findings.append(Finding(
+            RULE, module.relpath, node.lineno,
+            f"fancy-index `{op}` drops duplicate indices (PR 4 bug "
+            f"class) — use `np.add.at`/`.at[].add`, or suppress with "
+            f"the uniqueness argument"))
+    return findings

@@ -1,0 +1,74 @@
+"""sentinel-dtype: ``jnp.inf`` sentinels in kernels must carry the
+field dtype (the PR 1 bug class, DESIGN.md §10).
+
+An untyped ``jnp.inf``/``np.inf`` literal is float64 (weak float32
+under default jax config) — mixed into an f32/bf16 stencil it silently
+promotes, and in the PR 1 incident the ±inf padding sentinel compared
+unequal to the field's own cast sentinel, corrupting boundary extrema
+classification. The fix idiom is an explicit cast at the use site::
+
+    jnp.asarray(-jnp.inf, slabs.dtype)          # ok
+    jnp.full_like(m, -jnp.inf)                  # ok: dtype from m
+    jnp.full(shape, jnp.inf, dtype)             # ok: explicit dtype
+    s = jnp.where(mask, s, -jnp.inf)            # FLAGGED
+
+The rule flags every ``inf`` attribute of a numpy/jnp module unless a
+dtype-carrying constructor encloses it within the same expression
+(walking up through unary minus, ternaries, and tuple packing).
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from ..engine import Config, Finding, SourceModule, call_name
+
+RULE = "sentinel-dtype"
+
+#: constructors that give the sentinel an explicit element type
+_TYPED_CTORS = ("asarray", "array", "full", "full_like", "astype",
+                "float32", "float64", "bfloat16", "float16")
+#: ast nodes the sentinel may sit under while still belonging to the
+#: same constructor expression
+_TRANSPARENT = (ast.UnaryOp, ast.IfExp, ast.Tuple, ast.List)
+
+
+def _typed_call(node: ast.Call) -> bool:
+    name = call_name(node)
+    last = name.rsplit(".", 1)[-1] if name else ""
+    if last not in _TYPED_CTORS:
+        return False
+    if last in ("asarray", "array"):
+        # dtype must actually be given: 2nd positional or dtype= kw
+        return len(node.args) >= 2 or any(
+            kw.arg == "dtype" for kw in node.keywords)
+    if last == "full":
+        return len(node.args) >= 3 or any(
+            kw.arg == "dtype" for kw in node.keywords)
+    return True    # full_like/astype/float32(...) carry a dtype inherently
+
+
+def check(module: SourceModule, config: Config) -> List[Finding]:
+    findings: List[Finding] = []
+    for node in ast.walk(module.tree):
+        if not (isinstance(node, ast.Attribute) and node.attr == "inf"):
+            continue
+        cur: ast.AST = node
+        typed = False
+        for anc in module.ancestors(node):
+            if isinstance(anc, ast.Call) and _typed_call(anc):
+                typed = True
+                break
+            if isinstance(anc, _TRANSPARENT):
+                cur = anc
+                continue
+            if isinstance(anc, ast.Call) and cur in anc.args:
+                break      # consumed untyped by some other call
+            break
+        if not typed:
+            findings.append(Finding(
+                RULE, module.relpath, node.lineno,
+                "untyped inf sentinel — cast to the field dtype "
+                "(`jnp.asarray(-jnp.inf, x.dtype)` / `jnp.full_like`), "
+                "or an f32 field silently promotes (PR 1 bug class)"))
+    return findings

@@ -1,0 +1,134 @@
+"""transfer-discipline: device-stage code crosses host<->device only
+through the audited explicit seams (DESIGN.md §4–§5, §10).
+
+The device paths contract ONE h2d and ONE d2h per call, every crossing
+routed through ``pipeline._h2d``/``_d2h`` (explicit ``jax.device_put``/
+``device_get``, counted by the test transfer hook, permitted by
+``debug.no_transfers()``). The bug class is the *implicit* sync —
+``np.asarray(device_val)``, ``float(device_scalar)``, ``.item()`` — that
+silently serializes the dispatch stream and breaks the contract without
+failing any test.
+
+Static typing can't tell a traced value from a host one, so the rule is
+a choke point, not an inference engine: inside the audited device-stage
+functions (``Config.transfer_check_functions``) EVERY conversion call is
+banned unless it is visibly explicit. A conversion passes when
+
+* it wraps, or is wrapped by, an allow-listed explicit-transfer call
+  (``_h2d``/``_d2h``/``jax.device_put``/``jax.device_get``), or
+* its argument is host-by-construction: a literal, ``len(...)``,
+  ``time.perf_counter()``, or a ``.size``/``.nbytes``/``.ndim``/
+  ``.shape`` access, or
+* the enclosing function is jit-compiled (a decorator mentioning
+  ``jit``): inside a trace these calls run on static host values —
+  a tracer would raise ``TracerConversionError`` loudly on its own.
+
+Anything else needs an inline suppression stating why the value is
+host-resident — which is exactly the audit trail the contract wants.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from ..engine import (Config, Finding, SourceModule, call_name,
+                      dotted_name, name_matches)
+
+RULE = "transfer-discipline"
+
+#: conversion callees that implicitly sync a traced argument
+_CONVERSIONS = ("asarray", "ascontiguousarray", "array")
+_BUILTINS = ("float", "int", "bool")
+_HOST_ATTRS = ("size", "nbytes", "ndim", "shape", "dtype")
+_HOST_CALLS = ("len", "perf_counter", "str", "tuple", "range", "repr")
+
+
+def _is_jitted(fn: ast.AST) -> bool:
+    """Whether a function def is trace-context: a jit decorator
+    (``@jax.jit``, ``@functools.partial(jax.jit, ...)``, ``@jit``...)
+    or a Pallas ``@pl.when(...)`` kernel closure — both run only under
+    trace, where conversions act on static host values."""
+    if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+        return False
+    for dec in fn.decorator_list:
+        for node in ast.walk(dec):
+            name = dotted_name(node) if isinstance(
+                node, (ast.Name, ast.Attribute)) else ""
+            if name.rsplit(".", 1)[-1] in ("jit", "pjit", "when"):
+                return True
+    return False
+
+
+def _host_expr(node: ast.AST) -> bool:
+    """Conservatively host-by-construction expressions."""
+    if isinstance(node, ast.Constant):
+        return True
+    if isinstance(node, ast.Attribute) and node.attr in _HOST_ATTRS:
+        return True
+    if isinstance(node, ast.Subscript):
+        return _host_expr(node.value)
+    if isinstance(node, ast.Call):
+        name = call_name(node)
+        if name_matches(name, _HOST_CALLS):
+            return True
+    if isinstance(node, ast.BinOp):
+        return _host_expr(node.left) and _host_expr(node.right)
+    if isinstance(node, ast.UnaryOp):
+        return _host_expr(node.operand)
+    return False
+
+
+def _conversion_call(node: ast.Call) -> str:
+    """The banned conversion this call performs, or ''."""
+    name = call_name(node)
+    if not name:
+        return ""
+    last = name.rsplit(".", 1)[-1]
+    if last in _CONVERSIONS and "." in name:      # np.asarray, jnp.array...
+        return name
+    if name in _BUILTINS and len(node.args) >= 1:  # float(x), int(x), bool(x)
+        return name
+    if last == "item" and not node.args:           # x.item()
+        return name or "item"
+    return ""
+
+
+def check(module: SourceModule, config: Config) -> List[Finding]:
+    checked = config.checked_functions(module.relpath)
+    if checked is None:
+        return []
+    allow = config.transfer_allow_calls
+    findings: List[Finding] = []
+    for node in ast.walk(module.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        conv = _conversion_call(node)
+        if not conv:
+            continue
+        fn = module.enclosing_function(node)
+        if fn is None:
+            continue
+        if checked != ("*",) and fn.name not in checked:
+            continue
+        if _is_jitted(fn):
+            continue
+        # wrapped by an explicit seam: _h2d(np.asarray(...))
+        if any(isinstance(anc, ast.Call)
+               and name_matches(call_name(anc), allow)
+               for anc in module.ancestors(node)):
+            continue
+        # wraps an explicit seam: int(_d2h(...))
+        args = list(node.args) + [kw.value for kw in node.keywords]
+        if any(isinstance(sub, ast.Call)
+               and name_matches(call_name(sub), allow)
+               for a in args for sub in ast.walk(a)):
+            continue
+        if args and all(_host_expr(a) for a in args[:1]):
+            continue
+        findings.append(Finding(
+            RULE, module.relpath, node.lineno,
+            f"implicit host<->device conversion `{conv}(...)` in audited "
+            f"device-stage function `{fn.name}` — route through the "
+            f"explicit _h2d/_d2h seams (or suppress with the reason the "
+            f"value is host-resident)"))
+    return findings
