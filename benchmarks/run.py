@@ -22,8 +22,8 @@ def main() -> None:
 
     from . import (fig1_label_distortion, table1_components, table2_overhead,
                    table3_decompress, table4_stream, table5_fixloop,
-                   table6_entropy, fig7_fixed_bound, fig8_fixed_bitrate,
-                   fig9_scaling, fig11_convergence)
+                   table6_entropy, table7_preserve, fig7_fixed_bound,
+                   fig8_fixed_bitrate, fig9_scaling, fig11_convergence)
     modules = {
         "fig1": fig1_label_distortion,
         "table1": table1_components,
@@ -32,6 +32,7 @@ def main() -> None:
         "table4": table4_stream,
         "table5": table5_fixloop,   # also writes BENCH_fixloop.json
         "table6": table6_entropy,   # also writes BENCH_entropy.json
+        "table7": table7_preserve,  # also writes BENCH_preserve.json
         "fig7": fig7_fixed_bound,
         "fig8": fig8_fixed_bitrate,
         "fig9": fig9_scaling,

@@ -1,0 +1,140 @@
+"""Table 7 (beyond-paper): codec-agnostic preservation — the MSz
+correction cost per base codec (DESIGN.md §11).
+
+The PreservingCodec seam promises that edit derivation is independent of
+the base compressor; this table quantifies what each codec actually PAYS
+for topology preservation on the same fields:
+
+* edit count / edit bytes — how much correction each codec's artifacts
+  need (zfplike's block transform reconstructs smoother fields and
+  historically needs ~10x FEWER edit bytes than szlike's Lorenzo
+  predictor at the same bound);
+* bit-rate overhead — edit bytes relative to the base payload, the
+  price of exactness on the wire;
+* fix iterations and wall time of the correction stage.
+
+Every timed artifact is verified (``verify_preservation`` on the
+decompressed field — the clock never runs on unverified work). Results
+land in ``BENCH_preserve.json`` plus the usual CSV rows; the CI guard
+catches a zfplike edit-stream regression (> ``MAX_EDIT_RATIO``x the
+szlike edit bytes on the same field — generous: it sits near 0.1-0.2x
+today, so tripping it means the block codec's bound accounting broke).
+
+  PYTHONPATH=src python -m benchmarks.table7_preserve --smoke --check-regression
+  PYTHONPATH=src python -m benchmarks.run --only table7
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+from typing import Dict, List
+
+import numpy as np
+
+from .common import emit
+
+OUT_JSON = "BENCH_preserve.json"
+#: CI guard: zfplike artifacts may carry at most this factor of the
+#: szlike edit bytes on the benchmarked fields
+MAX_EDIT_RATIO = 2.0
+CODECS = ("szlike", "zfplike")
+
+
+def _median_s(fn, reps: int = 3) -> float:
+    """Median wall seconds over ``reps`` calls after one warm-up."""
+    fn()
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return sorted(ts)[len(ts) // 2]
+
+
+def bench_shape(shape, xi_rel: float = 1e-3) -> Dict[str, object]:
+    """Both codecs through the preserving pipeline on one field."""
+    from repro.compress import codec as edit_codec
+    from repro.compress import pipeline
+    from repro.core.driver import verify_preservation
+    from repro.data import synthetic_field
+
+    f = synthetic_field("nyx", shape=shape, seed=11).astype(np.float32)
+    xi = xi_rel * float(np.ptp(f))
+    tag = "x".join(map(str, shape))
+
+    per_codec: Dict[str, Dict[str, object]] = {}
+    for name in CODECS:
+        def enc(name=name):
+            return pipeline.compress_preserving_mss(f, xi, codec=name)
+        art = enc()
+        t_total = _median_s(enc)
+        g = pipeline.decompress_artifact(art)
+        v = verify_preservation(f, g, xi)
+        assert v["mss_preserved"] and v["bound_ok"], (name, tag, v)
+        idx, _ = edit_codec.decode_edits(art.edit_payload)
+        edit_b = len(art.edit_payload)
+        base_b = len(art.base_payload)
+        per_codec[name] = dict(
+            edit_count=int(idx.size),
+            edit_ratio=round(art.edit_ratio, 6),
+            edit_bytes=edit_b,
+            base_bytes=base_b,
+            bitrate_overhead=round(edit_b / max(base_b, 1), 4),
+            obr_bits=round(pipeline.overall_bit_rate(f, art), 4),
+            fix_iters=art.fix_iters,
+            t_fix_s=round(art.t_fix, 6),
+            t_total_s=round(t_total, 6),
+        )
+        emit(f"table7/compress/{name}/{tag}", t_total * 1e6,
+             f"edits={idx.size} edit_B={edit_b} "
+             f"overhead={per_codec[name]['bitrate_overhead']:.3f} "
+             f"iters={art.fix_iters}")
+
+    ratio = (per_codec["zfplike"]["edit_bytes"]
+             / max(per_codec["szlike"]["edit_bytes"], 1))
+    emit(f"table7/edit_ratio_zfp_vs_sz/{tag}", 0.0, f"ratio={ratio:.3f}")
+    return dict(shape=list(shape), xi=xi, codecs=per_codec,
+                edit_bytes_zfp_vs_sz=round(ratio, 4))
+
+
+def run(quick: bool = True, check_regression: bool = False,
+        out: str = OUT_JSON) -> Dict[str, object]:
+    """The shape sweep; writes ``out`` (default BENCH_preserve.json)
+    and, with ``check_regression``, raises when a zfplike edit stream
+    exceeds ``MAX_EDIT_RATIO``x its szlike twin."""
+    import jax
+
+    shapes = [(16, 16, 16), (24, 20, 16)] if quick else \
+        [(64, 64, 64), (128, 64, 64), (96, 96, 96)]
+    fields: List[Dict[str, object]] = [bench_shape(s) for s in shapes]
+    doc = dict(schema="msz-bench-preserve/1", quick=bool(quick),
+               jax_backend=jax.default_backend(),
+               max_edit_ratio=MAX_EDIT_RATIO,
+               fields=fields)
+    Path(out).write_text(json.dumps(doc, indent=2) + "\n")
+    if check_regression:
+        worst = max(f["edit_bytes_zfp_vs_sz"] for f in fields)
+        if worst > MAX_EDIT_RATIO:
+            raise SystemExit(
+                f"regression: zfplike edit stream is {worst:.2f}x szlike "
+                f"(> {MAX_EDIT_RATIO}x guard); see {out}")
+    return doc
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny fields, the CI leg (default)")
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale shapes")
+    ap.add_argument("--check-regression", action="store_true",
+                    help="fail when zfplike edit streams exceed "
+                         f"{MAX_EDIT_RATIO}x szlike")
+    ap.add_argument("--out", default=OUT_JSON)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(quick=not args.full, check_regression=args.check_regression,
+        out=args.out)

@@ -9,27 +9,40 @@ on the read side. Host-only byte codecs remain available
 (``device_path=False`` / ``decompress_artifact``) and produce
 byte-identical artifacts. For streaming/batched serving see the
 ``CompressStream`` section below and ``repro.serve.compression``.
+
+Correction is codec-agnostic (DESIGN.md §11): pass ``--codec zfplike``
+to run the same pipeline over the ZFP-like base instead.
 """
+import argparse
+
 import numpy as np
 
-from repro.compress import (compress_preserving_mss,
+from repro.compress import (available_preserving_codecs,
+                            compress_preserving_mss,
                             decompress_preserving_mss,
                             overall_compression_ratio)
 from repro.core import verify_preservation
 from repro.data import synthetic_field
 
+parser = argparse.ArgumentParser(description=__doc__)
+parser.add_argument("--codec", default="szlike",
+                    choices=available_preserving_codecs(),
+                    help="base codec the MSz edits correct (default: szlike)")
+CODEC = parser.parse_args().codec
+
 # a cosmology-like 3D scalar field (stands in for the paper's Nyx data)
 f = synthetic_field("nyx", shape=(32, 32, 32))
 xi = 1e-3 * float(np.ptp(f))          # absolute error bound
 
-# compress with the SZ-like base compressor + MSz edits (paper Fig. 3);
+# compress with the chosen base compressor + MSz edits (paper Fig. 3);
 # the fix loop dispatches to the pallas stencil backend (auto), falling
 # back to the jnp reference stencils for unsupported inputs, and the
 # whole stage runs device-resident when its preconditions hold
-art = compress_preserving_mss(f, xi, base="szlike")
+art = compress_preserving_mss(f, xi, codec=CODEC)
 g = decompress_preserving_mss(art)    # the device-resident read path
 
 report = verify_preservation(f, g, xi)
+print(f"base codec: {art.base} (payload magic {art.base_magic})")
 print(f"stencil backend: {art.backend}")
 print(f"compression ratio (incl. edits): {overall_compression_ratio(f, art):.2f}x")
 print(f"edit ratio: {art.edit_ratio:.4%} of vertices")
@@ -42,7 +55,7 @@ assert report["mss_preserved"] and report["bound_ok"]
 from repro.compress import compress_preserving_mss_batch, decompress_artifact
 series = [synthetic_field("nyx", shape=(16, 16, 16), seed=s) for s in range(4)]
 xis = [1e-3 * float(np.ptp(fi)) for fi in series]
-arts = compress_preserving_mss_batch(series, xis)
+arts = compress_preserving_mss_batch(series, xis, codec=CODEC)
 for t, (fi, xi_i, a) in enumerate(zip(series, xis, arts)):
     rep = verify_preservation(fi, decompress_artifact(a), xi_i)
     assert rep["mss_preserved"] and rep["bound_ok"]
@@ -53,7 +66,9 @@ print(f"batch of {len(arts)} timesteps: MSS preserved on every member")
 # artifact byte-identical to its one-shot counterpart
 from repro.compress import CompressStream
 with CompressStream(window=4, max_batch=4) as cs:
-    stream_arts = cs.map(series, xis)
+    futs = [cs.submit(fi, xi_i, base=CODEC)
+            for fi, xi_i in zip(series, xis)]
+    stream_arts = [fut.result() for fut in futs]
     occupancy = cs.stats()["batch_occupancy"]
 assert all(sa.base_payload == a.base_payload
            and sa.edit_payload == a.edit_payload

@@ -6,6 +6,10 @@ from .szlike import (check_int32_range, effective_step, sz_compress,
 from .zfplike import zfp_compress, zfp_decompress, zfp_roundtrip
 from .codec import (encode_edits, decode_edits, decode_edits_batch,
                     lossless_bytes, gzip_like, zstd_like)
+from .preserve import (PreservingCodec, register_preserving_codec,
+                       get_preserving_codec, available_preserving_codecs,
+                       payload_codec, payload_magic, check_artifact,
+                       decode_payload, resolve_edit_dtype, exact_edit_dtype)
 from .pipeline import (CompressedArtifact, compress_preserving_mss,
                        compress_preserving_mss_batch, decompress_artifact,
                        decompress_artifact_batch, decompress_preserving_mss,
@@ -21,6 +25,10 @@ __all__ = [
     "zfp_compress", "zfp_decompress", "zfp_roundtrip",
     "encode_edits", "decode_edits", "decode_edits_batch",
     "lossless_bytes", "gzip_like", "zstd_like",
+    "PreservingCodec", "register_preserving_codec", "get_preserving_codec",
+    "available_preserving_codecs", "payload_codec", "payload_magic",
+    "check_artifact", "decode_payload", "resolve_edit_dtype",
+    "exact_edit_dtype",
     "CompressedArtifact", "compress_preserving_mss",
     "compress_preserving_mss_batch", "decompress_artifact",
     "decompress_artifact_batch", "decompress_preserving_mss",

@@ -4,8 +4,8 @@ Each edit is a (vertex index, float value) pair. Indices are sorted
 ascending and delta-encoded (the paper's observation: edits form
 'sparsely distributed yet continuous patches', so deltas are tiny and
 RLE/varint-friendly), varint-packed, then DEFLATE'd. Values are stored as
-f32 (or bf16 in the bound-tight beyond-paper mode) and DEFLATE'd
-separately. DEFLATE = LZ77 + Huffman, i.e. the paper's Huffman+GZIP stage.
+f32, f64 (the exact dtype for f64 fields), or bf16 (the bound-tight
+beyond-paper mode) and DEFLATE'd separately. DEFLATE = LZ77 + Huffman, i.e. the paper's Huffman+GZIP stage.
 """
 from __future__ import annotations
 
@@ -113,7 +113,9 @@ def _f32_to_bf16(val: np.ndarray) -> np.ndarray:
 
 
 def encode_edits(idx: np.ndarray, val: np.ndarray, value_dtype="f4") -> bytes:
-    """Pack sorted edit indices + values. value_dtype: 'f4' or 'bf16'.
+    """Pack sorted edit indices + values. value_dtype: 'f4', 'f8', or
+    'bf16' ('f8' stores full f64 deltas — the exact dtype for f64
+    fields, where an f32-rounded delta could perturb a tie-break).
 
     Unsorted indices are sorted (order carries no information); DUPLICATE
     indices are a hard error. One vertex never receives two edits — the
@@ -122,8 +124,12 @@ def encode_edits(idx: np.ndarray, val: np.ndarray, value_dtype="f4") -> bytes:
     decompression scatter would otherwise mask it (re-sorting used to
     swallow duplicates silently; ``apply_edits`` would then drop or
     double-apply them depending on the path)."""
+    if value_dtype not in ("f4", "f8", "bf16"):
+        raise ValueError(
+            f"unknown edit value_dtype {value_dtype!r}; expected "
+            "'f4', 'f8', or 'bf16'")
     idx = np.asarray(idx, np.int64)
-    val = np.asarray(val, np.float32)
+    val = np.asarray(val, np.float64 if value_dtype == "f8" else np.float32)
     if idx.size != val.size:
         raise ValueError("idx/val length mismatch")
     if idx.size and np.any(np.diff(idx) <= 0):
@@ -140,6 +146,9 @@ def encode_edits(idx: np.ndarray, val: np.ndarray, value_dtype="f4") -> bytes:
         vb = _f32_to_bf16(val)
         val_stream = zlib.compress(vb.tobytes(), 9)
         dt = 1
+    elif value_dtype == "f8":
+        val_stream = zlib.compress(val.tobytes(), 9)
+        dt = 2
     else:
         val_stream = zlib.compress(val.tobytes(), 9)
         dt = 0
@@ -149,8 +158,9 @@ def encode_edits(idx: np.ndarray, val: np.ndarray, value_dtype="f4") -> bytes:
 
 
 def decode_edits(blob: bytes) -> Tuple[np.ndarray, np.ndarray]:
-    """Inverse of ``encode_edits``: (sorted int64 indices, f32 values)
-    of one edit blob (bf16-coded values widen back to f32).
+    """Inverse of ``encode_edits``: (sorted int64 indices, values) of
+    one edit blob — f32 values for the 'f4'/'bf16' codings (bf16 widens
+    back to f32), f64 for 'f8'.
 
     The header's stream lengths are validated against ``len(blob)``
     before any slice: Python slicing silently clips, so a truncated
@@ -181,12 +191,20 @@ def decode_edits(blob: bytes) -> Tuple[np.ndarray, np.ndarray]:
                 f"expected {2 * n} (bf16 x {n})")
         v16 = np.frombuffer(vals, np.uint16).astype(np.uint32) << 16
         val = v16.view(np.float32)
-    else:
+    elif dt == 2:
+        if len(vals) != 8 * n:
+            raise ValueError(
+                f"edit value stream decodes to {len(vals)} bytes, "
+                f"expected {8 * n} (f64 x {n})")
+        val = np.frombuffer(vals, np.float64)
+    elif dt == 0:
         if len(vals) != 4 * n:
             raise ValueError(
                 f"edit value stream decodes to {len(vals)} bytes, "
                 f"expected {4 * n} (f32 x {n})")
         val = np.frombuffer(vals, np.float32)
+    else:
+        raise ValueError(f"unknown edit value dtype code {dt}")
     return idx, val.copy()
 
 
@@ -246,7 +264,11 @@ def decode_edits_batch(blobs, fill_idx: Optional[int] = None):
     B = len(pairs)
     L = max((i.size for i, _ in pairs), default=0)
     idx_b = np.full((B, L), np.int64(fill_idx), np.int64)
-    val_b = np.zeros((B, L), np.float32)
+    # widest member value dtype wins (f8-coded blobs promote the batch
+    # to f64; the scatter casts to the field dtype member-wise)
+    vdt = np.result_type(np.float32, *(v.dtype for _, v in pairs)) \
+        if pairs else np.dtype(np.float32)
+    val_b = np.zeros((B, L), vdt)
     counts = np.zeros(B, np.int64)
     for i, (idx, val) in enumerate(pairs):
         idx_b[i, :idx.size] = idx

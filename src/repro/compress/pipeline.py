@@ -25,6 +25,12 @@ them (``CompressedArtifact.path``, header version 2).
 ONE vmapped transform and ONE batched fix loop instead of B sequential
 host codec calls.
 
+The base codec is pluggable (``codec="szlike" | "zfplike"``, or any
+codec registered through ``compress.preserve``): edit derivation is
+codec-agnostic (DESIGN.md §11), the artifact records the base codec and
+its payload magic, and the read side negotiates the decoder from the
+magic — retired blob formats are refused, never misdecoded.
+
 The READ side is symmetric (DESIGN.md §5): ``decompress_preserving_mss``
 host-decodes the entropy streams once, then does one h2d of the int32
 residual codes, on-device ``backend.reconstruct`` + edit scatter-add
@@ -38,7 +44,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
-from typing import Callable, Dict, List, Literal, Optional, Sequence, Tuple, Union
+from typing import Callable, List, Literal, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -46,20 +52,17 @@ import numpy as np
 
 from ..core import fixes
 from ..core.backend import BackendLike, resolve_backend
-from ..core.driver import (MszResult, apply_edits, derive_edits,
-                           derive_edits_batch, extract_edits,
-                           verify_preservation)
-from . import codec, szlike, zfplike
+from ..core.driver import apply_edits, extract_edits
+from . import codec, preserve, szlike
+from .preserve import ARTIFACT_VERSION, CompressedArtifact
 
 BaseName = Literal["szlike", "zfplike"]
 DevicePath = Union[bool, Literal["auto"]]
 
-_BASES: Dict[str, Tuple[Callable, Callable]] = {
-    "szlike": (szlike.sz_compress, szlike.sz_decompress),
-    "zfplike": (zfplike.zfp_compress, zfplike.zfp_decompress),
-}
-
-ARTIFACT_VERSION = 3
+# compatibility aliases: the checked edit encoders moved to the
+# codec-agnostic preserve layer (both paths still share them)
+_encode_edits_checked = preserve.encode_edits_checked
+_encode_edits_checked_dev = preserve.encode_edits_checked_dev
 
 
 # test seam: when set, called as hook(direction, nbytes) for every
@@ -86,84 +89,6 @@ def _d2h(x: jnp.ndarray) -> np.ndarray:
     if _transfer_hook is not None:
         _transfer_hook("d2h", x.nbytes)
     return jax.device_get(x)   # mszlint: disable=transfer-discipline — the choke point itself
-
-
-@dataclasses.dataclass
-class CompressedArtifact:
-    base: str
-    base_payload: bytes
-    edit_payload: bytes
-    shape: tuple
-    dtype: str
-    xi: float
-    # bookkeeping for the paper's metrics
-    t_base: float = 0.0          # base compressor seconds (t_comp)
-    t_fix: float = 0.0           # MSz fix seconds (t_fix)
-    edit_ratio: float = 0.0
-    fix_iters: int = 0
-    backend: str = ""            # stencil backend that ran the fix loop
-    # versioned header (v2): which path produced the artifact, and the
-    # device base-transform time separated out of t_base (0.0 host-side)
-    version: int = ARTIFACT_VERSION
-    path: str = "host"           # "host" | "device"
-    t_transform: float = 0.0     # device quantize+Lorenzo+reconstruct secs
-    # v3: which residual entropy codec the base payload carries
-    # (szlike.ENTROPIES; redundant with the blob magic but lets readers
-    # route without touching the byte stream)
-    entropy: str = "deflate"     # "deflate" | "device-pack"
-
-    @property
-    def nbytes(self) -> int:
-        return len(self.base_payload) + len(self.edit_payload)
-
-
-# ---------------------------------------------------------------------------
-# edit encoding (shared by both paths)
-# ---------------------------------------------------------------------------
-
-def _encode_edits_checked(f: np.ndarray, f_hat: np.ndarray, res: MszResult,
-                          xi: float, edit_value_dtype: str) -> bytes:
-    """Edit codec with the lossy-storage safety net (beyond-paper): any
-    non-f4 edit dtype must re-verify exactness and the error bound; fall
-    back to f4 when rounding breaks either."""
-    blob = codec.encode_edits(res.edits_idx, res.edits_val, edit_value_dtype)
-    if edit_value_dtype != "f4":
-        idx2, val2 = codec.decode_edits(blob)
-        g2 = apply_edits(f_hat, idx2, val2)
-        v = verify_preservation(f, g2, xi)
-        if not (v["mss_preserved"] and v["bound_ok"]):
-            blob = codec.encode_edits(res.edits_idx, res.edits_val, "f4")
-    return blob
-
-
-def _encode_edits_checked_dev(fj: jnp.ndarray, f_hat: jnp.ndarray,
-                              idx: np.ndarray, val: np.ndarray, xi: float,
-                              edit_value_dtype: str) -> bytes:
-    """Device-path twin of _encode_edits_checked: the re-verification of a
-    lossy edit dtype runs on DEVICE arrays (f_hat never visits the host),
-    with the same predicate — so both paths make the same f4-fallback
-    decision and stay bitwise identical."""
-    blob = codec.encode_edits(idx, val, edit_value_dtype)
-    if edit_value_dtype != "f4":
-        idx2, val2 = codec.decode_edits(blob)
-        delta2 = (jnp.zeros(f_hat.size, f_hat.dtype).at[idx2].add(val2)
-                  .reshape(f_hat.shape))
-        v = verify_preservation(fj, f_hat + delta2, xi)
-        if not (v["mss_preserved"] and v["bound_ok"]):
-            blob = codec.encode_edits(idx, val, "f4")
-    return blob
-
-
-def _make_artifact(f: np.ndarray, payload: bytes, blob: bytes, xi: float,
-                   base: str, res: MszResult, t_base: float,
-                   t_fix: float) -> CompressedArtifact:
-    return CompressedArtifact(
-        base=base, base_payload=payload, edit_payload=blob,
-        shape=f.shape, dtype=str(f.dtype), xi=xi,
-        t_base=t_base, t_fix=t_fix,
-        edit_ratio=res.edit_ratio, fix_iters=res.iters,
-        backend=res.backend,
-    )
 
 
 # ---------------------------------------------------------------------------
@@ -303,6 +228,7 @@ def _device_compress(f: np.ndarray, xi: float, be, max_iters: int,
         edit_ratio=float(idx.size) / float(f.size),
         fix_iters=int(_d2h(iters)), backend=be.name,
         path="device", t_transform=t1 - t0, entropy=entropy,
+        base_magic=preserve.payload_magic(payload).decode("ascii"),
     )
 
 
@@ -459,6 +385,7 @@ def _encode_batch_member(db: _DeviceBatch, i: int,
         fix_iters=int(db.iters_b[i]), backend=db.backend_name,
         path="device", t_transform=db.t_transform_each,
         entropy=db.entropy,
+        base_magic=preserve.payload_magic(payload).decode("ascii"),
     )
 
 
@@ -548,34 +475,40 @@ def _check_base_entropy(base: str, entropy: str) -> None:
             f"(got base={base!r})")
 
 
-def _host_base_codec(base: str, entropy: str) -> Tuple[Callable, Callable]:
-    """The (compress, decompress) pair of ``base`` with ``entropy``
-    bound in (szlike's compressor takes the codec as a keyword; the
-    decoders dispatch on the blob magic, so no binding needed there)."""
-    comp, decomp = _BASES[base]
+def _host_compressor(base: str, entropy: str) -> Optional[Callable]:
+    """A pre-bound compressor for the host path when ``entropy`` needs
+    binding in (szlike's compressor takes the codec as a keyword), else
+    None — ``preserve.compress_host`` then uses the registered default.
+    The decoders dispatch on the blob magic, so no binding there."""
     if base == "szlike" and entropy != "deflate":
-        comp = functools.partial(comp, entropy=entropy)
-    return comp, decomp
+        return functools.partial(szlike.sz_compress, entropy=entropy)
+    return None
 
 
 def compress_preserving_mss(f: np.ndarray, xi: float, base: BaseName = "szlike",
                             mode: str = "fused",
-                            edit_value_dtype: str = "f4",
+                            edit_value_dtype: str = "auto",
                             max_iters: int = 512,
                             backend: BackendLike = "auto",
                             mesh=None,
                             device_path: DevicePath = "auto",
-                            entropy: str = "deflate"
+                            entropy: str = "deflate",
+                            codec: Optional[str] = None
                             ) -> CompressedArtifact:
-    """``mesh``: route the fix loop through the slab-sharded SPMD backend
-    when the mesh has >= 2 ``data``-axis devices. ``device_path``: run
-    the whole compress stage device-resident ("auto" = whenever the
-    preconditions hold, see module docstring). ``entropy``: the szlike
-    residual codec — "deflate" (host zlib, the compatibility default) or
-    "device-pack" (the chunked-bitplane codec; on the device path it
-    runs on device and the compress stage performs zero host entropy
-    work). Artifacts are byte-for-byte identical across paths, backends,
-    and meshes."""
+    """``codec``: the base compressor's registry name (an alias that
+    overrides ``base`` when given — any codec registered through
+    ``compress.preserve`` qualifies). ``mesh``: route the fix loop
+    through the slab-sharded SPMD backend when the mesh has >= 2
+    ``data``-axis devices. ``device_path``: run the whole compress stage
+    device-resident ("auto" = whenever the preconditions hold, see
+    module docstring; non-szlike bases take the codec-agnostic host
+    path). ``entropy``: the szlike residual codec — "deflate" (host
+    zlib, the compatibility default) or "device-pack" (the chunked-
+    bitplane codec; on the device path it runs on device and the
+    compress stage performs zero host entropy work). Artifacts are
+    byte-for-byte identical across paths, backends, and meshes."""
+    if codec is not None:
+        base = codec
     f = np.asarray(f)
     _check_base_entropy(base, entropy)
     step = _resolve_device_path(device_path, f, xi, base, mode)
@@ -589,19 +522,10 @@ def compress_preserving_mss(f: np.ndarray, xi: float, base: BaseName = "szlike",
                 f"device_path=True but backend {be.name!r} implements no "
                 "transform/reconstruct protocol entry")
 
-    comp, decomp = _host_base_codec(base, entropy)
-    t0 = time.perf_counter()
-    payload = comp(f, xi)
-    f_hat = decomp(payload)
-    t1 = time.perf_counter()
-    res = derive_edits(f, f_hat, xi, mode=mode, max_iters=max_iters,
-                       backend=backend, mesh=mesh)
-    if not res.converged:
-        raise RuntimeError("MSz fix loops did not converge within max_iters")
-    t2 = time.perf_counter()
-
-    blob = _encode_edits_checked(f, f_hat, res, xi, edit_value_dtype)
-    art = _make_artifact(f, payload, blob, xi, base, res, t1 - t0, t2 - t1)
+    art = preserve.compress_host(
+        base, f, xi, compressor=_host_compressor(base, entropy),
+        mode=mode, edit_value_dtype=edit_value_dtype, max_iters=max_iters,
+        backend=backend, mesh=mesh)
     art.entropy = entropy
     return art
 
@@ -610,22 +534,27 @@ def compress_preserving_mss_batch(
         fields: Union[np.ndarray, Sequence[np.ndarray]],
         xi: Union[float, Sequence[float]],
         base: BaseName = "szlike",
-        edit_value_dtype: str = "f4",
+        edit_value_dtype: str = "auto",
         max_iters: int = 512,
         backend: BackendLike = "auto",
         mesh=None,
         device_path: DevicePath = "auto",
-        entropy: str = "deflate") -> List[CompressedArtifact]:
+        entropy: str = "deflate",
+        codec: Optional[str] = None) -> List[CompressedArtifact]:
     """Batch variant of compress_preserving_mss for many same-shape fields.
 
     On the device path the base transform of ALL members runs as one
     vmapped dispatch and the fix loops as one batched while_loop
     (derive_edits_batch's machinery); host-side only the entropy coders
     run per member — and under ``entropy="device-pack"`` even those move
-    on device, leaving pure byte assembly. Each member's artifact is
+    on device, leaving pure byte assembly. Non-szlike bases run their
+    transforms host-side but still share the ONE batched fix loop
+    (``preserve.compress_host_batch``). Each member's artifact is
     bitwise identical to a solo compress_preserving_mss call; t_base /
     t_fix report the batch time split evenly across members.
     """
+    if codec is not None:
+        base = codec
     fields = [np.asarray(fi) for fi in fields]
     _check_base_entropy(base, entropy)
     if not fields:
@@ -658,42 +587,22 @@ def compress_preserving_mss_batch(
                 f"device_path=True but backend {be.name!r} implements no "
                 "transform/reconstruct protocol entry")
 
-    comp, decomp = _host_base_codec(base, entropy)
-    payloads, fhats, t_bases = [], [], []
-    for fi, xi_i in zip(fields, xi_arr):
-        t0 = time.perf_counter()
-        payload = comp(fi, float(xi_i))
-        fhats.append(decomp(payload))
-        t_bases.append(time.perf_counter() - t0)
-        payloads.append(payload)
-
-    t0 = time.perf_counter()
-    results = derive_edits_batch(np.stack(fields), np.stack(fhats), xi_arr,
-                                 max_iters=max_iters, backend=backend,
-                                 mesh=mesh)
-    t_fix_each = (time.perf_counter() - t0) / B
-
-    arts = []
-    for fi, xi_i, payload, f_hat, res, t_base in zip(
-            fields, xi_arr, payloads, fhats, results, t_bases):
-        if not res.converged:
-            raise RuntimeError(
-                "MSz fix loops did not converge within max_iters")
-        blob = _encode_edits_checked(fi, f_hat, res, float(xi_i),
-                                     edit_value_dtype)
-        art = _make_artifact(fi, payload, blob, float(xi_i), base, res,
-                             t_base, t_fix_each)
+    arts = preserve.compress_host_batch(
+        base, fields, xi_arr, compressor=_host_compressor(base, entropy),
+        edit_value_dtype=edit_value_dtype, max_iters=max_iters,
+        backend=backend, mesh=mesh)
+    for art in arts:
         art.entropy = entropy
-        arts.append(art)
     return arts
 
 
 def decompress_artifact(art: CompressedArtifact) -> np.ndarray:
-    """Host-side decompression: byte-codec decode + numpy edit apply.
-    Works for any base/dtype; ``decompress_preserving_mss`` is the
-    production read path (device-resident whenever possible)."""
-    _, decomp = _BASES[art.base]
-    f_hat = decomp(art.base_payload)
+    """Host-side decompression: magic-negotiated base decode
+    (``preserve.decode_payload`` — retired blob formats are refused,
+    never misdecoded) + numpy edit apply. Works for any base/dtype;
+    ``decompress_preserving_mss`` is the production read path
+    (device-resident whenever possible)."""
+    f_hat = preserve.decode_payload(art)
     idx, val = codec.decode_edits(art.edit_payload)
     return apply_edits(f_hat, idx, val)
 

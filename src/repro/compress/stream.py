@@ -581,7 +581,7 @@ class CompressStream(_StreamBase):
 
     def submit(self, field: np.ndarray, xi: float, *,
                base: pipeline.BaseName = "szlike",
-               edit_value_dtype: str = "f4",
+               edit_value_dtype: str = "auto",
                entropy: str = "deflate",
                block: bool = True,
                timeout: Optional[float] = None) -> Future:

@@ -377,6 +377,13 @@ def sz_compress(f: np.ndarray, xi: float, *,
     f = np.asarray(f)
     if f.dtype not in (np.float32, np.float64):
         raise TypeError(f"float field expected, got {f.dtype}")
+    if xi <= 0:
+        # linear-scaling quantization has no lossless mode: step = 2*xi
+        # degenerates and q = round(f/0) is garbage, so fail loudly here
+        # instead of emitting a blob that cannot hold any bound
+        raise ValueError(
+            f"error bound must be positive for the SZ-like codec, got "
+            f"xi={xi!r} (linear-scaling quantization has no lossless mode)")
     step = effective_step(f, xi)
     if f.dtype == np.float32:
         # canonical f32 arithmetic — bitwise-shared with the device path

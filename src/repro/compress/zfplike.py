@@ -26,8 +26,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-_MAGIC = b"ZFJ1"
+# ZFJ2: the header records the field dtype and decompression returns it
+# (f64 fields reconstruct in f64 — no final f32 cast). ZFJ1 blobs record
+# no dtype and always decode to float32, silently losing the precision
+# an f64 bound was derived in — refuse them.
+_MAGIC = b"ZFJ2"
+_MAGIC_OLD = b"ZFJ1"
 _BITS = 26  # fixed-point fraction bits for block-floating-point
+_DTYPES = {0: np.dtype(np.float32), 1: np.dtype(np.float64)}
 
 
 def _fwd_lift_np(x: np.ndarray, axis: int) -> np.ndarray:
@@ -128,21 +134,36 @@ def _unblockify(blocks: np.ndarray, padded_shape, orig_shape) -> np.ndarray:
 def zfp_compress(f: np.ndarray, xi: float) -> bytes:
     """ZFP-like fixed-accuracy compression of a 2D/3D field to one
     blob: 4^d block transform, per-block bit-plane truncation against
-    the error bound ``xi``, then DEFLATE."""
+    the error bound ``xi``, then DEFLATE.
+
+    ``xi = 0`` is permitted (maximum coded precision, b = 0 everywhere)
+    but guaranteed only for fields the block transform round-trips
+    exactly; the per-dtype floor below which the bound is unreachable is
+    ~``amax * 2^-23`` for f32 fields (BFP quantization + the output
+    cast) and ~``amax * 2^-25`` for f64 (the ``_BITS``-bit BFP mantissa
+    alone). The preserving pipeline's derivation re-checks the bound and
+    raises when a blob misses it."""
     f = np.asarray(f)
     if f.ndim not in (2, 3):
         raise ValueError("zfp-like supports 2D/3D fields")
+    if xi < 0:
+        raise ValueError(f"error bound must be non-negative, got xi={xi!r}")
+    dt_codes = {v: k for k, v in _DTYPES.items()}
+    if f.dtype not in dt_codes:
+        raise TypeError(f"float field expected, got {f.dtype}")
+    dt = dt_codes[f.dtype]
     # reserve headroom for the final f32 cast: the cast costs at most half
     # an ulp of the cast value, |f_hat| <= amax + xi, so the cast error is
     # <= (amax + xi) * 2^-24 — the f64 guarantee then holds inclusive of
     # output rounding. (Below xi ~ amax * 2^-23 the bound is unreachable
     # in f32 regardless of headroom: BFP quantization + the cast alone
     # exceed it; the xi*0.5 floor keeps the transform well-posed there.)
+    # f64 output needs no headroom: reconstruction stays in f64 end to end.
     if f.dtype == np.float32 and f.size:
         amax = float(np.max(np.abs(f)))
         xi = max(xi - (amax + xi) * 2.0 ** -24, xi * 0.5)
     if f.size == 0:                  # empty field: header only, no blocks
-        hdr = struct.pack("<4sBdQ", _MAGIC, f.ndim, float(xi), 0)
+        hdr = struct.pack("<4sBBdQ", _MAGIC, f.ndim, dt, float(xi), 0)
         dims = struct.pack(f"<{f.ndim}Q", *f.shape)
         return hdr + dims + struct.pack("<QQ", 0, 0)
     blocks, padded = _blockify(f.astype(np.float64))
@@ -179,24 +200,34 @@ def zfp_compress(f: np.ndarray, xi: float) -> bytes:
     stream = zlib.compress(q.astype(np.int32).tobytes(), 6)
     meta = zlib.compress(
         e.astype(np.int16).tobytes() + b.astype(np.uint8).tobytes(), 6)
-    hdr = struct.pack("<4sBdQ", _MAGIC, f.ndim, float(xi), nb)
+    hdr = struct.pack("<4sBBdQ", _MAGIC, f.ndim, dt, float(xi), nb)
     dims = struct.pack(f"<{f.ndim}Q", *f.shape)
     return (hdr + dims + struct.pack("<QQ", len(meta), len(stream))
             + meta + stream)
 
 
 def zfp_decompress(blob: bytes) -> np.ndarray:
-    """Inverse of ``zfp_compress``: f_hat with max|f - f_hat| <= xi."""
-    magic, ndim, xi, nb = struct.unpack_from("<4sBdQ", blob, 0)
+    """Inverse of ``zfp_compress``: f_hat with max|f - f_hat| <= xi, in
+    the dtype the blob records. Retired ZFJ1 blobs are refused (they
+    carry no dtype and were always decoded as f32) — never misdecoded."""
+    if bytes(blob[:4]) == _MAGIC_OLD:
+        raise ValueError(
+            "refusing retired 'ZFJ1' payload: ZFJ1 blobs record no field "
+            "dtype and always decode to float32; re-compress with the "
+            "current codec")
+    magic, ndim, dt, xi, nb = struct.unpack_from("<4sBBdQ", blob, 0)
     if magic != _MAGIC:
         raise ValueError("not a ZFP-like blob")
-    off = struct.calcsize("<4sBdQ")
+    if dt not in _DTYPES:
+        raise ValueError(f"unknown ZFP-like dtype code {dt}")
+    out_dtype = _DTYPES[dt]
+    off = struct.calcsize("<4sBBdQ")
     shape = struct.unpack_from(f"<{ndim}Q", blob, off)
     off += 8 * ndim
     lm, ls = struct.unpack_from("<QQ", blob, off)
     off += 16
     if nb == 0:                     # empty field: no blocks were coded
-        return np.zeros(shape, np.float32)
+        return np.zeros(shape, out_dtype)
     meta = zlib.decompress(blob[off:off + lm]); off += lm
     stream = zlib.decompress(blob[off:off + ls])
     e = np.frombuffer(meta[:2 * nb], np.int16).astype(np.float64)
@@ -210,7 +241,8 @@ def zfp_decompress(blob: bytes) -> np.ndarray:
     scale = np.exp2(e - _BITS)
     flat = blk.reshape(nb, -1).astype(np.float64) * scale[:, None]
     padded = tuple(s + ((-s) % 4) for s in shape)
-    return _unblockify(flat.reshape((nb,) + bs), padded, shape).astype(np.float32)
+    return _unblockify(flat.reshape((nb,) + bs), padded, shape) \
+        .astype(out_dtype)
 
 
 def zfp_roundtrip(f: np.ndarray, xi: float) -> Tuple[np.ndarray, int]:

@@ -13,7 +13,7 @@ from .fixes import (FieldTopo, field_topology, false_critical_masks,
                     trouble_masks, fused_pass, fused_fix, fused_fix_batch,
                     fused_fix_worklist, paper_fix)
 from .driver import (MszResult, derive_edits, derive_edits_batch, apply_edits,
-                     verify_preservation)
+                     verify_preservation, verify_preservation_batch)
 
 __all__ = [
     "OFFSETS_2D", "OFFSETS_3D", "offsets_for", "n_neighbors", "self_code",
@@ -26,5 +26,5 @@ __all__ = [
     "fused_pass", "fused_fix", "fused_fix_batch", "fused_fix_worklist",
     "paper_fix",
     "MszResult", "derive_edits", "derive_edits_batch", "apply_edits",
-    "verify_preservation",
+    "verify_preservation", "verify_preservation_batch",
 ]

@@ -232,8 +232,17 @@ def apply_edits_device(f_hat: jnp.ndarray, edits_idx, edits_val
 
 
 def verify_preservation(f, g, xi: float) -> dict:
-    """Check both paper constraints: global error bound + exact MSS."""
+    """Check both paper constraints: global error bound + exact MSS.
+
+    Single-field only (2D/3D); a stacked batch would silently verify the
+    wrong thing (labels of the batch-as-one-field), so batched artifacts
+    go through ``verify_preservation_batch``."""
     f = jnp.asarray(f)
+    if f.ndim not in (2, 3):
+        raise ValueError(
+            f"verify_preservation takes one 2D/3D field (got shape "
+            f"{tuple(f.shape)}); stacked batches verify member-by-member "
+            "through verify_preservation_batch")
     g = jnp.asarray(g, f.dtype)
     Mf, mf = mss_labels(f)
     Mg, mg = mss_labels(g)
@@ -249,3 +258,22 @@ def verify_preservation(f, g, xi: float) -> dict:
         mss_preserved=max_label_ok and min_label_ok,
         right_labeled_ratio=right,
     )
+
+
+def verify_preservation_batch(f_b, g_b, xi) -> list:
+    """Member-wise ``verify_preservation`` over stacked batches: ``f_b``
+    and ``g_b`` are (B, *spatial) with 2D/3D members, ``xi`` a scalar or
+    per-member sequence. Returns one verdict dict per member."""
+    f_b = np.asarray(f_b)
+    g_b = np.asarray(g_b)
+    if f_b.ndim not in (3, 4):
+        raise ValueError(
+            f"verify_preservation_batch takes a (B, *spatial) stack of "
+            f"2D/3D fields (got shape {f_b.shape})")
+    if f_b.shape != g_b.shape:
+        raise ValueError(
+            f"batch shapes disagree: f {f_b.shape} vs g {g_b.shape}")
+    B = f_b.shape[0]
+    xi_arr = np.broadcast_to(np.asarray(xi, np.float64), (B,))
+    return [verify_preservation(f_b[i], g_b[i], float(xi_arr[i]))
+            for i in range(B)]

@@ -78,3 +78,64 @@ def extrema_ref(field: np.ndarray):
     up, dn = steepest_dirs_ref(field)
     K = len(offsets_for(field.ndim))
     return up == K, dn == K
+
+
+def apply_edits_ref(f_hat: np.ndarray, idx, val) -> np.ndarray:
+    """Oracle edit application: ``g = f_hat`` with ``g.flat[i] += v`` one
+    edit at a time, each addition performed in the field's own dtype —
+    the bitwise reference for driver.apply_edits and the device scatter.
+    The MSz edit stream addresses each site at most once; a duplicate
+    (or out-of-range) index means a corrupt blob, so both raise."""
+    idx = np.asarray(idx, np.int64).reshape(-1)
+    val = np.asarray(val).reshape(-1)
+    if idx.size != val.size:
+        raise ValueError(
+            f"edit stream length mismatch: {idx.size} indices vs "
+            f"{val.size} values")
+    if idx.size and (idx.min() < 0 or idx.max() >= f_hat.size):
+        raise ValueError(
+            f"edit index out of range for a field of {f_hat.size} sites")
+    if np.unique(idx).size != idx.size:
+        raise ValueError("duplicate edit indices: each site is edited at "
+                         "most once per artifact")
+    g = f_hat.copy()
+    flat = g.reshape(-1)
+    for i, v in zip(idx, val):
+        # mszlint: disable=scatter-discipline -- i is one loop scalar and
+        # the np.unique check above already rejected duplicate indices
+        flat[i] += flat.dtype.type(v)
+    return g
+
+
+def labels_equal_ref(f: np.ndarray, g: np.ndarray) -> bool:
+    """Whether f and g induce the SAME Morse-Smale segmentation, judged
+    entirely by the oracle labeler (no JAX involved)."""
+    Mf, mf = mss_labels_ref(np.asarray(f))
+    Mg, mg = mss_labels_ref(np.asarray(g))
+    return bool(np.array_equal(Mf, Mg) and np.array_equal(mf, mg))
+
+
+def verify_preservation_ref(f: np.ndarray, g: np.ndarray, xi: float) -> dict:
+    """Pure-numpy mirror of driver.verify_preservation: the same verdict
+    dict, computed with the oracle labeler — the single source of truth
+    the conformance suite checks the production verifier against."""
+    f = np.asarray(f)
+    if f.ndim not in (2, 3):
+        raise ValueError(
+            f"verify_preservation_ref takes one 2D/3D field (got shape "
+            f"{f.shape})")
+    g = np.asarray(g, f.dtype)
+    Mf, mf = mss_labels_ref(f)
+    Mg, mg = mss_labels_ref(g)
+    max_label_ok = bool(np.array_equal(Mf, Mg))
+    min_label_ok = bool(np.array_equal(mf, mg))
+    err = float(np.max(np.abs(f.astype(np.float64) - g.astype(np.float64))))
+    right = float(np.mean((Mf == Mg) & (mf == mg)))
+    return dict(
+        bound_ok=err <= xi * (1 + 1e-6),
+        max_abs_err=err,
+        max_labels_ok=max_label_ok,
+        min_labels_ok=min_label_ok,
+        mss_preserved=max_label_ok and min_label_ok,
+        right_labeled_ratio=right,
+    )

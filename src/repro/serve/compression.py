@@ -156,16 +156,22 @@ class CompressionService:
 
     def submit_compress(self, field: np.ndarray, xi: float, *,
                         base: pipeline.BaseName = "szlike",
-                        edit_value_dtype: str = "f4",
-                        entropy: str = "deflate") -> Future:
+                        edit_value_dtype: str = "auto",
+                        entropy: str = "deflate",
+                        codec: Optional[str] = None) -> Future:
         """Queue a field; the Future resolves to its
         ``CompressedArtifact`` (byte-identical to the one-shot call).
         ``xi``, ``base``, and ``entropy`` ("deflate" | "device-pack",
         DESIGN.md §8) are free per request — only same-(shape, dtype,
-        base, entropy) requests share a batch. Device-pack batches do
-        their residual entropy coding on the device, bypassing the host
-        worker pool entirely; ``stats()`` breaks traffic down per codec
-        under ``entropy_codecs``."""
+        base, entropy) requests share a batch. ``codec`` is the
+        pipeline's alias for ``base`` (any name registered through
+        ``compress.preserve``; overrides ``base`` when given — non-szlike
+        codecs batch through the host correction path, DESIGN.md §11).
+        Device-pack batches do their residual entropy coding on the
+        device, bypassing the host worker pool entirely; ``stats()``
+        breaks traffic down per codec under ``entropy_codecs``."""
+        if codec is not None:
+            base = codec
         return self._guard(self._compress.submit, field, xi, base=base,
                            edit_value_dtype=edit_value_dtype,
                            entropy=entropy)
@@ -178,13 +184,14 @@ class CompressionService:
     # -- sync conveniences --------------------------------------------
     def compress(self, field: np.ndarray, xi: float, *,
                  base: pipeline.BaseName = "szlike",
-                 edit_value_dtype: str = "f4",
-                 entropy: str = "deflate"
+                 edit_value_dtype: str = "auto",
+                 entropy: str = "deflate",
+                 codec: Optional[str] = None
                  ) -> pipeline.CompressedArtifact:
         """Blocking ``submit_compress(...).result()``."""
         return self.submit_compress(
             field, xi, base=base, edit_value_dtype=edit_value_dtype,
-            entropy=entropy).result()
+            entropy=entropy, codec=codec).result()
 
     def decompress(self, art: pipeline.CompressedArtifact) -> np.ndarray:
         """Blocking ``submit_decompress(...).result()``."""

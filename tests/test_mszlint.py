@@ -299,3 +299,32 @@ def test_repo_is_lint_clean():
     from tools.mszlint.engine import lint_paths
     findings = lint_paths(["src", "tools"], DEFAULT)
     assert findings == [], "\n".join(f.render() for f in findings)
+
+
+# -- the preserve layer's lint contract (DESIGN.md §11) --------------------
+
+def test_preserve_module_is_audited_and_clean():
+    """compress/preserve.py sits on the transfer-discipline and
+    int32-range surfaces of the DEFAULT config, and passes them with
+    ZERO suppressions — the codec-agnostic layer must not buy its
+    cleanliness with disable comments."""
+    from pathlib import Path
+    path = Path("src/repro/compress/preserve.py")
+    src = path.read_text()
+    assert lint_source(str(path), src, DEFAULT) == []
+    assert "mszlint: disable" not in src
+    # the config genuinely audits the device-facing encoder
+    assert "encode_edits_checked_dev" in \
+        DEFAULT.transfer_check_functions["*/compress/preserve.py"]
+
+
+def test_preserve_device_encoder_violations_would_be_caught():
+    """The audit has teeth: an implicit d2h inside a function named like
+    the preserve layer's device encoder IS flagged under DEFAULT."""
+    out = lint_source(
+        "src/repro/compress/preserve.py", textwrap.dedent("""
+            def encode_edits_checked_dev(fj, f_hat, idx, val, xi, evd):
+                err = float(f_hat.max())     # implicit d2h
+                return np.asarray(fj)        # implicit d2h
+            """), DEFAULT, rules=[transfer])
+    assert [f.rule for f in out] == [transfer.RULE] * 2

@@ -1,0 +1,177 @@
+"""Property tests for the preservation oracle layer (DESIGN.md §11).
+
+Randomized (hypothesis, skipped cleanly when not installed) and
+deterministic edge-case coverage of the codec-agnostic contract, for
+BOTH registered codecs:
+
+* the fix loop converges within its finite iteration bound and
+  ``verify_preservation`` accepts the pipeline's own output;
+* re-deriving edits for an already-corrected field is a strict fixed
+  point (zero new edits: g is inside the bound and MSS(g) == MSS(f),
+  so no violation exists to fix);
+* fully re-compressing a corrected field preserves the LABELS again
+  (the byte stream may differ — the quantization grid re-anchors on g —
+  but the segmentation is idempotent);
+* the numpy oracle (``apply_edits_ref`` / ``verify_preservation_ref``)
+  agrees bitwise with the production ``apply_edits`` /
+  ``verify_preservation``;
+* plateau/tie, constant, and single-voxel fields go through both codecs.
+"""
+import numpy as np
+import pytest
+
+from _hyp_compat import given, settings, st
+
+from repro.compress import (compress_preserving_mss, decode_edits,
+                            decompress_artifact)
+from repro.core import ref as R
+from repro.core.driver import apply_edits, derive_edits, verify_preservation
+
+CODECS = ("szlike", "zfplike")
+XI = 0.08
+
+
+def _random_field(shape, seed):
+    rng = np.random.default_rng(seed)
+    return rng.normal(size=shape).astype(np.float32)
+
+
+def _plateau_field(shape, seed, levels=3):
+    """Coarsely quantized field: long plateaus and many exact ties, the
+    Simulation-of-Simplicity stress regime."""
+    f = _random_field(shape, seed)
+    return (np.round(f * levels) / levels).astype(np.float32)
+
+
+def _roundtrip(f, xi, codec_name):
+    art = compress_preserving_mss(f, xi, codec=codec_name)
+    g = decompress_artifact(art)
+    return art, g
+
+
+# ---------------------------------------------------------------------------
+# pipeline output properties (randomized)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("codec_name", CODECS)
+@pytest.mark.parametrize("shape", [(7, 8), (4, 5, 4)], ids=["2d", "3d"])
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2 ** 31 - 1))
+def test_verify_accepts_own_output(codec_name, shape, seed):
+    f = _random_field(shape, seed)
+    art, g = _roundtrip(f, XI, codec_name)
+    assert art.fix_iters <= 512       # converged inside the finite bound
+    v = verify_preservation(f, g, XI)
+    assert v["mss_preserved"] and v["bound_ok"], v
+
+
+@pytest.mark.parametrize("codec_name", CODECS)
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2 ** 31 - 1))
+def test_rederivation_is_strict_fixed_point(codec_name, seed):
+    """g already satisfies both constraints against f, so a fresh edit
+    derivation over (f, g) must find NOTHING to fix."""
+    f = _random_field((7, 8), seed)
+    _, g = _roundtrip(f, XI, codec_name)
+    res = derive_edits(f, g, XI)
+    assert res.converged and res.iters <= 1   # one pass, nothing found
+    assert res.edits_idx.size == 0
+    np.testing.assert_array_equal(res.g, g)
+
+
+@pytest.mark.parametrize("codec_name", CODECS)
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(0, 2 ** 31 - 1))
+def test_recompression_is_label_idempotent(codec_name, seed):
+    """Re-compressing a corrected field re-anchors the quantization grid
+    on g (bytes may differ) but the segmentation must survive again —
+    and still equal the ORIGINAL field's oracle labels transitively."""
+    f = _random_field((7, 8), seed)
+    _, g = _roundtrip(f, XI, codec_name)
+    _, g2 = _roundtrip(g, XI, codec_name)
+    v = verify_preservation(g, g2, XI)
+    assert v["mss_preserved"] and v["bound_ok"], v
+    assert R.labels_equal_ref(f, g2)
+
+
+# ---------------------------------------------------------------------------
+# oracle <-> production agreement
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2 ** 31 - 1), n_edits=st.integers(0, 20))
+def test_apply_edits_ref_matches_production(seed, n_edits):
+    rng = np.random.default_rng(seed)
+    f_hat = rng.normal(size=(6, 7)).astype(np.float32)
+    idx = rng.choice(f_hat.size, size=min(n_edits, f_hat.size),
+                     replace=False).astype(np.int64)
+    val = rng.normal(size=idx.size).astype(np.float32) * 0.1
+    g_ref = R.apply_edits_ref(f_hat, idx, val)
+    g_prod = apply_edits(f_hat, idx, val)
+    np.testing.assert_array_equal(g_ref, g_prod)   # bitwise
+
+
+def test_apply_edits_ref_rejects_corrupt_streams():
+    f_hat = np.zeros((4, 4), np.float32)
+    with pytest.raises(ValueError, match="duplicate"):
+        R.apply_edits_ref(f_hat, [3, 3], [1.0, 2.0])
+    with pytest.raises(ValueError, match="out of range"):
+        R.apply_edits_ref(f_hat, [16], [1.0])
+    with pytest.raises(ValueError, match="length mismatch"):
+        R.apply_edits_ref(f_hat, [1, 2], [1.0])
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2 ** 31 - 1),
+       broken=st.booleans())
+def test_verify_preservation_ref_agrees_with_production(seed, broken):
+    rng = np.random.default_rng(seed)
+    f = rng.normal(size=(6, 7)).astype(np.float32)
+    g = (f + rng.uniform(-XI, XI, size=f.shape) * 0.5).astype(np.float32)
+    if broken:
+        g[0, 0] += np.float32(5.0)    # blows both bound and labels
+    v_ref = R.verify_preservation_ref(f, g, XI)
+    v = verify_preservation(f, g, XI)
+    for key in ("bound_ok", "max_labels_ok", "min_labels_ok",
+                "mss_preserved"):
+        assert v_ref[key] == v[key], key
+    assert v_ref["right_labeled_ratio"] == pytest.approx(
+        v["right_labeled_ratio"])
+
+
+# ---------------------------------------------------------------------------
+# degenerate fields: plateaus/ties, constants, single voxels
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("codec_name", CODECS)
+@pytest.mark.parametrize("shape", [(7, 8), (4, 5, 4)], ids=["2d", "3d"])
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(0, 2 ** 31 - 1))
+def test_plateau_tie_fields_preserved(codec_name, shape, seed):
+    f = _plateau_field(shape, seed)
+    _, g = _roundtrip(f, XI, codec_name)
+    assert R.labels_equal_ref(f, g)
+    assert float(np.max(np.abs(f - g))) <= XI * (1 + 1e-6)
+
+
+@pytest.mark.parametrize("codec_name", CODECS)
+def test_constant_field_roundtrip(codec_name):
+    f = np.full((6, 6), 2.25, np.float32)
+    art, g = _roundtrip(f, 1e-3, codec_name)
+    v = verify_preservation(f, g, 1e-3)
+    assert v["mss_preserved"] and v["bound_ok"], v
+    # a constant field has no false criticals to fix: zero edits, one
+    # empty-handed convergence pass
+    idx, _ = decode_edits(art.edit_payload)
+    assert idx.size == 0 and art.fix_iters <= 1
+
+
+@pytest.mark.parametrize("codec_name", CODECS)
+@pytest.mark.parametrize("shape", [(1, 1), (1, 1, 1)], ids=["2d", "3d"])
+def test_single_voxel_field_roundtrip(codec_name, shape):
+    f = np.full(shape, -0.75, np.float32)
+    art, g = _roundtrip(f, 1e-3, codec_name)
+    assert g.shape == shape and g.dtype == np.float32
+    v = verify_preservation(f, g, 1e-3)
+    assert v["mss_preserved"] and v["bound_ok"], v
+    assert R.labels_equal_ref(f, g)

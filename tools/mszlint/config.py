@@ -41,6 +41,12 @@ _TRANSFER_CHECKED = {
         "_device_stage",
         "_pack_batch",
     ),
+    # preserve.py: the codec-agnostic correction layer is host-side by
+    # design except the device twin of the checked edit encoder, which
+    # re-verifies lossy edit dtypes on DEVICE arrays
+    "*/compress/preserve.py": (
+        "encode_edits_checked_dev",
+    ),
     # pack.py: only the device codec entry points — the *_host/_np
     # functions at the bottom are the host mirrors of the codec and
     # convert numpy inputs by contract (first match wins, so this entry
@@ -57,6 +63,7 @@ DEFAULT = Config(
     rule_paths={
         "transfer-discipline": (
             "*/compress/pipeline.py",
+            "*/compress/preserve.py",
             "*/compress/stream.py",
             "*/distributed/*.py",
             "*/kernels/*.py",
